@@ -1,0 +1,76 @@
+"""Shared benchmark scaffolding: datasets, indexes, recall/QPS sweeps."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (IndexConfig, PilotANNIndex, SearchParams,
+                        brute_force_topk, recall_at_k)
+from repro.data import synthetic_vectors
+
+# Default benchmark scale (CPU container).  --full raises these.
+SCALE = {"n": 20000, "d": 64, "nq": 256}
+
+
+@lru_cache(maxsize=4)
+def get_dataset(n: int, d: int, nq: int, seed: int = 0):
+    return synthetic_vectors(n, d, n_queries=nq, seed=seed)
+
+
+_INDEX_CACHE: Dict[Tuple, PilotANNIndex] = {}
+
+
+def get_index(n: int = None, d: int = None, nq: int = None,
+              **cfg_kw) -> Tuple[PilotANNIndex, np.ndarray, np.ndarray]:
+    n = n or SCALE["n"]
+    d = d or SCALE["d"]
+    nq = nq or SCALE["nq"]
+    cfg = IndexConfig(**cfg_kw)
+    key = (n, d, nq, tuple(sorted(cfg.__dict__.items())))
+    if key not in _INDEX_CACHE:
+        ds = get_dataset(n, d, nq)
+        _INDEX_CACHE[key] = PilotANNIndex(cfg, ds.vectors)
+    ds = get_dataset(n, d, nq)
+    return _INDEX_CACHE[key], ds.vectors, ds.queries
+
+
+@lru_cache(maxsize=8)
+def get_gt(n: int, d: int, nq: int, k: int = 10) -> np.ndarray:
+    ds = get_dataset(n, d, nq)
+    return brute_force_topk(ds.vectors, ds.queries, k)
+
+
+def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> Tuple[float, object]:
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    dt = (time.perf_counter() - t0) / iters
+    return dt, out
+
+
+def sweep_to_recall(search_fn: Callable[[SearchParams], Tuple], gt: np.ndarray,
+                    target: float, *, k: int = 10,
+                    efs: Tuple[int, ...] = (16, 24, 32, 48, 64, 96, 128, 192, 256),
+                    base: Optional[SearchParams] = None) -> Optional[Dict]:
+    """Find the smallest ef reaching the target recall; returns the record."""
+    import dataclasses
+    base = base or SearchParams(k=k)
+    for ef in efs:
+        params = dataclasses.replace(base, ef=ef, ef_pilot=ef)
+        ids, _, stats = search_fn(params)
+        rec = recall_at_k(ids, gt, k)
+        if rec >= target:
+            return {"ef": ef, "recall": rec, "stats": stats, "params": params}
+    return None
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,71 @@
+"""Table 2: computational density of distance evaluation.
+
+  brute force        comp mnd, reads md+nd      -> density mn/(m+n)
+  graph traversal    comp mnd, reads md+mnd     -> density n/(1+n)
+  FES (r clusters)   comp mnd/r, reads md+nd    -> density mn/(r(m+n))
+
+We report the analytic densities for the benchmark shape AND the measured
+throughput (distance-computations per second) of each pattern on this host —
+the measured dense/gathered ratio is the empirical stand-in for the paper's
+"GPU does 82x more distance computations than a CPU core" and prices stage ①
+in the modeled hybrid speedup (recall_qps.py)."""
+
+from __future__ import annotations
+
+from functools import lru_cache
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_line, timed
+
+
+def _dense_distances(q, ev):
+    qn = jnp.sum(q * q, 1)[:, None]
+    en = jnp.sum(ev * ev, 1)[None, :]
+    return qn + en - 2.0 * (q @ ev.T)
+
+
+def _gathered_distances(q, table, ids):
+    v = table[ids]                      # (m, R, d) gather
+    qn = jnp.sum(q * q, 1)[:, None]
+    vn = jnp.sum(v * v, -1)
+    dot = jnp.einsum("md,mrd->mr", q, v)
+    return qn + vn - 2.0 * dot
+
+
+@lru_cache(maxsize=1)
+def dense_vs_gathered_ratio(m: int = 1024, n: int = 4096, d: int = 96,
+                            R: int = 32) -> float:
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    ev = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, n, (m, R)).astype(np.int32))
+
+    dense = jax.jit(_dense_distances)
+    gathered = jax.jit(_gathered_distances)
+    t_dense, _ = timed(lambda: jax.block_until_ready(dense(q, ev)), iters=5)
+    t_gath, _ = timed(lambda: jax.block_until_ready(gathered(q, ev, ids)), iters=5)
+    per_dense = (m * n) / t_dense          # distance computations / s
+    per_gath = (m * R) / t_gath
+    return float(per_dense / per_gath)
+
+
+def run(m: int = 1024, n: int = 4096, d: int = 96, r: int = 32,
+        R: int = 32, verbose: bool = True):
+    dens_bf = m * n / (m + n)
+    dens_tr = n / (1 + n)
+    dens_fes = m * n / (r * (m + n))
+    ratio = dense_vs_gathered_ratio(m, n, d, R)
+    rows = [
+        ("density/brute_force", dens_bf, f"analytic mn/(m+n); m={m} n={n}"),
+        ("density/graph_traversal", dens_tr, "analytic n/(1+n)"),
+        ("density/fes", dens_fes, f"analytic mn/(r(m+n)); r={r}"),
+        ("density/measured_dense_over_gathered_x", ratio,
+         "paper GPU-vs-CPU-core=82x (hardware-dependent)"),
+    ]
+    if verbose:
+        for name, val, derived in rows:
+            print(csv_line(name, val, derived))
+    return rows

@@ -1,0 +1,48 @@
+"""Fig. 10: orthogonality to graph construction (paper: HNSW vs NSG — the
+better the baseline graph, the smaller the relative win, but both gain).
+
+We compare two construction settings of our builder that mirror the HNSW/NSG
+trade: alpha=1.2 + keep-pruned (HNSW-flavoured, denser) vs alpha=1.0 strict
+occlusion (NSG-flavoured, sparser/better-routed)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_line, get_dataset, sweep_to_recall
+from repro.core import IndexConfig, PilotANNIndex, brute_force_topk
+
+
+def run(n: int = 8000, d: int = 64, nq: int = 128, target: float = 0.9,
+        verbose: bool = True):
+    ds = get_dataset(n, d, nq)
+    gt = brute_force_topk(ds.vectors, ds.queries, 10)
+    rows = []
+    for label, alpha in (("hnsw_flavour", 1.2), ("nsg_flavour", 1.0)):
+        import repro.core.graph_build as GB
+        orig = GB.occlusion_prune
+        try:
+            if alpha != 1.2:
+                def patched(x, ids, dd, R, *, alpha_=alpha, **kw):
+                    kw.pop("alpha", None)
+                    return orig(x, ids, dd, R, alpha=alpha_,
+                                keep_pruned=kw.get("keep_pruned", True))
+                GB.occlusion_prune = patched
+            idx = PilotANNIndex(IndexConfig(R=16, sample_ratio=0.3,
+                                            svd_ratio=0.5, n_entry=1024,
+                                            build_method="exact"), ds.vectors)
+        finally:
+            GB.occlusion_prune = orig
+        base = sweep_to_recall(lambda p: idx.search_baseline(ds.queries, p),
+                               gt, target)
+        multi = sweep_to_recall(lambda p: idx.search(ds.queries, p), gt, target)
+        if not (base and multi):
+            continue
+        red = base["stats"]["total_cpu_dist"].mean() / \
+            max(multi["stats"]["total_cpu_dist"].mean(), 1)
+        rows.append((f"graph_sensitivity/{label}", red,
+                     f"cpu_calc_reduction_x;recall={multi['recall']:.3f}"))
+    if verbose:
+        for name, val, derived in rows:
+            print(csv_line(name, val, derived))
+    return rows

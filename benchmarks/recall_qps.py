@@ -1,0 +1,72 @@
+"""Fig. 5 + Table 4: recall-throughput curves, baseline vs PilotANN.
+
+Measured: CPU wall-clock QPS of both engines at several ef (this container
+has no accelerator, so both run on the same silicon — the measured ratio
+reflects the algorithmic CPU-work reduction plus batching).  Modeled: the
+paper's hybrid speedup re-derived by pricing stage-① distance computations at
+the measured dense/gathered throughput ratio (the paper's "GPU handles 82x
+more computations per core" argument; our FES/matmul microbenchmarks measure
+the same density gap on this host — see density.py)."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import (SCALE, csv_line, get_gt, get_index, timed)
+from repro.core import SearchParams, recall_at_k
+from benchmarks.density import dense_vs_gathered_ratio
+
+
+def run(target_recall: float = 0.90, verbose: bool = True):
+    index, _, queries = get_index()
+    gt = get_gt(SCALE["n"], SCALE["d"], SCALE["nq"])
+    nq = len(queries)
+
+    rows = []
+    curve_b, curve_m = [], []
+    for ef in (16, 24, 32, 48, 64, 96, 128):
+        pb = SearchParams(k=10, ef=ef, ef_pilot=ef)
+        dt_b, out_b = timed(lambda p=pb: index.search_baseline(queries, p))
+        dt_m, out_m = timed(lambda p=pb: index.search(queries, p))
+        rb = recall_at_k(out_b[0], gt, 10)
+        rm = recall_at_k(out_m[0], gt, 10)
+        curve_b.append((rb, nq / dt_b, out_b[2]["total_cpu_dist"].mean()))
+        curve_m.append((rm, nq / dt_m, out_m[2]["total_cpu_dist"].mean(),
+                        out_m[2]["pilot_dist"].mean()))
+        rows.append((f"recall_qps/ef{ef}", dt_m / nq * 1e6,
+                     f"recall_base={rb:.3f};recall_multi={rm:.3f};"
+                     f"qps_base={nq/dt_b:.0f};qps_multi={nq/dt_m:.0f}"))
+
+    # measured speedup at target recall: the BEST (fastest) operating point
+    # on each curve that meets the target
+    def best_qps(curve, target):
+        ok = [q for r, q, *_ in curve if r >= target]
+        return max(ok) if ok else None
+
+    qb = best_qps(curve_b, target_recall)
+    qm = best_qps(curve_m, target_recall)
+    if qb and qm:
+        rows.append(("recall_qps/measured_speedup_x", qm / qb,
+                     f"cpu-only measured (pilot stage also on CPU!);"
+                     f"recall={target_recall}"))
+
+    # modeled hybrid speedup: pilot calcs priced at the dense/gather density
+    # ratio (stage ① on the accelerator), CPU stages at parity — pick each
+    # engine's CHEAPEST operating point meeting the target
+    ratio = dense_vs_gathered_ratio()
+    cb = min((c for c in curve_b if c[0] >= target_recall),
+             key=lambda c: c[2], default=curve_b[-1])
+    cm = min((c for c in curve_m if c[0] >= target_recall),
+             key=lambda c: c[2] + c[3] / ratio, default=curve_m[-1])
+    modeled = cb[2] / (cm[2] + cm[3] / ratio)
+    rows.append(("recall_qps/modeled_hybrid_speedup_x", modeled,
+                 f"paper=3.9-5.4x;density_ratio={ratio:.0f};"
+                 f"base_cpu={cb[2]:.0f};multi_cpu={cm[2]:.0f};"
+                 f"multi_pilot={cm[3]:.0f}"))
+    if verbose:
+        for name, val, derived in rows:
+            print(csv_line(name, val, derived))
+    return rows

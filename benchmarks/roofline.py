@@ -1,0 +1,96 @@
+"""Roofline table assembly: reads the dry-run JSON artifacts and emits the
+per-(arch x shape) three-term roofline with MODEL_FLOPS ratios.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--json results/dryrun_single_pod.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES, get_config
+
+N_DEVICES = 256  # single-pod roofline table
+HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """MODEL_FLOPS: 6*N*D for train (N active params, D tokens);
+    2*N per token for decode; 2*N*D for prefill."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.mode == "train":
+        return 6.0 * n_active * tokens
+    if shape.mode == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # one token per sequence
+
+
+def load_rows(path: str) -> List[Dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(rows: List[Dict], verbose: bool = True) -> List[Dict]:
+    out = []
+    for r in rows:
+        if "skipped" in r or "error" in r or "roofline" not in r:
+            out.append(r)
+            continue
+        rf = r["roofline"]
+        acct = r["accounting"]["extrapolated"]
+        mf = model_flops(r["arch"], r["shape"]) if not r["arch"].startswith(
+            "pilotann") else None
+        hlo_global = acct["flops_per_dev"] * N_DEVICES
+        rec = {
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "t_compute_ms": rf["t_compute"] * 1e3,
+            "t_memory_ms": rf["t_memory"] * 1e3,
+            "t_collective_ms": rf["t_collective"] * 1e3,
+            "bottleneck": rf["bottleneck"],
+            "roofline_frac": rf["roofline_frac"],
+            "hlo_gflops_per_dev": acct["flops_per_dev"] / 1e9,
+            "model_over_hlo": (mf / hlo_global) if mf and hlo_global else None,
+            "temp_gib": r["memory"]["temp_bytes"] / 2**30,
+        }
+        out.append(rec)
+    if verbose:
+        hdr = (f"{'arch':24s} {'shape':12s} {'Tc(ms)':>9s} {'Tm(ms)':>9s} "
+               f"{'Tx(ms)':>9s} {'bound':>10s} {'frac':>6s} {'MF/HLO':>7s} "
+               f"{'temp GiB':>9s}")
+        print(hdr)
+        for rec in out:
+            if "t_compute_ms" not in rec:
+                note = rec.get("skipped", rec.get("error", ""))[:40]
+                print(f"{rec.get('arch','?'):24s} {rec.get('shape','?'):12s} "
+                      f"-- {note}")
+                continue
+            mh = f"{rec['model_over_hlo']:.2f}" if rec["model_over_hlo"] else "  -"
+            print(f"{rec['arch']:24s} {rec['shape']:12s} "
+                  f"{rec['t_compute_ms']:9.2f} {rec['t_memory_ms']:9.2f} "
+                  f"{rec['t_collective_ms']:9.2f} {rec['bottleneck']:>10s} "
+                  f"{rec['roofline_frac']:6.2f} {mh:>7s} "
+                  f"{rec['temp_gib']:9.2f}")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="results/dryrun_single_pod.json")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    rows = load_rows(args.json)
+    out = table(rows)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=1, default=str)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

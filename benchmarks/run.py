@@ -1,0 +1,41 @@
+"""Benchmark entry point — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (value column unit depends on the
+benchmark: distance-calcs, QPS, MB, or ratio; see each module docstring).
+
+  PYTHONPATH=src python -m benchmarks.run [--only stage_breakdown ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+ALL = ["density", "stage_breakdown", "accel_threshold", "recall_qps",
+       "ablation", "memory_scaling", "fes_benefit", "graph_sensitivity"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None, choices=ALL)
+    args = ap.parse_args(argv)
+    names = args.only or ALL
+
+    import importlib
+    failures = []
+    for name in names:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        print(f"# === {name} ({mod.__doc__.splitlines()[0].strip()}) ===",
+              flush=True)
+        t0 = time.time()
+        try:
+            mod.run()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+            failures.append(name)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,71 @@
+"""Fault-tolerance drill: train, 'lose' the job mid-run, restart from the
+atomic checkpoint, then elastically re-plan the mesh for fewer chips.
+
+  PYTHONPATH=src python examples/elastic_restart.py
+"""
+
+import os
+import shutil
+
+import jax
+import numpy as np
+
+from repro.configs import ShapeSpec, get_config, reduced
+from repro.launch.train import train
+from repro.runtime import ElasticPolicy, HeartbeatMonitor, RestartPolicy
+
+CKPT = "/tmp/repro_elastic_demo"
+
+
+def main():
+    shutil.rmtree(CKPT, ignore_errors=True)
+    shape = ShapeSpec("demo", seq_len=32, global_batch=4, mode="train")
+
+    import repro.launch.train as T
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    orig = T.get_config
+    T.get_config = lambda a: cfg
+    try:
+        # --- phase 1: train 8 steps, checkpoint every 3 ---
+        print("[demo] phase 1: training to step 8 (checkpoint every 3)")
+        train("tinyllama-1.1b", steps=8, ckpt_dir=CKPT, save_interval=3,
+              shape=shape, log_every=4)
+
+        # --- simulated failure: heartbeat timeout ---
+        clock = [0.0]
+        mon = HeartbeatMonitor(["host0", "host1"], timeout_s=30,
+                               clock=lambda: clock[0])
+        clock[0] = 25.0
+        mon.beat("host0")
+        clock[0] = 45.0
+        dead = mon.dead_hosts()
+        print(f"[demo] heartbeat monitor declares dead: {dead}")
+        assert dead == ["host1"]
+
+        # --- restart policy: bounded backoff, replay from checkpoint ---
+        rp = RestartPolicy()
+        backoff = rp.next_backoff()
+        print(f"[demo] restart scheduled after {backoff:.0f}s backoff")
+
+        # --- elastic re-plan: 512 -> 496 chips (one host of 16 lost) ---
+        ep = ElasticPolicy(model_degree=16)
+        new_mesh = ep.propose_mesh(496)
+        new_gb = ep.global_batch_for(256, 16, new_mesh[0][0])
+        print(f"[demo] elastic re-mesh: {new_mesh[0]} axes={new_mesh[1]}, "
+              f"global_batch {256} -> {new_gb}")
+
+        # --- phase 2: restart resumes from the atomic checkpoint ---
+        print("[demo] phase 2: restarting (resumes from latest checkpoint)")
+        _, hist = train("tinyllama-1.1b", steps=12, ckpt_dir=CKPT,
+                        save_interval=3, shape=shape, log_every=4)
+        first_resumed_step = hist[0][0]
+        print(f"[demo] resumed at step {first_resumed_step} "
+              f"(> 6 proves checkpoint restore, not cold start)")
+        assert first_resumed_step > 6
+        print("[demo] OK — checkpoint/restart + elastic planning verified")
+    finally:
+        T.get_config = orig
+
+
+if __name__ == "__main__":
+    main()

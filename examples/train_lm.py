@@ -1,0 +1,65 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+checkpoint/restart, using the same step factories the dry-run lowers on the
+production mesh.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--arch smollm-360m]
+
+By default this trains a width-reduced smollm-family config sized ~100M
+params on the synthetic token pipeline, checkpointing every 50 steps; kill
+and re-run to watch restart-from-checkpoint.
+"""
+
+import argparse
+import dataclasses
+
+from repro.configs import ShapeSpec, get_config
+from repro.launch.train import train
+
+
+def hundred_m_config(arch: str):
+    cfg = get_config(arch)
+    # ~100M params: shrink layers/width, keep the family structure
+    return dataclasses.replace(
+        cfg, n_layers=6, d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+        d_ff=1536, vocab_size=16384, attn_chunk=256, remat=False,
+        fsdp=False, microbatches=1,
+        **(dict(n_encoder_layers=2) if cfg.n_encoder_layers else {}))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = hundred_m_config(args.arch)
+    n_params = None
+    import jax
+    from repro.models import init_params
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+    print(f"[example] {args.arch} reduced to {n_params/1e6:.0f}M params")
+
+    shape = ShapeSpec("train_example", seq_len=256, global_batch=8, mode="train")
+
+    import repro.launch.train as T
+    import repro.configs as C
+    orig = C.get_config
+    try:
+        C.get_config = lambda a: cfg if a == args.arch else orig(a)
+        T.get_config = C.get_config
+        params, history = train(args.arch, steps=args.steps,
+                                ckpt_dir=args.ckpt_dir, save_interval=50,
+                                shape=shape, log_every=20)
+    finally:
+        C.get_config = orig
+        T.get_config = orig
+    first, last = history[0][1], history[-1][1]
+    print(f"[example] loss {first:.3f} -> {last:.3f} over {args.steps} steps")
+    assert last < first, "loss should decrease"
+
+
+if __name__ == "__main__":
+    import numpy as np  # noqa: E402  (used in main)
+    main()

@@ -1,0 +1,113 @@
+"""§Perf hillclimb driver: lower a cell under a named variant and print the
+roofline deltas vs the recorded baseline.
+
+  PYTHONPATH=src:. python scripts/perf_iter.py --arch tinyllama-1.1b \
+      --shape train_4k --variant no_sp
+  PYTHONPATH=src:. python scripts/perf_iter.py --anns --gather shardwise
+
+Variants (LM cells):
+  baseline    — exactly the sweep configuration
+  no_sp       — disable Megatron sequence parallelism (residual stays
+                batch-sharded; removes per-layer seq all-gather/reduce-
+                scatter at the cost of bigger remat carries)
+  kv_rep      — replicate KV heads instead of pad-sharding them over 'model'
+                (GQA archs with n_kv < 16: avoids the 16/n_kv x padded
+                KV compute + resharding)
+  no_sp+kv_rep
+"""
+
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "REPRO_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+VARIANTS = {
+    "baseline": {},
+    "no_sp": {"seq_parallel": False},
+    "kv_rep": {"kv_replicated": True},
+    "no_sp+kv_rep": {"seq_parallel": False, "kv_replicated": True},
+}
+
+
+def run_lm(arch, shape, variant):
+    import dataclasses
+    from repro.launch import dryrun as D
+    from repro.configs import get_config
+    mesh = D.make_production_mesh()
+    cfg = get_config(arch)
+    kw = VARIANTS[variant]
+    p = D._layer_period(cfg)
+    acct = {}
+    import time
+    t0 = time.time()
+    full = D.lower_cell(arch, shape, mesh, **kw).compile()
+    full_a = D.analyze_compiled(full)
+    for L in (p, 2 * p):
+        lw = D.lower_cell(arch, shape, mesh, n_layers=L, unroll=True, **kw)
+        acct[L] = D.analyze_compiled(lw.compile())
+    extrap = {}
+    for key in ("flops_per_dev", "bytes_per_dev", "coll_bytes_per_dev"):
+        per = (acct[2 * p][key] - acct[p][key]) / p
+        extrap[key] = acct[p][key] + per * (cfg.n_layers - p)
+    r = D.roofline_terms(extrap)
+    out = {"arch": arch, "shape": shape, "variant": variant,
+           "roofline": r, "extrapolated": extrap,
+           "temp_gib": full_a["temp_bytes"] / 2**30,
+           "wall_s": round(time.time() - t0, 1)}
+    print(json.dumps(out, indent=1, default=str))
+    return out
+
+
+def run_anns(gather, dataset="deep"):
+    from repro.launch import dryrun as D
+    from repro.core.distributed import (PodIndexSpec, make_pod_search_step,
+                                        pod_array_specs, pod_shardings)
+    from repro.core.multistage import SearchParams
+    import jax
+    from jax.sharding import PartitionSpec as P
+    dims = {"deep": (96, 48), "t2i": (200, 128), "wiki": (768, 256),
+            "laion": (768, 160)}
+    d, dp = dims[dataset]
+    import os as _os
+    bb = int(_os.environ.get("REPRO_BLOOM_BITS", "16384"))
+    vdt = _os.environ.get("REPRO_VEC_DTYPE", "float32")
+    spec = PodIndexSpec(d=d, d_primary=dp, bloom_bits=bb, vec_dtype=vdt)
+    mesh = D.make_production_mesh()
+    if gather == "shardwise":
+        corpus_axes, query_axes, qspec = ("model",), ("data",), P("data", None)
+    else:
+        corpus_axes, query_axes, qspec = None, None, None
+    arrays = pod_array_specs(spec, mesh)
+    shards = pod_shardings(spec, mesh, corpus_axes=corpus_axes,
+                           query_axes=query_axes)
+    fn = make_pod_search_step(spec, gather_mode=gather, mesh=mesh,
+                              corpus_axes=corpus_axes, query_spec=qspec)
+    order = list(arrays.keys())
+    with mesh:
+        jfn = jax.jit(fn, in_shardings=tuple(shards[k] for k in order))
+        compiled = jfn.lower(*[arrays[k] for k in order]).compile()
+    acct = D.analyze_compiled(compiled)
+    r = D.roofline_terms(acct)
+    out = {"arch": f"pilotann-{dataset}", "variant": gather, "roofline": r,
+           "acct": {k: acct[k] for k in ("flops_per_dev", "bytes_per_dev",
+                                         "coll_bytes_per_dev", "temp_bytes")},
+           "coll_breakdown": acct["coll_breakdown"]}
+    print(json.dumps(out, indent=1, default=str))
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--variant", default="baseline", choices=list(VARIANTS))
+    ap.add_argument("--anns", action="store_true")
+    ap.add_argument("--gather", default="naive")
+    ap.add_argument("--dataset", default="deep")
+    a = ap.parse_args()
+    if a.anns:
+        run_anns(a.gather, a.dataset)
+    else:
+        run_lm(a.arch, a.shape, a.variant)

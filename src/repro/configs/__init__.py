@@ -1,0 +1,6 @@
+from repro.configs.base import (ARCH_IDS, SHAPES, ModelConfig, ShapeSpec,
+                                all_configs, cell_is_runnable, get_config,
+                                reduced)
+
+__all__ = ["ARCH_IDS", "SHAPES", "ModelConfig", "ShapeSpec", "all_configs",
+           "cell_is_runnable", "get_config", "reduced"]

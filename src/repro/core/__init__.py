@@ -1,0 +1,6 @@
+from repro.core.engine import (IndexConfig, PilotANNIndex, brute_force_topk,
+                               recall_at_k)
+from repro.core.multistage import SearchParams
+
+__all__ = ["IndexConfig", "PilotANNIndex", "SearchParams", "brute_force_topk",
+           "recall_at_k"]

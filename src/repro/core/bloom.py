@@ -1,0 +1,88 @@
+"""Batched bloom-filter visited tables (PilotANN §4.3).
+
+One filter per in-flight query — the JAX/TPU analogue of the paper's CUDA
+shared-memory filters.  Two multiply-shift hashes into ``n_bits`` buckets;
+false positives only make the search *skip* a node (never recompute), and the
+multi-stage pipeline corrects any quality impact downstream, exactly as in
+the paper.  No false negatives.
+
+The reference implementation stores the bitset as (B, n_bits) bool — scatter
+friendly on XLA:CPU; the Pallas/TPU serving kernel packs it 32x into VMEM
+words (see kernels/), which is a layout detail, not a semantic one.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# multiply-shift hash constants (odd, well-mixed)
+_H1 = jnp.uint32(0x9E3779B1)
+_H2 = jnp.uint32(0x85EBCA77)
+_H3 = jnp.uint32(0xC2B2AE3D)
+_H4 = jnp.uint32(0x27D4EB2F)
+
+
+def hashes(ids: jax.Array, n_bits: int) -> Tuple[jax.Array, jax.Array]:
+    x = ids.astype(jnp.uint32)
+    h1 = (x * _H1) ^ ((x * _H2) >> 15)
+    h2 = (x * _H3) ^ (x >> 13) ^ (_H4 * x)
+    nb = jnp.uint32(n_bits)
+    return (h1 % nb).astype(jnp.int32), (h2 % nb).astype(jnp.int32)
+
+
+def bloom_init(batch: int, n_bits: int) -> jax.Array:
+    return jnp.zeros((batch, n_bits), bool)
+
+
+def bloom_test(filt: jax.Array, ids: jax.Array) -> jax.Array:
+    """filt: (B, n_bits); ids: (B, R) -> (B, R) bool (maybe-visited)."""
+    h1, h2 = hashes(ids, filt.shape[-1])
+    t1 = jnp.take_along_axis(filt, h1, axis=1)
+    t2 = jnp.take_along_axis(filt, h2, axis=1)
+    return t1 & t2
+
+
+def bloom_insert(filt: jax.Array, ids: jax.Array, mask: jax.Array) -> jax.Array:
+    """Insert ids where mask; returns updated filters."""
+    B = filt.shape[0]
+    h1, h2 = hashes(ids, filt.shape[-1])
+    rows = jnp.broadcast_to(jnp.arange(B)[:, None], ids.shape)
+    filt = filt.at[rows, h1].max(jnp.where(mask, True, False))
+    filt = filt.at[rows, h2].max(jnp.where(mask, True, False))
+    return filt
+
+
+def bloom_insert_dense(filt: jax.Array, ids: jax.Array,
+                       mask: jax.Array) -> jax.Array:
+    """Scatter-free insert: one-hot compare against an iota of bit indexes,
+    OR-reduced over the R axis.  Elementwise + reduction only, so GSPMD keeps
+    the (B, n_bits) filter sharded on B — the pod engine uses this (the
+    scatter form partitions as replicated-operand + all-reduce(OR), gigabytes
+    per expansion round).  Cost: an (B, R, n_bits) transient."""
+    n_bits = filt.shape[-1]
+    h1, h2 = hashes(ids, n_bits)
+    bits = jax.lax.broadcasted_iota(jnp.int32, (1, 1, n_bits), 2)
+    hit = ((h1[:, :, None] == bits) | (h2[:, :, None] == bits)) & \
+        mask[:, :, None]
+    return filt | jnp.any(hit, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Exact visited bitmap (no false positives — for tests / small corpora)
+# ---------------------------------------------------------------------------
+
+def exact_init(batch: int, n: int) -> jax.Array:
+    return jnp.zeros((batch, n + 1), bool)  # +1: sentinel id slot
+
+
+def exact_test(filt: jax.Array, ids: jax.Array) -> jax.Array:
+    return jnp.take_along_axis(filt, ids.astype(jnp.int32), axis=1)
+
+
+def exact_insert(filt: jax.Array, ids: jax.Array, mask: jax.Array) -> jax.Array:
+    B = filt.shape[0]
+    rows = jnp.broadcast_to(jnp.arange(B)[:, None], ids.shape)
+    return filt.at[rows, ids.astype(jnp.int32)].max(jnp.where(mask, True, False))

@@ -1,0 +1,280 @@
+"""Pod-scale PilotANN: the distributed search step for the production mesh.
+
+Mapping (DESIGN.md §2): every chip holds a replica of the *pilot index*
+(subgraph CSR + SVD-primary vectors + FES clusters) sized to per-chip HBM;
+the *full index* (graph + full-d vectors) is sharded row-wise across the
+mesh.  Stage ① runs embarrassingly parallel — queries sharded over every
+axis, zero collectives.  Stages ②③ traverse the sharded full index, where
+each neighbour gather crosses the corpus sharding; the pilot stage exists to
+bound exactly that traffic (the paper's PCIe argument, re-targeted at ICI).
+
+Two gather schemes for the sharded stages:
+  * ``naive``      — plain jnp.take on the row-sharded table; GSPMD lowers it
+                     (typically local-masked-gather + all-reduce of the
+                     gathered (B, R, d) block).  Paper-faithful baseline.
+  * ``shardwise``  — beyond-paper: compute distances *shard-side* and
+                     all-reduce only the (B, R) scalars (d× less traffic);
+                     implemented by constraining the gathered block to stay
+                     corpus-sharded so XLA reduces post-contraction.
+The §Perf hillclimb measures both from the lowered HLO.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import fes as F
+from repro.core import traversal as T
+from repro.core.multistage import SearchParams
+
+
+@dataclass(frozen=True)
+class PodIndexSpec:
+    """Production-scale index geometry (dry-run sizing)."""
+    n: int = 100_000_000          # corpus size (DEEP/T2I/WIKI/LAION: 1e8)
+    d: int = 96                   # vector dim (DEEP 96 ... LAION 768)
+    d_primary: int = 48
+    R: int = 32                   # graph degree
+    n_pilot: int = 2_000_000      # replicated pilot subgraph nodes (zero-outdeg CSR rows are compacted here)
+    fes_r: int = 32
+    fes_capacity: int = 2048
+    query_batch: int = 4096       # global in-flight query batch
+    ef_pilot: int = 64
+    ef: int = 64
+    pilot_iters: int = 48         # fixed rounds (serving SLA style)
+    refine_iters: int = 2
+    final_iters: int = 24
+    bloom_bits: int = 16384
+    vec_dtype: str = "float32"   # corpus vector storage (bf16 halves memory
+                                 # and naive-gather wire bytes; fp32 accum)
+
+    def pilot_bytes(self) -> int:
+        return (self.n_pilot * self.d_primary * 4
+                + self.n_pilot * self.R * 4
+                + self.fes_r * self.fes_capacity * self.d_primary * 4)
+
+    def full_bytes(self) -> int:
+        return self.n * self.d * 4 + self.n * self.R * 4
+
+
+def pod_array_specs(spec: PodIndexSpec, mesh) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every index array + queries."""
+    n_dev = int(np.prod(mesh.devices.shape))
+    Np = _round_to(spec.n + 1, n_dev)
+    npl = _round_to(spec.n_pilot + 1, 1)
+    return {
+        # replicated pilot index
+        "pilot_neighbors": jax.ShapeDtypeStruct((npl, spec.R), jnp.int32),
+        "pilot_vecs": jax.ShapeDtypeStruct((npl, spec.d_primary), jnp.float32),
+        "pilot_to_full": jax.ShapeDtypeStruct((npl,), jnp.int32),
+        "fes_centroids": jax.ShapeDtypeStruct((spec.fes_r, spec.d_primary), jnp.float32),
+        "fes_entries": jax.ShapeDtypeStruct((spec.fes_r, spec.fes_capacity,
+                                             spec.d_primary), jnp.float32),
+        "fes_entry_ids": jax.ShapeDtypeStruct((spec.fes_r, spec.fes_capacity), jnp.int32),
+        "fes_valid": jax.ShapeDtypeStruct((spec.fes_r, spec.fes_capacity), bool),
+        # sharded full index
+        "full_neighbors": jax.ShapeDtypeStruct((Np, spec.R), jnp.int32),
+        "full_vecs": jax.ShapeDtypeStruct((Np, spec.d),
+                                          getattr(jnp, spec.vec_dtype)),
+        # queries (rotated, full-d)
+        "queries": jax.ShapeDtypeStruct((spec.query_batch, spec.d), jnp.float32),
+    }
+
+
+def pod_shardings(spec: PodIndexSpec, mesh, *, corpus_axes=None,
+                  query_axes=None) -> Dict[str, NamedSharding]:
+    """Sharding assignment per DESIGN.md: pilot replicated, corpus row-sharded
+    over ``corpus_axes`` (default: every mesh axis), stage-②③ queries sharded
+    over the remaining axes."""
+    axes = mesh.axis_names
+    corpus_axes = corpus_axes or axes
+    query_axes = query_axes or tuple(a for a in axes if a not in corpus_axes) \
+        or axes  # if corpus uses all axes, queries shard over all too
+    NS = lambda *s: NamedSharding(mesh, P(*s))
+    rep = NS()
+    return {
+        "pilot_neighbors": rep,
+        "pilot_vecs": rep,
+        "pilot_to_full": rep,
+        "fes_centroids": rep,
+        "fes_entries": rep,
+        "fes_entry_ids": rep,
+        "fes_valid": rep,
+        "full_neighbors": NS(corpus_axes),
+        "full_vecs": NS(corpus_axes),
+        "queries": NS(query_axes),
+    }
+
+
+def make_pod_search_step(spec: PodIndexSpec, params: Optional[SearchParams] = None,
+                         *, gather_mode: str = "naive", unroll: bool = True,
+                         mesh=None, corpus_axes=None, query_spec=None):
+    """Returns search_step(arrays...) -> (ids, dists) suitable for
+    jit(in_shardings=pod_shardings(...)).lower(**pod_array_specs(...)).
+
+    gather_mode='shardwise' needs (mesh, corpus_axes, query_spec) and uses
+    shard_map hooks: distances/neighbour-rows are produced corpus-shard-side
+    and psum'd — (B, E) scalars on the wire instead of (B, E, d) vectors."""
+    params = params or SearchParams(ef=spec.ef, ef_pilot=spec.ef_pilot,
+                                    bloom_bits=spec.bloom_bits)
+
+    def search_step(pilot_neighbors, pilot_vecs, pilot_to_full,
+                    fes_centroids, fes_entries, fes_entry_ids, fes_valid,
+                    full_neighbors, full_vecs, queries):
+        Bq = queries.shape[0]
+        n_pilot = pilot_vecs.shape[0] - 1
+        Np = full_vecs.shape[0]
+        n = Np - 1
+        dp = pilot_vecs.shape[1]
+        qp = queries[:, :dp]
+
+        nbr_fn = dist_fn = None
+        if gather_mode == "shardwise":
+            nbr_for, dist_for = make_shardwise_fns(
+                mesh, corpus_axes, query_spec, Np, spec.R)
+            nbr_fn = nbr_for(full_neighbors)
+            dist_fn = dist_for(full_vecs)
+            # pilot stage is embarrassingly parallel: spread the query batch
+            # over EVERY mesh axis there (it re-shards to query_spec at the
+            # stage-②③ shard_map boundary automatically)
+            from jax.sharding import PartitionSpec as P
+            qp = jax.lax.with_sharding_constraint(
+                qp, P(tuple(mesh.axis_names), None))
+
+        # ---- stage 0: FES (replicated data; local) ----
+        entry_local, _ = F.fes_select_ref(qp, fes_centroids, fes_entries,
+                                          fes_entry_ids, fes_valid,
+                                          params.fes_L)
+
+        # ---- stage ①: pilot traversal (replicated data; local) ----
+        spec1 = T.TraversalSpec(
+            ef=params.ef_pilot, visited_mode="bloom",
+            bloom_bits=params.bloom_bits,
+            dense_visited_update=gather_mode == "shardwise",
+            state_spec=(P(tuple(mesh.axis_names), None)
+                        if gather_mode == "shardwise" else None))
+        st1 = T.greedy_search(spec1, qp, pilot_neighbors, pilot_vecs, n_pilot,
+                              entry_local, iters=spec.pilot_iters, unroll=unroll)
+        # map pilot-compact ids to full-corpus ids
+        cand_full = pilot_to_full[jnp.where(st1.cand_id < n_pilot,
+                                            st1.cand_id, n_pilot)]
+        cand_full = jnp.where(st1.cand_id < n_pilot, cand_full, n)
+
+        # ---- stage ②: residual refinement (sharded scoring begins) ----
+        if dist_fn is None:
+            gathered = _gather_rows(full_vecs, cand_full, gather_mode)
+            d_full = T.sq_dists(queries, gathered)
+        else:
+            d_full = dist_fn(queries, cand_full)
+        d_full = jnp.where(cand_full < n, d_full, jnp.inf)
+
+        # ---- stage ③: bounded traversal on the sharded full index ----
+        spec3 = T.TraversalSpec(ef=params.ef, visited_mode="bloom",
+                                bloom_bits=params.bloom_bits,
+                                dense_visited_update=gather_mode == "shardwise",
+                                state_spec=(jax.sharding.PartitionSpec(
+                                    query_spec[0], None)
+                                    if gather_mode == "shardwise" and
+                                    query_spec is not None else None))
+        st3 = T.greedy_search(spec3, queries, full_neighbors, full_vecs, n,
+                              entry_ids=jnp.full((Bq, 1), n, jnp.int32),
+                              iters=spec.refine_iters + spec.final_iters,
+                              unroll=unroll,
+                              extra_id=cand_full, extra_d=d_full,
+                              nbr_fn=nbr_fn, dist_fn=dist_fn)
+        return T.topk_from_state(st3, params.k)
+
+    return search_step
+
+
+def _gather_rows(table: jax.Array, ids: jax.Array, mode: str) -> jax.Array:
+    """Gather (B, E) rows from the row-sharded (N, d) table -> (B, E, d)."""
+    return table[ids]
+
+
+# ---------------------------------------------------------------------------
+# Shardwise primitives (§Perf beyond-paper optimization)
+#
+# The naive sharded stages let GSPMD move gathered VECTORS (B, E, d) across
+# the ICI.  Shard-side evaluation moves only what the traversal actually
+# consumes: each corpus shard scores the ids it owns against the (replicated-
+# over-corpus-axes) queries and contributes zeros elsewhere; one psum of
+# (B, E) fp32 scalars replaces the (B, E, d) vector traffic — a d/1 wire-byte
+# reduction (d=96: ~96x; d=768: ~768x) on every expansion round.  The same
+# owned-rows + psum trick fetches neighbour rows ((B, R) int32).
+# ---------------------------------------------------------------------------
+
+def make_shardwise_fns(mesh, corpus_axes, query_spec, N: int, R: int):
+    """Build (nbr_fn_factory, dist_fn_factory) for shard_map execution.
+
+    Arrays are closed over per call:  the returned builders take the sharded
+    tables and produce hooks with signature matching traversal.expansion_round.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    n_shards = int(np.prod([mesh.shape[a] for a in corpus_axes]))
+    rows_per = N // n_shards
+    caxes = corpus_axes if len(corpus_axes) > 1 else corpus_axes[0]
+
+    def _shard_index():
+        idx = 0
+        for a in corpus_axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        return idx
+
+    from jax.sharding import PartitionSpec
+    qb = query_spec[0] if query_spec is not None and len(query_spec) else None
+    spec1 = PartitionSpec(qb)          # (B,)
+    spec2 = PartitionSpec(qb, None)    # (B, E) / (B, d)
+
+    def nbr_fn_for(neighbor_table):
+        def local(tbl, u):
+            sid = _shard_index()
+            lo = sid * rows_per
+            loc = u.astype(jnp.int32) - lo
+            owned = (loc >= 0) & (loc < tbl.shape[0])
+            rows = tbl[jnp.clip(loc, 0, tbl.shape[0] - 1)]     # (B, R) local
+            rows = jnp.where(owned[:, None], rows, 0)
+            return jax.lax.psum(rows, caxes)
+
+        sm = shard_map(local, mesh=mesh,
+                       in_specs=(P(corpus_axes, None), spec1),
+                       out_specs=spec2,
+                       check_rep=False)
+        return lambda u: sm(neighbor_table, u)
+
+    def dist_fn_for(vec_table):
+        def local(tbl, q, ids):
+            sid = _shard_index()
+            lo = sid * rows_per
+            loc = ids.astype(jnp.int32) - lo
+            owned = (loc >= 0) & (loc < tbl.shape[0])
+            v = tbl[jnp.clip(loc, 0, tbl.shape[0] - 1)]        # (B, E, d)
+            qf = q.astype(jnp.float32)
+            vf = v.astype(jnp.float32)
+            qn = jnp.sum(qf * qf, axis=-1)[:, None]
+            vn = jnp.sum(vf * vf, axis=-1)
+            dot = jnp.einsum("bd,bed->be", qf, vf)
+            d = jnp.maximum(qn + vn - 2.0 * dot, 0.0)
+            d = jnp.where(owned, d, 0.0)
+            return jax.lax.psum(d, caxes)                      # (B, E) scalars
+
+        sm = shard_map(local, mesh=mesh,
+                       in_specs=(P(corpus_axes, None), spec2, spec2),
+                       out_specs=spec2,
+                       check_rep=False)
+        return lambda q, ids, fresh=None: sm(vec_table, q, ids)
+
+    return nbr_fn_for, dist_fn_for
+
+
+def _round_to(x: int, k: int) -> int:
+    return -(-x // k) * k

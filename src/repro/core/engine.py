@@ -1,0 +1,162 @@
+"""Single-host PilotANN engine: index build + jit'd search entry points.
+
+Build (offline, numpy): SVD rotation → full graph → sampled subgraph rebuilt
+with the same construction algorithm (paper §4.1/§4.3) → FES clusters.
+Search (online, JAX): multistage_search / baseline_search jit'd per
+(batch, params) signature.  The distributed pod engine (core/distributed.py)
+consumes the same index artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import csr, fes, graph_build, multistage, svd
+from repro.core.multistage import SearchParams
+
+
+@dataclass
+class IndexConfig:
+    R: int = 32                  # graph degree bound
+    sample_ratio: float = 0.25   # subgraph node ratio (paper Table 3)
+    svd_ratio: float = 0.5       # primary-dims ratio (paper Table 3)
+    n_entry: int = 8192          # FES entry pool size
+    fes_clusters: int = 32       # r (warp-width in paper; tile count here)
+    coarse_ratio: float = 1.0 / 64  # entry-layer size (HNSW-hierarchy analogue)
+    build_method: str = "auto"
+    seed: int = 0
+
+
+class PilotANNIndex:
+    """Holds numpy artifacts + device arrays for the search stages."""
+
+    def __init__(self, cfg: IndexConfig, vectors: np.ndarray):
+        self.cfg = cfg
+        self.n, self.d = vectors.shape
+        n, d = self.n, self.d
+
+        # --- SVD rotation & split (§4.1) ---
+        self.reducer = svd.svd_fit(vectors, cfg.svd_ratio, seed=cfg.seed)
+        rot = self.reducer.rotate(vectors)                     # (n, d)
+        dp = self.reducer.d_primary
+
+        # --- full graph ---
+        self.full_graph = graph_build.build_graph(
+            rot, cfg.R, method=cfg.build_method, seed=cfg.seed)
+
+        # --- sampled subgraph, rebuilt with the same construction algo ---
+        keep = csr.subgraph_sample(self.full_graph, cfg.sample_ratio,
+                                   seed=cfg.seed)
+        keep_ids = np.flatnonzero(keep)
+        if len(keep_ids) > 2:
+            sub_compact = graph_build.build_graph(
+                rot[keep_ids], cfg.R, method=cfg.build_method, seed=cfg.seed + 1)
+            # remap compacted ids -> original ids; zero-out-degree CSR (§4.3)
+            nb = sub_compact.neighbors
+            remapped = np.where(nb < len(keep_ids),
+                                keep_ids[np.clip(nb, 0, len(keep_ids) - 1)], n)
+            sub_nb = np.full((n, cfg.R), n, np.int32)
+            sub_nb[keep_ids] = remapped
+            self.sub_graph = csr.Graph(sub_nb.astype(np.int32), n)
+        else:
+            self.sub_graph = csr.zero_outdegree_subgraph(self.full_graph, keep)
+        self.keep = keep
+        self.keep_ids = keep_ids
+
+        # --- FES (entries sampled from subgraph members; primary dims) ---
+        self.fes_index = fes.build_fes(rot[:, :dp], keep_ids,
+                                       r=cfg.fes_clusters,
+                                       n_entry=cfg.n_entry, seed=cfg.seed)
+
+        # --- coarse entry layer (HNSW-hierarchy analogue for the baseline
+        #     and the "- FES" ablation: greedy descent over a small sampled
+        #     layer provides entry points, costed like HNSW's upper layers) ---
+        rng = np.random.default_rng(cfg.seed + 7)
+        m = min(n, max(64, int(n * cfg.coarse_ratio)))
+        coarse_ids = np.sort(rng.choice(n, size=m, replace=False))
+        coarse_graph = graph_build.build_graph(rot[coarse_ids],
+                                               min(cfg.R, 16), method="auto",
+                                               seed=cfg.seed + 7)
+        self.coarse_ids = coarse_ids
+        self.coarse_graph = coarse_graph
+
+        # --- device arrays ---
+        zrow = lambda a: np.concatenate([a, np.zeros((1, a.shape[1]), a.dtype)], 0)
+        self.arrays: Dict[str, jax.Array] = {
+            "full_neighbors": jnp.asarray(self.full_graph.padded_table()),
+            "sub_neighbors": jnp.asarray(self.sub_graph.padded_table()),
+            "rot_vecs": jnp.asarray(zrow(rot)),
+            "primary": jnp.asarray(zrow(rot[:, :dp])),
+            "residual": jnp.asarray(zrow(rot[:, dp:])),
+            "fes_centroids": jnp.asarray(self.fes_index.centroids),
+            "fes_entries": jnp.asarray(self.fes_index.entries),
+            "fes_entry_ids": jnp.asarray(self.fes_index.entry_ids),
+            "fes_valid": jnp.asarray(self.fes_index.valid),
+            "default_entries": jnp.asarray(
+                np.array([graph_build.medoid(rot)], np.int32)),
+            "coarse_neighbors": jnp.asarray(coarse_graph.padded_table()),
+            "coarse_vecs": jnp.asarray(zrow(rot[coarse_ids])),
+            "coarse_ids": jnp.asarray(
+                np.concatenate([coarse_ids, [n]]).astype(np.int32)),
+            "coarse_entry": jnp.asarray(
+                np.array([graph_build.medoid(rot[coarse_ids])], np.int32)),
+        }
+        self._search_fns: Dict = {}
+
+    # ------------------------------------------------------------------
+    def rotate_queries(self, queries: np.ndarray) -> jax.Array:
+        return jnp.asarray(self.reducer.rotate(queries))
+
+    def _get_fn(self, params: SearchParams, baseline: bool):
+        key = (dataclasses.astuple(params), baseline)
+        if key not in self._search_fns:
+            fn = multistage.baseline_search if baseline else multistage.multistage_search
+            self._search_fns[key] = jax.jit(partial(fn, params=params))
+        return self._search_fns[key]
+
+    def search(self, queries: np.ndarray, params: SearchParams,
+               *, rotated: bool = False) -> Tuple[np.ndarray, np.ndarray, Dict]:
+        q = jnp.asarray(queries) if rotated else self.rotate_queries(queries)
+        ids, dists, stats = self._get_fn(params, False)(self.arrays, queries=q)
+        return np.asarray(ids), np.asarray(dists), jax.tree.map(np.asarray, stats)
+
+    def search_baseline(self, queries: np.ndarray, params: SearchParams,
+                        *, rotated: bool = False
+                        ) -> Tuple[np.ndarray, np.ndarray, Dict]:
+        q = jnp.asarray(queries) if rotated else self.rotate_queries(queries)
+        ids, dists, stats = self._get_fn(params, True)(self.arrays, queries=q)
+        return np.asarray(ids), np.asarray(dists), jax.tree.map(np.asarray, stats)
+
+    # ------------------------------------------------------------------
+    def memory_report(self) -> Dict[str, int]:
+        """Bytes by residence class — the paper's Table 3 accounting."""
+        dp = self.reducer.d_primary
+        pilot = (self.arrays["sub_neighbors"].size * 4 +
+                 self.arrays["primary"].size * 4 +
+                 self.arrays["fes_entries"].size * 4)
+        full = (self.arrays["full_neighbors"].size * 4 +
+                self.arrays["rot_vecs"].size * 4 +
+                self.arrays["residual"].size * 4)
+        return {"pilot_bytes": int(pilot), "full_bytes": int(full),
+                "ratio": float(full / max(pilot, 1))}
+
+
+def recall_at_k(ids: np.ndarray, gt: np.ndarray, k: int) -> float:
+    """recall@k = |retrieved_k ∩ groundtruth_k| / k, averaged over queries."""
+    hits = 0
+    for row, g in zip(ids[:, :k], gt[:, :k]):
+        hits += len(set(row.tolist()) & set(g.tolist()))
+    return hits / (len(ids) * k)
+
+
+def brute_force_topk(vectors: np.ndarray, queries: np.ndarray, k: int
+                     ) -> np.ndarray:
+    ids, _ = graph_build.brute_knn(vectors, k, queries=queries)
+    return ids

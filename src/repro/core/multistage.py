@@ -1,0 +1,180 @@
+"""Multi-stage ANNS processing (PilotANN §4): the paper's core contribution.
+
+  ① pilot traversal   — subgraph + SVD-primary vectors (accelerator-resident)
+  ② residual refine   — exact full distances via the SVD identity
+                        ‖x−q‖² = ‖xp−qp‖² + ‖xr−qr‖², then a bounded
+                        (2-round) traversal on the subgraph with full vectors
+  ③ final traversal   — full graph + full vectors, seeded with ②'s beam and
+                        visited table
+
+"Staged data-ready processing": each stage only touches data that is already
+resident for it; the only inter-stage traffic is the candidate beam + visited
+filter (≈1 KB/query in the paper).  Graceful degradation: with stages
+disabled this reduces to plain greedy search (the ablation of Table 5).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fes as F
+from repro.core import traversal as T
+
+
+@dataclass(frozen=True)
+class SearchParams:
+    k: int = 10
+    ef: int = 128            # stage-③ beam
+    ef_pilot: int = 128      # stage-① beam
+    fes_L: int = 32          # entries returned by FES
+    refine_iters: int = 2    # stage-② bounded traversal rounds (paper: 2)
+    use_fes: bool = True
+    use_pilot: bool = True
+    use_refine: bool = True
+    visited_mode: str = "bloom"
+    bloom_bits: int = 16384
+    max_iters: int = 512
+
+
+class Stats(dict):
+    """Per-stage distance-computation counts (B,) arrays."""
+
+
+def hierarchical_entries(arrays: Dict[str, jax.Array], queries: jax.Array,
+                         params: SearchParams, n_out: int = 4
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """HNSW-hierarchy analogue: score the coarse sampled layer exactly and
+    take the top entries (at least as strong as an HNSW upper-layer descent;
+    every scored coarse node is charged to the baseline's budget)."""
+    Bq = queries.shape[0]
+    cv = arrays["coarse_vecs"][:-1]                # (m, d), drop sentinel row
+    m = cv.shape[0]
+    q = queries.astype(jnp.float32)
+    qn = jnp.sum(q * q, axis=1)[:, None]
+    cn = jnp.sum(cv * cv, axis=1)[None, :]
+    d2 = qn + cn - 2.0 * (q @ cv.T)                # (B, m)
+    neg, idx = jax.lax.top_k(-d2, n_out)
+    cost = jnp.full((Bq,), m, jnp.int32)
+    return arrays["coarse_ids"][idx], cost
+
+
+def multistage_search(arrays: Dict[str, jax.Array], params: SearchParams,
+                      queries: jax.Array) -> Tuple[jax.Array, jax.Array, Dict]:
+    """arrays: device arrays built by engine.PilotANNIndex —
+      full_neighbors (n+1, R), sub_neighbors (n+1, R),
+      rot_vecs (n+1, d), primary (n+1, dp), residual (n+1, dr),
+      fes_centroids (r, d), fes_entries (r, C, dp), fes_entry_ids (r, C),
+      fes_valid (r, C), default_entries (E0,)
+    Queries must already be SVD-rotated (engine handles it).
+    Returns (ids (B, k), dists (B, k), stats).
+    """
+    n = arrays["rot_vecs"].shape[0] - 1
+    dp = arrays["primary"].shape[1]
+    Bq = queries.shape[0]
+    stats: Dict[str, jax.Array] = {}
+    q_primary = queries[:, :dp]
+
+    # ---- stage 0: entry selection --------------------------------------
+    if params.use_fes:
+        entry_ids, _ = F.fes_select_ref(q_primary, arrays["fes_centroids"],
+                                        arrays["fes_entries"],
+                                        arrays["fes_entry_ids"],
+                                        arrays["fes_valid"], params.fes_L)
+        # FES cost: one centroid pass + one cluster pass (counted per query)
+        stats["fes_dist"] = jnp.full((Bq,), arrays["fes_centroids"].shape[0] +
+                                     arrays["fes_entries"].shape[1], jnp.int32)
+    else:
+        # coarse layer holds full-d vectors; select entries with full queries
+        entry_ids, entry_cost = hierarchical_entries(arrays, queries, params)
+        stats["fes_dist"] = entry_cost
+
+    visited = None
+    extra_id = extra_d = None
+
+    # ---- stage ①: pilot traversal (subgraph, primary dims) -------------
+    if params.use_pilot:
+        spec1 = T.TraversalSpec(ef=params.ef_pilot, visited_mode=params.visited_mode,
+                                bloom_bits=params.bloom_bits,
+                                max_iters=params.max_iters)
+        padded_primary = arrays["primary"]
+        st1 = T.greedy_search(spec1, q_primary, arrays["sub_neighbors"],
+                              padded_primary, n, entry_ids)
+        stats["pilot_dist"] = st1.n_dist
+        stats["pilot_hops"] = st1.n_hops
+        cand_id, cand_dp = st1.cand_id, st1.cand_d
+        visited = st1.visited
+    else:
+        cand_id, cand_dp = None, None
+        stats["pilot_dist"] = jnp.zeros((Bq,), jnp.int32)
+
+    # ---- stage ②: residual refinement ----------------------------------
+    if params.use_refine and params.use_pilot:
+        qr = queries[:, dp:]
+        res_table = arrays["residual"]
+        rvecs = res_table[cand_id]                            # (B, ef1, dr)
+        d_res = T.sq_dists(qr, rvecs)
+        d_full = jnp.where(cand_id < n, cand_dp + d_res, jnp.inf)
+        stats["refine_dist"] = jnp.sum(cand_id < n, axis=1).astype(jnp.int32)
+        # re-rank, then bounded traversal on subgraph with FULL vectors
+        spec2 = T.TraversalSpec(ef=params.ef, visited_mode=params.visited_mode,
+                                bloom_bits=params.bloom_bits)
+        st2 = T.greedy_search(spec2, queries, arrays["sub_neighbors"],
+                              arrays["rot_vecs"], n,
+                              entry_ids=jnp.full((Bq, 1), n, jnp.int32),
+                              iters=params.refine_iters, visited=visited,
+                              extra_id=cand_id, extra_d=d_full)
+        stats["refine_dist"] = stats["refine_dist"] + st2.n_dist
+        seed_id, seed_d = st2.cand_id, st2.cand_d
+        visited = st2.visited
+    elif params.use_pilot:
+        # degraded: hand pilot results (primary-only dists are NOT exact) to ③
+        # by re-scoring them with full vectors there (extra entries)
+        seed_id, seed_d = None, None
+        stats["refine_dist"] = jnp.zeros((Bq,), jnp.int32)
+    else:
+        seed_id, seed_d = None, None
+        stats["refine_dist"] = jnp.zeros((Bq,), jnp.int32)
+
+    # ---- stage ③: final traversal (full graph + vectors) ---------------
+    spec3 = T.TraversalSpec(ef=params.ef, visited_mode=params.visited_mode,
+                            bloom_bits=params.bloom_bits,
+                            max_iters=params.max_iters)
+    if seed_id is not None:
+        st3 = T.greedy_search(spec3, queries, arrays["full_neighbors"],
+                              arrays["rot_vecs"], n,
+                              entry_ids=jnp.full((Bq, 1), n, jnp.int32),
+                              visited=visited, extra_id=seed_id, extra_d=seed_d)
+    elif params.use_pilot:  # pilot w/o refine: re-score pilot beam fully
+        st3 = T.greedy_search(spec3, queries, arrays["full_neighbors"],
+                              arrays["rot_vecs"], n, entry_ids=cand_id,
+                              visited=visited)
+    else:
+        st3 = T.greedy_search(spec3, queries, arrays["full_neighbors"],
+                              arrays["rot_vecs"], n, entry_ids=entry_ids)
+    stats["final_dist"] = st3.n_dist
+    stats["final_hops"] = st3.n_hops
+    stats["total_cpu_dist"] = stats["refine_dist"] + stats["final_dist"]
+
+    ids, dists = T.topk_from_state(st3, params.k)
+    return ids, dists, stats
+
+
+def baseline_search(arrays: Dict[str, jax.Array], params: SearchParams,
+                    queries: jax.Array) -> Tuple[jax.Array, jax.Array, Dict]:
+    """Single-stage greedy search on the full index (the HNSW-CPU baseline)."""
+    n = arrays["rot_vecs"].shape[0] - 1
+    Bq = queries.shape[0]
+    spec = T.TraversalSpec(ef=params.ef, visited_mode=params.visited_mode,
+                           bloom_bits=params.bloom_bits,
+                           max_iters=params.max_iters)
+    entries, entry_cost = hierarchical_entries(arrays, queries, params)
+    st = T.greedy_search(spec, queries, arrays["full_neighbors"],
+                         arrays["rot_vecs"], n, entries)
+    ids, dists = T.topk_from_state(st, params.k)
+    total = st.n_dist + entry_cost
+    return ids, dists, {"final_dist": total, "final_hops": st.n_hops,
+                        "total_cpu_dist": total}

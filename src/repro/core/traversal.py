@@ -1,0 +1,236 @@
+"""Batched greedy graph traversal (Algorithm 1 of the paper) in pure JAX.
+
+TPU adaptation (DESIGN.md §2): instead of the GPU's thread-per-candidate
+dynamic traversal, a *query batch* advances one neighbour-expansion round per
+step — every op is dense and fixed-shape, so the same code runs under jit on
+CPU (reference engine), vectorises on TPU, and lowers on the production mesh
+(distributed engine).  The candidate list is a sorted (B, ef) beam; visited
+tracking is a bloom filter (paper §4.3) or an exact bitmap.
+
+The traversal returns per-query distance-computation counts — the unit in
+which the paper reports all of its complexity results (Tables 1–2, Fig. 3–4).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import bloom as B
+
+INF = jnp.float32(jnp.inf)
+
+
+class SearchState(NamedTuple):
+    cand_id: jax.Array   # (B, ef) int32, sorted by distance; sentinel = n
+    cand_d: jax.Array    # (B, ef) float32
+    checked: jax.Array   # (B, ef) bool
+    visited: jax.Array   # (B, n_bits/n) bool filter
+    n_dist: jax.Array    # (B,) int32 distance-computation counter
+    n_hops: jax.Array    # (B,) int32
+
+
+@dataclass(frozen=True)
+class TraversalSpec:
+    ef: int
+    visited_mode: str = "bloom"      # bloom | exact
+    bloom_bits: int = 16384
+    max_iters: int = 512
+    # distributed engines pin the per-query state (beam, visited bitset) to
+    # the query sharding and use the scatter-free bloom update: the scatter
+    # form partitions as replicated-operand + all-reduce(OR) — gigabytes per
+    # expansion round
+    state_spec: Optional[object] = None
+    dense_visited_update: bool = False
+
+
+def sq_dists(q: jax.Array, vecs: jax.Array) -> jax.Array:
+    """q: (B, d); vecs: (B, R, d) -> (B, R) squared euclidean, fp32.
+
+    Formulated as norms - 2·dot so the contraction is a matmul (MXU-dense on
+    TPU; the FES kernel uses the same identity with cluster tiling)."""
+    q = q.astype(jnp.float32)
+    vecs = vecs.astype(jnp.float32)
+    qn = jnp.sum(q * q, axis=-1)[:, None]
+    vn = jnp.sum(vecs * vecs, axis=-1)
+    dot = jnp.einsum("bd,brd->br", q, vecs)
+    return jnp.maximum(qn + vn - 2.0 * dot, 0.0)
+
+
+def _visited_init(spec: TraversalSpec, batch: int, n: int) -> jax.Array:
+    if spec.visited_mode == "bloom":
+        return B.bloom_init(batch, spec.bloom_bits)
+    return B.exact_init(batch, n)
+
+
+def _visited_test(spec: TraversalSpec, filt, ids):
+    return (B.bloom_test if spec.visited_mode == "bloom" else B.exact_test)(filt, ids)
+
+
+def _visited_insert(spec: TraversalSpec, filt, ids, mask):
+    if spec.visited_mode != "bloom":
+        return B.exact_insert(filt, ids, mask)
+    fn = B.bloom_insert_dense if spec.dense_visited_update else B.bloom_insert
+    return fn(filt, ids, mask)
+
+
+def init_state(spec: TraversalSpec, queries: jax.Array, entry_ids: jax.Array,
+               vectors: jax.Array, n: int,
+               visited: Optional[jax.Array] = None,
+               extra_id: Optional[jax.Array] = None,
+               extra_d: Optional[jax.Array] = None) -> SearchState:
+    """Build the initial beam from entry points (+ optionally pre-scored
+    candidates handed over from an earlier stage)."""
+    Bq, E = entry_ids.shape
+    valid = entry_ids < n
+    table = jnp.concatenate([vectors, jnp.zeros((1, vectors.shape[1]),
+                                                vectors.dtype)], axis=0)
+    evecs = table[entry_ids]                                  # (B, E, d)
+    d = jnp.where(valid, sq_dists(queries, evecs), INF)
+    n_dist = jnp.sum(valid, axis=1).astype(jnp.int32)
+    if extra_id is not None:
+        entry_ids = jnp.concatenate([extra_id, entry_ids], axis=1)
+        d = jnp.concatenate([extra_d, d], axis=1)
+        valid = jnp.concatenate([extra_id < n, valid], axis=1)
+
+    # dedupe identical ids (keep best distance): sort by (id, d), mask repeats
+    order = jnp.lexsort((d, entry_ids))
+    sid = jnp.take_along_axis(entry_ids, order, axis=1)
+    sd = jnp.take_along_axis(d, order, axis=1)
+    dup = jnp.concatenate([jnp.zeros((Bq, 1), bool), sid[:, 1:] == sid[:, :-1]],
+                          axis=1)
+    sd = jnp.where(dup, INF, sd)
+    sid = jnp.where(dup, n, sid)
+
+    # sort by distance, pad/trim to ef
+    k = spec.ef
+    order = jnp.argsort(sd, axis=1)
+    sid = jnp.take_along_axis(sid, order, axis=1)
+    sd = jnp.take_along_axis(sd, order, axis=1)
+    if sid.shape[1] >= k:
+        cand_id, cand_d = sid[:, :k], sd[:, :k]
+    else:
+        pad = k - sid.shape[1]
+        cand_id = jnp.pad(sid, ((0, 0), (0, pad)), constant_values=n)
+        cand_d = jnp.pad(sd, ((0, 0), (0, pad)), constant_values=jnp.inf)
+
+    filt = visited if visited is not None else _visited_init(spec, Bq, n)
+    filt = _visited_insert(spec, filt, jnp.where(cand_id < n, cand_id, 0),
+                           cand_id < n)
+    return SearchState(cand_id=cand_id.astype(jnp.int32), cand_d=cand_d,
+                       checked=cand_id >= n, visited=filt,
+                       n_dist=n_dist, n_hops=jnp.zeros((Bq,), jnp.int32))
+
+
+def expansion_round(spec: TraversalSpec, state: SearchState, queries: jax.Array,
+                    neighbor_table: jax.Array, vector_table: jax.Array,
+                    n: int, nbr_fn=None, dist_fn=None) -> SearchState:
+    """One synchronous neighbour-expansion round for the whole batch.
+
+    ``nbr_fn(u) -> (B, R)`` and ``dist_fn(queries, ids, fresh) -> (B, R)``
+    override the table lookups — the distributed engine injects shard_map
+    versions that fetch/score corpus rows shard-side (perf: 'shardwise')."""
+    Bq, ef = state.cand_id.shape
+    R = neighbor_table.shape[1]
+
+    # best unchecked candidate per query (rows with none stay idle)
+    unchecked = ~state.checked & (state.cand_id < n)
+    has_work = jnp.any(unchecked, axis=1)
+    first = jnp.argmax(unchecked, axis=1)                     # first True
+    u = jnp.where(has_work,
+                  jnp.take_along_axis(state.cand_id, first[:, None], axis=1)[:, 0],
+                  n)
+    checked = state.checked.at[jnp.arange(Bq), first].set(
+        jnp.where(has_work, True, state.checked[jnp.arange(Bq), first]))
+
+    nbrs = (neighbor_table[u] if nbr_fn is None else nbr_fn(u))  # (B, R)
+    valid = nbrs < n
+    seen = _visited_test(spec, state.visited, jnp.where(valid, nbrs, 0))
+    fresh = valid & ~seen
+    visited = _visited_insert(spec, state.visited, jnp.where(valid, nbrs, 0), fresh)
+
+    if dist_fn is None:
+        nvecs = vector_table[nbrs]                            # (B, R, d)
+        d = jnp.where(fresh, sq_dists(queries, nvecs), INF)
+    else:
+        d = jnp.where(fresh, dist_fn(queries, nbrs, fresh), INF)
+    n_dist = state.n_dist + jnp.sum(fresh, axis=1).astype(jnp.int32)
+    if spec.state_spec is not None:
+        visited = lax.with_sharding_constraint(visited, spec.state_spec)
+
+    # merge beam with fresh neighbours
+    all_id = jnp.concatenate([state.cand_id, jnp.where(fresh, nbrs, n)], axis=1)
+    all_d = jnp.concatenate([state.cand_d, d], axis=1)
+    all_ck = jnp.concatenate([checked, ~fresh], axis=1)
+    order = jnp.argsort(all_d, axis=1)[:, :ef]
+    new_id = jnp.take_along_axis(all_id, order, axis=1)
+    new_d = jnp.take_along_axis(all_d, order, axis=1)
+    new_ck = jnp.take_along_axis(all_ck, order, axis=1)
+    if spec.state_spec is not None:
+        new_id = lax.with_sharding_constraint(new_id, spec.state_spec)
+        new_d = lax.with_sharding_constraint(new_d, spec.state_spec)
+    return SearchState(
+        cand_id=new_id,
+        cand_d=new_d,
+        checked=new_ck,
+        visited=visited,
+        n_dist=n_dist,
+        n_hops=state.n_hops + has_work.astype(jnp.int32),
+    )
+
+
+def greedy_search(spec: TraversalSpec, queries: jax.Array,
+                  neighbor_table: jax.Array, vector_table: jax.Array, n: int,
+                  entry_ids: jax.Array, *,
+                  iters: Optional[int] = None,
+                  unroll: bool = False,
+                  visited: Optional[jax.Array] = None,
+                  extra_id: Optional[jax.Array] = None,
+                  extra_d: Optional[jax.Array] = None,
+                  nbr_fn=None, dist_fn=None) -> SearchState:
+    """Greedy best-first search (Algorithm 1), batched.
+
+    neighbor_table: (n+1, R) padded adjacency (row n = sentinel row).
+    vector_table:   (n+1, d) vectors with zero row at n.
+    iters: if given, runs a fixed number of rounds (stage-② refinement and
+    the distributed serving step use this); otherwise runs to convergence
+    (no unchecked candidate anywhere) with spec.max_iters as a safety bound.
+    unroll: emit the fixed rounds as straight-line HLO instead of a while
+    loop — the dry-run uses this so cost_analysis()/collective parsing see
+    every round (XLA does not scale loop-body costs by trip count).
+    """
+    state = init_state(spec, queries, entry_ids, vector_table[:-1], n,
+                       visited=visited, extra_id=extra_id, extra_d=extra_d)
+
+    round_fn = partial(expansion_round, spec, queries=queries,
+                       neighbor_table=neighbor_table,
+                       vector_table=vector_table, n=n,
+                       nbr_fn=nbr_fn, dist_fn=dist_fn)
+
+    if iters is not None and unroll:
+        for _ in range(iters):
+            state = round_fn(state)
+        return state
+    if iters is not None:
+        return lax.fori_loop(0, iters, lambda i, s: round_fn(s), state)
+
+    def cond(carry):
+        i, s = carry
+        work = jnp.any(~s.checked & (s.cand_id < n))
+        return work & (i < spec.max_iters)
+
+    def body(carry):
+        i, s = carry
+        return i + 1, round_fn(s)
+
+    _, state = lax.while_loop(cond, body, (jnp.int32(0), state))
+    return state
+
+
+def topk_from_state(state: SearchState, k: int) -> Tuple[jax.Array, jax.Array]:
+    return state.cand_id[:, :k], state.cand_d[:, :k]

@@ -1,0 +1,5 @@
+from repro.data.pipeline import (TokenPipeline, VectorDataset,
+                                 make_token_pipeline, synthetic_vectors)
+
+__all__ = ["TokenPipeline", "VectorDataset", "make_token_pipeline",
+           "synthetic_vectors"]

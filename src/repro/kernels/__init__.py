@@ -1,0 +1,6 @@
+from repro.kernels.fes_kernel import fes_distances
+from repro.kernels.flash_attention import flash_attention_tpu
+from repro.kernels.ops import fes_select, fused_expand_merge
+
+__all__ = ["fes_distances", "fes_select", "flash_attention_tpu",
+           "fused_expand_merge"]

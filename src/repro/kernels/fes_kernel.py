@@ -1,0 +1,74 @@
+"""Pallas TPU kernel for Fast Entry Selection (paper Algorithm 2).
+
+TPU adaptation of the CUDA kernel (DESIGN.md §2):
+  * the GPU version assigns one *thread block* per cluster and skips
+    non-active queries inside the block (lines 9-11);  on TPU, dense MXU
+    tiles make per-row skipping worthless, so the wrapper (ops.py) instead
+    *groups queries by routed cluster* (one argsort) and pads each group to a
+    fixed capacity QC — the kernel is then 100 % dense: zero wasted lanes,
+    zero allocation, exactly the paper's "allocation-free tiled" property.
+  * distances use the identity ‖q−e‖² = ‖q‖² + ‖e‖² − 2·q·eᵀ so the inner
+    loop is a (QC×dt)·(dt×Ct) matmul on the MXU — the computational-density
+    fix that is the whole point of FES (§5, Table 2).
+  * grid = (r, C_tiles, d_tiles); the output block is revisited across the
+    d_tiles axis and accumulated in VMEM (standard TPU matmul reduction).
+
+Tile sizes are 128-aligned (MXU systolic dims / VREG lanes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fes_tile_kernel(q_ref, ev_ref, o_ref):
+    """One (cluster, C-tile, d-tile) step: accumulate partial sq-distances."""
+    kd = pl.program_id(2)
+    q = q_ref[0].astype(jnp.float32)          # (QC, dt)
+    e = ev_ref[0].astype(jnp.float32)         # (Ct, dt)
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)            # (QC, 1)
+    en = jnp.sum(e * e, axis=-1, keepdims=True)            # (Ct, 1)
+    dot = jax.lax.dot_general(q, e, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    part = qn + en.T - 2.0 * dot                           # (QC, Ct)
+
+    @pl.when(kd == 0)
+    def _init():
+        o_ref[0] = part
+
+    @pl.when(kd != 0)
+    def _acc():
+        o_ref[0] += part
+
+
+def fes_distances(q_grouped: jax.Array, entries: jax.Array, *,
+                  c_tile: int = 128, d_tile: int = 128,
+                  interpret: bool = False) -> jax.Array:
+    """q_grouped: (r, QC, d) cluster-grouped (padded) queries;
+    entries: (r, C, d) cluster-bucketed entry vectors.
+    Returns squared distances (r, QC, C), fp32.
+
+    C and d must be multiples of the tile sizes (ops.py pads)."""
+    r, QC, d = q_grouped.shape
+    _, C, _ = entries.shape
+    assert entries.shape[0] == r and entries.shape[2] == d
+    ct = min(c_tile, C)
+    dt = min(d_tile, d)
+    assert C % ct == 0 and d % dt == 0, (C, ct, d, dt)
+    grid = (r, C // ct, d // dt)
+
+    return pl.pallas_call(
+        _fes_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, QC, dt), lambda i, j, k: (i, 0, k)),
+            pl.BlockSpec((1, ct, dt), lambda i, j, k: (i, j, k)),
+        ],
+        out_specs=pl.BlockSpec((1, QC, ct), lambda i, j, k: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((r, QC, C), jnp.float32),
+        interpret=interpret,
+    )(q_grouped, entries)

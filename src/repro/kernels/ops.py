@@ -1,0 +1,84 @@
+"""jit'd wrappers around the Pallas kernels.
+
+``fes_select`` is the full TPU FES path: route → group-by-cluster (one
+argsort; the TPU replacement for the GPU kernel's per-row skip) → dense tiled
+kernel → mask/top-L → scatter back to query order.  Numerically identical to
+``repro.core.fes.fes_select_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fes_kernel import fes_distances
+from repro.kernels.topk_kernel import fused_expand_merge
+
+
+def _pad_to(x: jax.Array, axis: int, size: int, value=0):
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("L", "qc", "interpret"))
+def fes_select(queries: jax.Array, centroids: jax.Array, entries: jax.Array,
+               entry_ids: jax.Array, valid: jax.Array, *, L: int,
+               qc: Optional[int] = None, interpret: bool = True
+               ) -> Tuple[jax.Array, jax.Array]:
+    """queries (B, d); centroids (r, d); entries (r, C, d).
+    Returns (ids (B, L), sq-dists (B, L)) — top-L entries of each query's
+    routed cluster.  ``qc``: per-cluster query capacity (defaults to B —
+    always-safe; production tune: ~4B/r)."""
+    B, d = queries.shape
+    r, C, _ = entries.shape
+    qc = qc or B
+    q = queries.astype(jnp.float32)
+
+    # ---- route ----
+    qn = jnp.sum(q * q, -1)[:, None]
+    cn = jnp.sum(centroids * centroids, -1)[None, :]
+    d2c = qn + cn - 2.0 * (q @ centroids.T)
+    route = jnp.argmin(d2c, axis=1).astype(jnp.int32)      # (B,)
+
+    # ---- group queries by cluster (sort once, pad per cluster to qc) ----
+    order = jnp.argsort(route, stable=True)                # (B,)
+    sroute = route[order]
+    counts = jnp.sum(jax.nn.one_hot(route, r, dtype=jnp.int32), axis=0)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(B, dtype=jnp.int32) - starts[sroute]
+    ok = rank < qc                                          # capacity guard
+    slot = jnp.where(ok, sroute * qc + rank, r * qc)
+    # slot -> original query index (sentinel B)
+    q_at_slot = jnp.full((r * qc + 1,), B, jnp.int32).at[slot].set(
+        jnp.where(ok, order, B))[: r * qc]
+    qpad = jnp.concatenate([q, jnp.zeros((1, d), q.dtype)], axis=0)
+    q_grouped = qpad[q_at_slot].reshape(r, qc, d)
+
+    # ---- dense tiled kernel ----
+    dpad = -(-d // 128) * 128 if d > 128 else d
+    cpad = -(-C // 128) * 128
+    qg = _pad_to(q_grouped, 2, dpad)
+    ev = _pad_to(_pad_to(entries.astype(jnp.float32), 2, dpad), 1, cpad)
+    dist = fes_distances(qg, ev, interpret=interpret)       # (r, qc, cpad)
+
+    # ---- mask padding, top-L, scatter back ----
+    vmask = _pad_to(valid, 1, cpad, value=False)            # (r, cpad)
+    dist = jnp.where(vmask[:, None, :], dist, jnp.inf)
+    neg, idx = jax.lax.top_k(-dist.reshape(r * qc, cpad), L)
+    ids_pad = _pad_to(entry_ids, 1, cpad, value=entry_ids.max())
+    sel_ids = jnp.take_along_axis(
+        ids_pad.reshape(r, cpad)[jnp.arange(r * qc) // qc], idx, axis=1)
+
+    out_ids = jnp.zeros((B + 1, L), jnp.int32).at[q_at_slot].set(sel_ids)[:B]
+    out_d = jnp.full((B + 1, L), jnp.inf, jnp.float32).at[q_at_slot].set(-neg)[:B]
+    return out_ids, out_d
+
+
+__all__ = ["fes_select", "fes_distances", "fused_expand_merge"]

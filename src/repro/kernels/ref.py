@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (sweep-tested in tests/)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BIG = jnp.float32(3.0e38)
+
+
+def fes_distances_ref(q_grouped: jax.Array, entries: jax.Array) -> jax.Array:
+    """(r, QC, d) x (r, C, d) -> (r, QC, C) squared euclidean, fp32."""
+    q = q_grouped.astype(jnp.float32)
+    e = entries.astype(jnp.float32)
+    qn = jnp.sum(q * q, axis=-1)[..., :, None]
+    en = jnp.sum(e * e, axis=-1)[..., None, :]
+    dot = jnp.einsum("rqd,rcd->rqc", q, e)
+    return qn + en - 2.0 * dot
+
+
+def expand_merge_ref(q, nvecs, nids, fresh, beam_id, beam_d, beam_ck, n: int):
+    """Oracle for fused_expand_merge: score fresh neighbours, merge into the
+    sorted beam, return (ids, dists, checked) (B, ef)."""
+    ef = beam_id.shape[1]
+    qf = q.astype(jnp.float32)
+    nv = nvecs.astype(jnp.float32)
+    qn = jnp.sum(qf * qf, axis=-1)[:, None]
+    vn = jnp.sum(nv * nv, axis=-1)
+    dot = jnp.einsum("bd,brd->br", qf, nv)
+    d = jnp.maximum(qn + vn - 2.0 * dot, 0.0)
+    d = jnp.where(fresh, d, BIG)
+
+    all_d = jnp.concatenate([beam_d, d], axis=1)
+    all_id = jnp.concatenate([beam_id, jnp.where(fresh, nids, n)], axis=1)
+    all_ck = jnp.concatenate([beam_ck, ~fresh], axis=1)
+    # sort by (d, id) to match the kernel's deterministic tie-break
+    order = jnp.lexsort((all_id, all_d))
+    take = order[:, :ef]
+    return (jnp.take_along_axis(all_id, take, axis=1),
+            jnp.take_along_axis(all_d, take, axis=1),
+            jnp.take_along_axis(all_ck, take, axis=1))

@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: fused neighbour-distance + beam-merge (expansion step).
+
+The hot inner loop of graph traversal (Algorithm 1, lines 6-10) is
+  (a) score R gathered neighbour vectors against the query, and
+  (b) merge them into the sorted ef-beam.
+On GPU PilotANN does (a)+(b) per warp; the TPU analogue fuses them in VMEM so
+the (B, R) distances and the (B, ef+R) merge buffer never round-trip to HBM.
+Sorting uses a bitonic network (static compare-exchange schedule — identical
+control flow across batch lanes, which is exactly what the VPU wants).
+
+Inputs are pre-gathered neighbour vectors (the gather itself is an XLA op —
+on TPU a DMA engine job — so the kernel stays dense).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 3.0e38  # python float: +inf stand-in that survives bitonic compares
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << (x - 1).bit_length()
+
+
+def _bitonic_sort_pairs(keys: jax.Array, vals: jax.Array, flags: jax.Array):
+    """Ascending bitonic sort of (B, W) keys with two carried payloads.
+    W must be a power of two.  Pure jnp (reshape/where) — lowers inside
+    Pallas on TPU and in interpret mode."""
+    B, W = keys.shape
+    stages = int(math.log2(W))
+    for s in range(stages):
+        for t in range(s, -1, -1):
+            stride = 1 << t
+            idx = jax.lax.broadcasted_iota(jnp.int32, (B, W), 1)
+            partner = idx ^ stride
+            asc = (idx & (1 << (s + 1))) == 0
+            k_p = _swap_lanes(keys, stride)
+            v_p = _swap_lanes(vals, stride)
+            f_p = _swap_lanes(flags, stride)
+            is_lo = partner > idx
+            keep = jnp.where(is_lo == asc,
+                             keys <= k_p,   # keep smaller at low lane if asc
+                             keys > k_p)
+            # tie-break deterministically by payload id
+            tie = keys == k_p
+            keep = jnp.where(tie, (vals <= v_p) == (is_lo == asc), keep)
+            keys = jnp.where(keep, keys, k_p)
+            vals = jnp.where(keep, vals, v_p)
+            flags = jnp.where(keep, flags, f_p)
+    return keys, vals, flags
+
+
+def _swap_lanes(x: jax.Array, stride: int) -> jax.Array:
+    """Exchange lanes with partner (index ^ stride) via reshape/flip."""
+    B, W = x.shape
+    y = x.reshape(B, W // (2 * stride), 2, stride)
+    y = jnp.flip(y, axis=2)
+    return y.reshape(B, W)
+
+
+def _expand_merge_kernel(q_ref, nvec_ref, nid_ref, fresh_ref,
+                         bid_ref, bd_ref, bck_ref,
+                         oid_ref, od_ref, ock_ref, *, ef: int, W: int, n: int):
+    q = q_ref[...].astype(jnp.float32)                     # (Bt, d)
+    nv = nvec_ref[...].astype(jnp.float32)                 # (Bt, R, d)
+    nid = nid_ref[...]                                     # (Bt, R)
+    fresh = fresh_ref[...]                                 # (Bt, R) bool
+
+    qn = jnp.sum(q * q, axis=-1)[:, None]
+    vn = jnp.sum(nv * nv, axis=-1)
+    dot = jax.lax.dot_general(nv, q[:, :, None],
+                              (((2,), (1,)), ((0,), (0,))),
+                              preferred_element_type=jnp.float32)[..., 0]
+    d = jnp.maximum(qn + vn - 2.0 * dot, 0.0)              # (Bt, R)
+    d = jnp.where(fresh, d, BIG)
+
+    Bt, R = nid.shape
+    pad = W - (ef + R)
+    keys = jnp.concatenate(
+        [bd_ref[...], d] +
+        ([jnp.full((Bt, pad), BIG, jnp.float32)] if pad else []), axis=1)
+    vals = jnp.concatenate(
+        [bid_ref[...], jnp.where(fresh, nid, n)] +
+        ([jnp.full((Bt, pad), n, jnp.int32)] if pad else []), axis=1)
+    flags = jnp.concatenate(
+        [bck_ref[...].astype(jnp.int32), (~fresh).astype(jnp.int32)] +
+        ([jnp.ones((Bt, pad), jnp.int32)] if pad else []), axis=1)
+
+    keys, vals, flags = _bitonic_sort_pairs(keys, vals, flags)
+    od_ref[...] = keys[:, :ef]
+    oid_ref[...] = vals[:, :ef]
+    ock_ref[...] = flags[:, :ef] != 0
+
+
+def fused_expand_merge(q: jax.Array, nvecs: jax.Array, nids: jax.Array,
+                       fresh: jax.Array, beam_id: jax.Array, beam_d: jax.Array,
+                       beam_ck: jax.Array, n: int, *, b_tile: int = 128,
+                       interpret: bool = False):
+    """q (B, d); nvecs (B, R, d); nids/fresh (B, R);
+    beam_* (B, ef) sorted beam.  Returns merged (ids, dists, checked) (B, ef).
+    Non-fresh rows enter with +INF distance (dropped unless beam not full)."""
+    B, d = q.shape
+    R = nids.shape[1]
+    ef = beam_id.shape[1]
+    W = _next_pow2(ef + R)
+    bt = min(b_tile, B)
+    assert B % bt == 0, (B, bt)
+    grid = (B // bt,)
+
+    kern = functools.partial(_expand_merge_kernel, ef=ef, W=W, n=n)
+    out_shapes = (
+        jax.ShapeDtypeStruct((B, ef), jnp.int32),
+        jax.ShapeDtypeStruct((B, ef), jnp.float32),
+        jax.ShapeDtypeStruct((B, ef), bool),
+    )
+    oid, od, ock = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((bt, R, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bt, R), lambda i: (i, 0)),
+            pl.BlockSpec((bt, R), lambda i: (i, 0)),
+            pl.BlockSpec((bt, ef), lambda i: (i, 0)),
+            pl.BlockSpec((bt, ef), lambda i: (i, 0)),
+            pl.BlockSpec((bt, ef), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bt, ef), lambda i: (i, 0)),
+            pl.BlockSpec((bt, ef), lambda i: (i, 0)),
+            pl.BlockSpec((bt, ef), lambda i: (i, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(q, nvecs, nids, fresh, beam_id, beam_d, beam_ck)
+    return oid, od, ock

@@ -1,0 +1,361 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "REPRO_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh) cell
+lowers + compiles coherently on the production mesh, and extract the roofline
+terms from the compiled artifacts.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --anns [--gather naive]
+
+Per cell:
+  * FULL lowering (rolled scans): .lower().compile() must succeed; we record
+    memory_analysis() — this proves the sharding fits per-chip HBM.
+  * ACCOUNTING lowerings (fully unrolled scans, n_layers = L1/L2, identical
+    shardings): cost_analysis() + HLO collective parse are exact per XLA's
+    loop-body-counted-once semantics; per-layer marginal cost (L2-L1 layers)
+    extrapolates linearly to the full depth (layers are identical).
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+from collections import Counter
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, cell_is_runnable, get_config
+from repro.launch import sharding as SH
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.models import steps as ST
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred)"
+                       r"\[([0-9,]*)\]")
+
+
+def _shape_bytes(sh_dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[sh_dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes of every collective op in the HLO (per-device
+    proxy for bytes-on-the-wire; all-gather outputs count the gathered size,
+    all-reduce counts the reduced buffer)."""
+    out: Dict[str, int] = Counter()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"^(%?[\w\.\-]+)\s*=\s*(.*)$", s)
+        if not m:
+            continue
+        rest = m.group(2)
+        op = next((c for c in _COLL if f" {c}(" in rest or rest.startswith(c + "(")
+                   or f"{c}-start(" in rest or f"{c}-done(" in rest), None)
+        if op is None:
+            continue
+        if f"{op}-done(" in rest:
+            continue  # avoid double count of start/done pairs
+        total = sum(_shape_bytes(dt, dims)
+                    for dt, dims in _SHAPE_RE.findall(rest.split(" %")[0]))
+        out[op] += total
+        out["total"] += total
+    return dict(out)
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape_name: str, mesh, *, n_layers: Optional[int] = None,
+               unroll: bool = False, seq_parallel: Optional[bool] = None,
+               kv_replicated: bool = False):
+    """Returns (fn, example_args, in_shardings) for jit/lower.
+
+    ``seq_parallel``/``kv_replicated``: §Perf hillclimb variants — override
+    the default activation layout (None = baseline behaviour)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if n_layers is not None:
+        enc = dict(n_encoder_layers=n_layers) if cfg.n_encoder_layers else {}
+        cfg = dataclasses.replace(cfg, n_layers=n_layers, lower_unroll=unroll,
+                                  attn_chunk=2048 if unroll else cfg.attn_chunk,
+                                  **enc)
+    elif unroll:
+        cfg = dataclasses.replace(cfg, lower_unroll=True, attn_chunk=2048)
+
+    # Megatron-style sequence parallelism for full-sequence modes: the
+    # residual stream (B, S, d) stays (batch x seq)-sharded between layers so
+    # per-layer remat carries fit HBM at 60-layer/7k-dim scale.
+    from jax.sharding import PartitionSpec as P
+    from repro.models.layers import set_activation_spec
+    from repro.models.moe_sharded import set_moe_mesh
+    da = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    set_moe_mesh(mesh if cfg.is_moe else None, da)
+    moe_spec = P("model", da, None) if cfg.is_moe else None
+    sp = seq_parallel if seq_parallel is not None else True
+    kvspec = None if kv_replicated else "same"
+    if shape.mode in ("train", "prefill"):
+        set_activation_spec(P(da, "model", None) if sp else P(da, None, None),
+                            head_spec=P(da, None, "model", None),
+                            moe_spec=moe_spec,
+                            inner_spec=P(da, None, "model"),
+                            kv_head_spec=kvspec,
+                            token_spec=(P(da + ("model",), None) if sp
+                                        else P(da, None))
+                            if cfg.is_moe else None)
+    else:
+        set_activation_spec(None, moe_spec=moe_spec)
+
+    params_shape = SP.params_specs(cfg)
+    p_shard = SH.params_shardings(params_shape, cfg, mesh, mode=shape.mode)
+
+    if shape.mode == "train":
+        opt_shape = SP.opt_specs(cfg, params_shape)
+        o_shard = SH.opt_state_shardings(opt_shape, p_shard, cfg, mesh)
+        batch = SP.batch_specs(cfg, shape)
+        b_shard = SH.batch_shardings(batch, mesh, shape.global_batch)
+        # accounting variants (unroll=True) use the monolithic step: same
+        # token count, one grad reduction -> first-order identical cost, and
+        # nothing is allocated during lowering so memory is irrelevant there.
+        fn = ST.make_train_step(cfg, microbatches=1 if unroll else None)
+        return (fn, (params_shape, opt_shape, batch),
+                (p_shard, o_shard, b_shard), (0, 1))  # donate params+opt
+
+    if shape.mode == "prefill":
+        batch = SP.batch_specs(cfg, shape)
+        b_shard = SH.batch_shardings(batch, mesh, shape.global_batch)
+        fn = ST.make_prefill_step(cfg)
+        return fn, (params_shape, batch), (p_shard, b_shard), ()
+
+    # decode
+    cache_shape = SP.cache_specs(cfg, shape, params_shape)
+    c_shard = SH.cache_shardings(cache_shape, cfg, mesh, shape.global_batch)
+    dec = SP.decode_input_specs(cfg, shape)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    tok_shard = SH.batch_shardings({"token": dec["token"]}, mesh,
+                                   shape.global_batch)["token"]
+    fn = ST.make_decode_step(cfg)
+    import numpy as _np
+    _bsz = int(_np.prod([mesh.shape[a] for a in da])) if da else 1
+    logits_shard = NamedSharding(
+        mesh, P(da, None, None) if shape.global_batch % _bsz == 0 else P())
+    return (fn, (params_shape, cache_shape, dec["token"], dec["pos"]),
+            (p_shard, c_shard, tok_shard, NamedSharding(mesh, P())),
+            (1,),  # donate caches
+            (tok_shard, logits_shard, c_shard))
+
+
+def lower_cell(arch: str, shape_name: str, mesh, **kw):
+    out = build_cell(arch, shape_name, mesh, **kw)
+    fn, args, shardings, donate = out[:4]
+    out_shardings = out[4] if len(out) > 4 else None
+    with mesh:
+        kwargs = dict(in_shardings=shardings, donate_argnums=donate)
+        if out_shardings is not None:
+            kwargs["out_shardings"] = out_shardings
+        jfn = jax.jit(fn, **kwargs)
+        return jfn.lower(*args)
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+HW = {  # TPU v5e
+    "peak_flops": 197e12,   # bf16 / chip
+    "hbm_bw": 819e9,        # B/s / chip
+    "ici_bw": 50e9,         # B/s / link (conservative single-link figure)
+}
+
+
+def analyze_compiled(compiled) -> Dict[str, Any]:
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops_per_dev": float(ca.get("flops", 0.0)),
+        "bytes_per_dev": float(ca.get("bytes accessed", 0.0)),
+        "coll_bytes_per_dev": int(coll.get("total", 0)),
+        "coll_breakdown": {k: v for k, v in coll.items() if k != "total"},
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "arg_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "code_bytes": int(ma.generated_code_size_in_bytes),
+    }
+
+
+def roofline_terms(acct: Dict[str, float]) -> Dict[str, float]:
+    t_c = acct["flops_per_dev"] / HW["peak_flops"]
+    t_m = acct["bytes_per_dev"] / HW["hbm_bw"]
+    t_x = acct["coll_bytes_per_dev"] / HW["ici_bw"]
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+    return {"t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+            "bottleneck": dom[1],
+            "roofline_frac": t_c / max(t_c, t_m, t_x, 1e-30)}
+
+
+def _layer_period(cfg) -> int:
+    return cfg.shared_attn_period if cfg.family == "hybrid" else 1
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             accounting: bool = True, verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_runnable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+
+    result: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                              "mesh": "2x16x16" if multi_pod else "16x16"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(mesh.devices.shape))
+
+    # ---- full-depth compile (feasibility + memory) ----
+    t0 = time.time()
+    lowered = lower_cell(arch, shape_name, mesh)
+    compiled = lowered.compile()
+    result["compile_s"] = round(time.time() - t0, 1)
+    full = analyze_compiled(compiled)
+    result["memory"] = {k: full[k] for k in
+                        ("temp_bytes", "arg_bytes", "output_bytes")}
+    result["full_rolled"] = full
+
+    if accounting:
+        # ---- unrolled accounting variants ----
+        p = _layer_period(cfg)
+        L1, L2 = p, 2 * p
+        acct = {}
+        for L in (L1, L2):
+            lw = lower_cell(arch, shape_name, mesh, n_layers=L, unroll=True)
+            acct[L] = analyze_compiled(lw.compile())
+        L_full = cfg.n_layers
+        extrap = {}
+        for key in ("flops_per_dev", "bytes_per_dev", "coll_bytes_per_dev"):
+            per_layer = (acct[L2][key] - acct[L1][key]) / (L2 - L1)
+            extrap[key] = acct[L1][key] + per_layer * (L_full - L1)
+        result["accounting"] = {"L1": acct[L1], "L2": acct[L2],
+                                "extrapolated": extrap}
+        result["roofline"] = roofline_terms(extrap)
+        result["global_flops"] = extrap["flops_per_dev"] * n_dev
+
+    if verbose:
+        mem_gb = result["memory"]["temp_bytes"] / 2**30
+        arg_gb = result["memory"]["arg_bytes"] / 2**30
+        line = (f"[dryrun] {arch:24s} {shape_name:12s} mesh={result['mesh']:8s} "
+                f"compile={result['compile_s']:6.1f}s temp={mem_gb:7.2f}GiB "
+                f"args={arg_gb:7.2f}GiB")
+        if "roofline" in result:
+            r = result["roofline"]
+            line += (f" Tc={r['t_compute']*1e3:8.2f}ms Tm={r['t_memory']*1e3:8.2f}ms "
+                     f"Tx={r['t_collective']*1e3:8.2f}ms -> {r['bottleneck']}")
+        print(line, flush=True)
+    return result
+
+
+def run_anns(*, multi_pod: bool = False, gather: str = "naive",
+             dataset: str = "deep", verbose: bool = True) -> Dict[str, Any]:
+    """Dry-run the distributed PilotANN search step (DESIGN.md §2 mapping)."""
+    from repro.core.distributed import (PodIndexSpec, make_pod_search_step,
+                                        pod_array_specs, pod_shardings)
+    dims = {"deep": (96, 48), "t2i": (200, 128), "wiki": (768, 256),
+            "laion": (768, 160)}
+    d, dp = dims[dataset]
+    spec = PodIndexSpec(d=d, d_primary=dp)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    arrays = pod_array_specs(spec, mesh)
+    shards = pod_shardings(spec, mesh)
+    fn = make_pod_search_step(spec, gather_mode=gather)
+    order = list(arrays.keys())
+    with mesh:
+        jfn = jax.jit(fn, in_shardings=tuple(shards[k] for k in order))
+        t0 = time.time()
+        lowered = jfn.lower(*[arrays[k] for k in order])
+        compiled = lowered.compile()
+        dt = time.time() - t0
+    acct = analyze_compiled(compiled)
+    res = {"arch": f"pilotann-{dataset}", "shape": f"search-{gather}",
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "compile_s": round(dt, 1),
+           "memory": {k: acct[k] for k in ("temp_bytes", "arg_bytes",
+                                           "output_bytes")},
+           "accounting": {"extrapolated": acct},
+           "roofline": roofline_terms(acct)}
+    if verbose:
+        r = res["roofline"]
+        print(f"[dryrun] {res['arch']:24s} {res['shape']:12s} mesh={res['mesh']:8s} "
+              f"compile={dt:6.1f}s temp={acct['temp_bytes']/2**30:7.2f}GiB "
+              f"args={acct['arg_bytes']/2**30:7.2f}GiB "
+              f"Tc={r['t_compute']*1e3:8.2f}ms Tm={r['t_memory']*1e3:8.2f}ms "
+              f"Tx={r['t_collective']*1e3:8.2f}ms -> {r['bottleneck']}", flush=True)
+    return res
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--anns", action="store_true")
+    ap.add_argument("--gather", default="naive")
+    ap.add_argument("--dataset", default="deep")
+    ap.add_argument("--no-accounting", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    results = []
+    if args.anns:
+        results.append(run_anns(multi_pod=args.multi_pod, gather=args.gather,
+                                dataset=args.dataset))
+    elif args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                try:
+                    results.append(run_cell(arch, shape, multi_pod=args.multi_pod,
+                                            accounting=not args.no_accounting))
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    print(f"[dryrun] {arch} {shape} FAILED: {type(e).__name__}: {e}",
+                          flush=True)
+                    results.append({"arch": arch, "shape": shape,
+                                    "error": f"{type(e).__name__}: {e}"})
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required (or --all / --anns)")
+        results.append(run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                                accounting=not args.no_accounting))
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+    failed = [r for r in results if "error" in r]
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,51 @@
+"""Serving driver: batched vector-search serving with the PilotANN engine
+(and optional retrieval-augmented generation via serving.rag).
+
+  PYTHONPATH=src python -m repro.launch.serve --n 20000 --d 64 --batches 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import IndexConfig, PilotANNIndex, SearchParams
+from repro.core.pipeline import pipelined_search
+from repro.data import synthetic_vectors
+from repro.serving import BatchingQueue
+from repro.serving.batching import run_query_batches
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--batches", type=int, default=8)
+    ap.add_argument("--ef", type=int, default=64)
+    ap.add_argument("--no-pipeline", action="store_true")
+    args = ap.parse_args(argv)
+
+    ds = synthetic_vectors(args.n, args.d, n_queries=args.batch * args.batches)
+    print(f"[serve] building index over {args.n} x {args.d} ...")
+    t0 = time.time()
+    index = PilotANNIndex(IndexConfig(), ds.vectors)
+    print(f"[serve] built in {time.time()-t0:.1f}s; {index.memory_report()}")
+
+    params = SearchParams(k=10, ef=args.ef, ef_pilot=args.ef)
+    rot = index.rotate_queries(ds.queries)
+    batches = [rot[i * args.batch:(i + 1) * args.batch]
+               for i in range(args.batches)]
+    results, dt = pipelined_search(index.arrays, params, batches,
+                                   pipelined=not args.no_pipeline)
+    qps = args.batch * args.batches / dt
+    print(f"[serve] {args.batches} batches x {args.batch} queries in "
+          f"{dt:.3f}s -> {qps:,.0f} QPS "
+          f"(pipelined={not args.no_pipeline})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,239 @@
+"""Sharding rules: parameter/optimizer/cache/input PartitionSpecs per
+(architecture, mode, mesh).
+
+Baseline universal TP rule (per-arch hand-tuning happens in the §Perf
+hillclimb — see EXPERIMENTS.md):
+  * embeddings vocab-sharded over 'model' when divisible, else d_model-sharded
+  * attention / ssm / rwkv projections column-sharded on the output feature
+    dim (always divisible — it is a multiple of d_model/16 for every assigned
+    arch), out-projections row-sharded (all-reduce after)
+  * MoE expert tensors sharded on the expert dim (64/16, 16/16)
+  * FSDP archs (llama4-scout, yi-34b) additionally shard big matrices over
+    'data' on the non-TP dim (ZeRO-3-style weight sharding)
+  * train activations: batch over ('pod','data'); decode KV caches: batch over
+    ('pod','data') and cache-seq over 'model' (flash-decoding-style SP);
+    batch-1 long-context shards cache-seq over every axis
+  * optimizer moments follow the parameters, plus 'data' sharding on the
+    largest replicated dim (ZeRO-1) — applied by ``opt_state_spec``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+
+def _axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def param_spec(path: Tuple[str, ...], leaf, cfg, mesh, *, mode: str) -> P:
+    """PartitionSpec for one parameter leaf addressed by its pytree path.
+    Stacked per-layer params carry a leading layer dim (never sharded)."""
+    tp = _axis_size(mesh, "model")
+    da = data_axes(mesh)
+    fsdp = cfg.fsdp and (mode == "train" or cfg.fsdp_inference)
+    name = path[-1] if path else ""
+    parent = path[-2] if len(path) > 1 else ""
+    ndim = leaf.ndim
+
+    stacked = _is_stacked(path)
+    lead = (None,) if stacked else ()
+
+    def spec(*dims):
+        out = lead + dims
+        out = out + (None,) * (ndim - len(out))
+        return P(*out[:ndim])
+
+    # ---- embeddings / head ----
+    if path and path[0] == "embed":
+        return P("model", None) if _div(cfg.vocab_size, tp) else P(None, "model")
+    if path and path[0] == "lm_head":
+        return P(None, "model") if _div(cfg.vocab_size, tp) else P("model", None)
+    if path and path[0] in ("dec_pos",):
+        return P(None, None)
+
+    # ---- norms / scalars / small vectors: replicated ----
+    if ndim <= 1 or name in ("b", "A_log", "D", "dt_bias", "u", "w_base",
+                             "mu_x", "mu_k", "mu_r", "conv_b", "conv_bc_b"):
+        return spec()
+    if name == "mu_base" or parent in ("lora_mu", "lora_w") or name == "router":
+        return spec()
+    if parent in ("B_proj", "C_proj"):
+        return spec()  # replicated: shared across head-sharded SSD scan
+    if name in ("conv_w", "conv_bc_w"):
+        return spec(None, "model") if name == "conv_w" else spec()
+
+    # ---- MoE experts: (E, d, ff) / (E, ff, d) ----
+    if _is_expert_tensor(path, leaf, cfg):
+        if fsdp:
+            return spec("model", "data", None)
+        return spec("model", None, None)
+
+    # ---- generic 2-D matmul weights ----
+    if ndim - len(lead) == 2:
+        d0, d1 = leaf.shape[-2], leaf.shape[-1]
+        row_like = name in ("wo", "wd", "out_proj") or (parent == "out_proj") \
+            or name == "w" and parent in ("wo", "wd", "out_proj")
+        if row_like:
+            # row-parallel: shard input dim
+            base = ("model", "data") if fsdp else ("model", None)
+            return spec(*base) if _div(d0, tp) else spec()
+        # column-parallel: shard output dim
+        if _div(d1, tp):
+            return spec("data", "model") if fsdp and _div(d0, _axis_size(mesh, "data")) \
+                else spec(None, "model")
+        if _div(d0, tp):
+            return spec("model", None)
+        return spec()
+
+    # ---- inv_proj (n_inv, 2d, d) and other stacked 3-D ----
+    if ndim >= 3:
+        d0, d1 = leaf.shape[-2], leaf.shape[-1]
+        if _div(d1, tp):
+            return spec(None, "model") if ndim - len(lead) == 2 else \
+                P(*((None,) * (ndim - 2) + (None, "model")))
+        return P(*((None,) * ndim))
+    return spec()
+
+
+def _is_stacked(path: Tuple[str, ...]) -> bool:
+    return any(s in ("layers", "mamba_layers", "encoder", "decoder")
+               for s in path)
+
+
+def _is_expert_tensor(path, leaf, cfg) -> bool:
+    if not cfg.is_moe or leaf.ndim < 3:
+        return False
+    if "moe" not in path:
+        return False
+    name = path[-1] if path else ""
+    return name in ("wg", "wu", "wd")
+
+
+def params_shardings(params_shape, cfg, mesh, *, mode: str):
+    """Map a params pytree (of ShapeDtypeStruct or arrays) to NamedShardings."""
+    def visit(path, leaf):
+        names = tuple(_key_name(k) for k in path)
+        return NamedSharding(mesh, param_spec(names, leaf, cfg, mesh, mode=mode))
+
+    return jax.tree_util.tree_map_with_path(visit, params_shape)
+
+
+def _key_name(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer state: params sharding + ZeRO-1 'data' sharding where free
+# ---------------------------------------------------------------------------
+
+def opt_state_shardings(opt_shape, params_shardings_tree, cfg, mesh):
+    def visit(ps, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        spec = list(ps.spec) + [None] * (leaf.ndim - len(ps.spec))
+        if "data" not in _flat_axes(spec) and "data" in mesh.axis_names:
+            # ZeRO-1: shard the largest unsharded dim over 'data'
+            dsz = mesh.shape["data"]
+            best, best_dim = None, -1
+            for i, (s, dim) in enumerate(zip(spec, leaf.shape)):
+                if s is None and dim % dsz == 0 and dim > best_dim:
+                    best, best_dim = i, dim
+            if best is not None and best_dim >= dsz:
+                spec[best] = "data"
+        return NamedSharding(mesh, P(*spec))
+
+    m = jax.tree.map(visit, params_shardings_tree, opt_shape["m"])
+    v = jax.tree.map(visit, params_shardings_tree, opt_shape["v"])
+    return {"m": m, "v": v, "step": NamedSharding(mesh, P())}
+
+
+def _flat_axes(spec):
+    out = []
+    for s in spec:
+        if s is None:
+            continue
+        if isinstance(s, tuple):
+            out.extend(s)
+        else:
+            out.append(s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Caches & inputs
+# ---------------------------------------------------------------------------
+
+def cache_spec(path: Tuple[str, ...], leaf, cfg, mesh, batch: int) -> P:
+    """KV caches (L, B, S, H, hd); ssm states (L, B, ...); rwkv states."""
+    da = data_axes(mesh)
+    bsz = int(np.prod([mesh.shape[a] for a in da])) if da else 1
+    tp = _axis_size(mesh, "model")
+    name = path[-1] if path else ""
+    batch_ok = _div(batch, bsz)
+
+    if name in ("k", "v", "xk", "xv"):
+        # (L, B, S, Hkv, hd): batch over data axes, seq over 'model'
+        # (cross-attn caches have fixed S=frontend length, not always
+        # divisible — shard kv heads instead, else replicate that dim)
+        seq, heads = leaf.shape[2], leaf.shape[3]
+        if _div(seq, tp):
+            sdim, hdim = "model", None
+        elif _div(heads, tp):
+            sdim, hdim = None, "model"
+        else:
+            sdim = hdim = None
+        if batch_ok:
+            return P(None, da, sdim, hdim, None)
+        return P(None, None, da + (("model",) if sdim else ()), hdim, None)
+    if name == "ssm":
+        # (L, B, H, P, N): heads over model
+        return P(None, da if batch_ok else None, "model", None, None)
+    if name == "wkv":
+        return P(None, da if batch_ok else None, "model", None, None)
+    if name in ("conv_x", "conv_bc", "tm_shift", "cm_shift"):
+        spec = [None, da if batch_ok else None] + [None] * (leaf.ndim - 2)
+        if name == "conv_x" and leaf.ndim >= 4:
+            spec[-1] = "model"
+        return P(*spec)
+    return P(*([None] * leaf.ndim))
+
+
+def cache_shardings(cache_shape, cfg, mesh, batch: int):
+    def visit(path, leaf):
+        names = tuple(_key_name(k) for k in path)
+        return NamedSharding(mesh, cache_spec(names, leaf, cfg, mesh, batch))
+
+    return jax.tree_util.tree_map_with_path(visit, cache_shape)
+
+
+def batch_shardings(batch_shape, mesh, batch: int):
+    """Input batch: leading batch dim over data axes (replicate if batch=1)."""
+    da = data_axes(mesh)
+    bsz = int(np.prod([mesh.shape[a] for a in da])) if da else 1
+
+    def visit(leaf):
+        if leaf.ndim == 0 or not _div(batch, bsz) or leaf.shape[0] != batch:
+            # positions (3, B, S): batch is dim 1; scalars replicated
+            if leaf.ndim >= 2 and leaf.shape[0] == 3 and leaf.shape[1] == batch \
+                    and _div(batch, bsz):
+                return NamedSharding(mesh, P(None, da,
+                                             *([None] * (leaf.ndim - 2))))
+            return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+        return NamedSharding(mesh, P(da, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree.map(visit, batch_shape)

@@ -1,0 +1,66 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input of every
+(architecture x shape) cell — weak-type-correct, shardable, no allocation.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, ShapeSpec
+from repro.models import model as M
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Inputs for train/prefill (the data batch)."""
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {"tokens": sds((B, S), jnp.int32)}
+    if shape.mode == "train":
+        out["labels"] = sds((B, S), jnp.int32)
+    if cfg.frontend != "none":
+        out["frontend_embeds"] = sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                                     jnp.bfloat16)
+    if cfg.pos_type == "mrope":
+        out["positions"] = sds((3, B, S), jnp.int32)
+    return out
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def opt_specs(cfg: ModelConfig, params_shape):
+    from repro.optim import adamw_init
+    return jax.eval_shape(adamw_init, params_shape)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec, params_shape):
+    """KV/SSM cache stand-ins for decode cells (cache length = seq_len)."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.frontend != "none":
+        fe = jax.ShapeDtypeStruct((B, cfg.n_frontend_tokens, cfg.d_model),
+                                  jnp.bfloat16)
+        return jax.eval_shape(
+            lambda p, f: M.init_caches(p, cfg, B, S, frontend_embeds=f),
+            params_shape, fe)
+    return jax.eval_shape(
+        lambda p: M.init_caches(p, cfg, B, S), params_shape)
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B = shape.global_batch
+    return {"token": sds((B, 1), jnp.int32), "pos": sds((), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """All ShapeDtypeStruct inputs for the cell's step function (excluding
+    params/opt/caches, which have their own spec helpers)."""
+    if shape.mode in ("train", "prefill"):
+        return batch_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)

@@ -1,0 +1,5 @@
+from repro.models.model import (decode_step, forward, init_caches, init_params,
+                                loss_fn, unembed, unembed_matrix)
+
+__all__ = ["decode_step", "forward", "init_caches", "init_params", "loss_fn",
+           "unembed", "unembed_matrix"]

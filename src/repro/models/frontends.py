@@ -1,0 +1,26 @@
+"""Modality frontend STUBS (per assignment: ``[audio]``/``[vlm]`` entries
+specify the transformer backbone only; ``input_specs()`` provides precomputed
+frame/patch embeddings).
+
+These helpers generate deterministic synthetic frontend embeddings for smoke
+tests and examples; the dry-run uses ShapeDtypeStructs of the same shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def frontend_embed_shape(cfg, batch: int):
+    if cfg.frontend == "none":
+        return None
+    return (batch, cfg.n_frontend_tokens, cfg.d_model)
+
+
+def synthetic_frontend_embeds(cfg, batch: int, seed: int = 0):
+    shape = frontend_embed_shape(cfg, batch)
+    if shape is None:
+        return None
+    key = jax.random.PRNGKey(seed)
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(jnp.bfloat16)

@@ -1,0 +1,425 @@
+"""Core neural layers: norms, RoPE/M-RoPE, flash attention, decode attention, MLP.
+
+All functions are pure; parameters are nested dicts of jnp arrays.  Attention is
+implemented as a two-level chunked (flash-style) scan so that 32k-token prefill
+never materialises an (S, S) score matrix — this is what makes the prefill_32k
+dry-run cells compile within per-chip HBM.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# Activation sharding hook (Megatron-style sequence parallelism)
+#
+# The launcher installs a PartitionSpec for the (B, S, d) residual stream; the
+# layer stacks re-constrain the carry after every layer so the saved remat
+# residuals stay seq-sharded over 'model' (GSPMD inserts the all-gather /
+# reduce-scatter pair around attention/matmuls).  None = no constraint.
+# ---------------------------------------------------------------------------
+
+_ACTIVATION_SPEC = None
+_HEAD_SPEC = None
+_KV_HEAD_SPEC = "same"
+_MOE_SPEC = None
+_INNER_SPEC = None
+_TOKEN_SPEC = None
+
+
+def set_activation_spec(spec, head_spec=None, moe_spec=None,
+                        inner_spec=None, kv_head_spec="same",
+                        token_spec=None) -> None:
+    """kv_head_spec: "same" (follow head_spec), None (replicate KV heads —
+    the GQA-friendly layout when n_kv_heads < tp), or an explicit spec.
+    token_spec: sharding for flattened (T, d) token buffers (MoE dispatch)."""
+    global _ACTIVATION_SPEC, _HEAD_SPEC, _KV_HEAD_SPEC, _MOE_SPEC, \
+        _INNER_SPEC, _TOKEN_SPEC
+    _ACTIVATION_SPEC = spec
+    _HEAD_SPEC = head_spec
+    _KV_HEAD_SPEC = kv_head_spec
+    _MOE_SPEC = moe_spec
+    _INNER_SPEC = inner_spec
+    _TOKEN_SPEC = token_spec
+
+
+def constrain_residual(x: jax.Array) -> jax.Array:
+    if _ACTIVATION_SPEC is None or x.ndim != 3:
+        return x
+    return lax.with_sharding_constraint(x, _ACTIVATION_SPEC)
+
+
+def constrain_inner(x: jax.Array) -> jax.Array:
+    """(B, L, channels) SSM/RWKV inner activations: channel-sharded over
+    'model' with FULL sequence (the recurrence is sequential in time, so the
+    seq-sharded residual must re-shard to channel sharding at block entry —
+    without this GSPMD leaves d_inner unsharded and full-seq fp32 buffers
+    blow past HBM)."""
+    if _INNER_SPEC is None or x.ndim != 3:
+        return x
+    return lax.with_sharding_constraint(x, _INNER_SPEC)
+
+
+def constrain_tokens(x: jax.Array) -> jax.Array:
+    """(T, d) flattened token buffers (MoE dispatch in/out)."""
+    if _TOKEN_SPEC is None or x.ndim != 2:
+        return x
+    return lax.with_sharding_constraint(x, _TOKEN_SPEC)
+
+
+def constrain_moe(x: jax.Array) -> jax.Array:
+    """(E, C, *) expert buffers: experts over 'model', capacity over 'data'
+    so per-chip MoE activations stay bounded at 1M-token batches."""
+    if _MOE_SPEC is None or x.ndim != 3:
+        return x
+    return lax.with_sharding_constraint(x, _MOE_SPEC)
+
+
+def constrain_heads(x: jax.Array) -> jax.Array:
+    """(B, S, H, D) -> heads sharded over 'model' (GSPMD pads uneven head
+    counts); keeps full-sequence attention compute tensor-parallel."""
+    if _HEAD_SPEC is None or x.ndim != 4:
+        return x
+    return lax.with_sharding_constraint(x, _HEAD_SPEC)
+
+
+def constrain_kv_heads(x: jax.Array) -> jax.Array:
+    if _KV_HEAD_SPEC == "same":
+        return constrain_heads(x)
+    if _KV_HEAD_SPEC is None or x.ndim != 4:
+        return x
+    return lax.with_sharding_constraint(x, _KV_HEAD_SPEC)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(params: dict, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "rmsnorm":
+        return rms_norm(x, params["w"])
+    return layer_norm(x, params["w"], params["b"])
+
+
+def init_norm(d: int, kind: str, dtype=jnp.float32) -> dict:
+    if kind == "rmsnorm":
+        return {"w": jnp.ones((d,), dtype)}
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.bfloat16, scale: Optional[float] = None) -> dict:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32).astype(dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def _rope_angles(positions: jax.Array, head_dim: int, theta: float) -> jax.Array:
+    """positions (..., S) -> angles (..., S, head_dim//2), float32."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float,
+                mrope_sections: Optional[Tuple[int, int, int]] = None) -> jax.Array:
+    """Standard RoPE: positions (B, S).  M-RoPE: positions (3, B, S); the
+    head_dim//2 frequency channels are partitioned into ``mrope_sections``
+    (temporal, height, width), each taking its positions from one stream."""
+    if positions.ndim == 3 and mrope_sections is not None:
+        ang = _rope_angles(positions, head_dim, theta)  # (3, B, S, half)
+        secs = []
+        off = 0
+        for i, s in enumerate(mrope_sections):
+            secs.append(ang[i, ..., off:off + s])
+            off += s
+        return jnp.concatenate(secs, axis=-1)  # (B, S, half)
+    return _rope_angles(positions, head_dim, theta)  # (B, S, half)
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); angles: (B, S, D//2).  Rotate-half convention."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (chunked, pure jnp — XLA-visible FLOPs for roofline)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, chunk_q: int = 1024,
+                    chunk_k: int = 1024, scale: Optional[float] = None,
+                    q_offset: int = 0, unroll: bool = False) -> jax.Array:
+    """Memory-efficient attention with GQA support.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, Hkv, D);  H % Hkv == 0.
+    Two-level scan over (q-chunk, k-chunk) tiles with running max / sum-exp /
+    accumulator — O(chunk_q * chunk_k) score memory.
+    ``q_offset``: absolute position of q[0] (for cached decode-prefill splits).
+    """
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    cq = min(chunk_q, Sq)
+    ck = min(chunk_k, Sk)
+    nq, nk = -(-Sq // cq), -(-Sk // ck)
+    # pad to multiples
+    q = _pad_axis(q, 1, nq * cq)
+    k = _pad_axis(k, 1, nk * ck)
+    v = _pad_axis(v, 1, nk * ck)
+
+    qg = q.reshape(B, nq, cq, Hkv, G, D)
+    kg = k.reshape(B, nk, ck, Hkv, D)
+    vg = v.reshape(B, nk, ck, Hkv, D)
+
+    q_ids = q_offset + jnp.arange(nq * cq).reshape(nq, cq)
+    k_ids = jnp.arange(nk * ck).reshape(nk, ck)
+    k_valid = (k_ids < Sk)
+
+    # Both scan bodies are rematerialised on backward: without this, reverse
+    # mode stores the (cq, ck) probability tile for every (q-chunk, k-chunk)
+    # pair — O(S^2) memory, exactly what flash attention exists to avoid.
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def q_step(_, qi):
+        qc, qid = qi  # (B, cq, Hkv, G, D), (cq,)
+
+        @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+        def k_step(carry, ki):
+            m, l, acc = carry
+            kc, vc, kid, kval = ki
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            mask = kval[None, :]
+            if causal:
+                mask = mask & (qid[:, None] >= kid[None, :])
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, cq, D), jnp.float32)
+        (m, l, acc), _ = lax.scan(k_step, (m0, l0, a0),
+                                  (kg.swapaxes(0, 1), vg.swapaxes(0, 1), k_ids, k_valid),
+                                  unroll=unroll)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, o = lax.scan(q_step, None, (qg.swapaxes(0, 1), q_ids), unroll=unroll)
+    # o: (nq, B, Hkv, G, cq, D) -> (B, Sq, H, D)
+    o = o.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * cq, H, D)
+    return o[:, :Sq]
+
+
+def _pad_axis(x: jax.Array, axis: int, to: int) -> jax.Array:
+    pad = to - x.shape[axis]
+    if pad <= 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+def cache_update(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write ``new`` (B, 1, H, D) at seq position ``pos`` of the cache
+    (B, S, H, D) via a one-hot select.  Unlike dynamic_update_slice this is
+    elementwise in the seq dim, so a seq-sharded cache updates locally — no
+    GSPMD all-gather of the (multi-GiB) cache."""
+    S = cache.shape[1]
+    mask = (jax.lax.broadcasted_iota(jnp.int32, (1, S, 1, 1), 1) == pos)
+    return jnp.where(mask, new.astype(cache.dtype), cache)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, scale: Optional[float] = None) -> jax.Array:
+    """Single-token attention over a (possibly seq-sharded) KV cache.
+
+    q: (B, 1, H, D); caches: (B, S, Hkv, D); pos: scalar int32 — number of
+    valid cache entries (attends to indices < pos, plus the current token
+    which the caller has already written at index pos-1... we attend <= pos).
+    Softmax runs in fp32 over the full cache axis; when the cache's S dim is
+    sharded over 'model', GSPMD inserts the partial-softmax all-reduces
+    (flash-decoding-style sequence parallelism for free).
+    """
+    B, _, H, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.arange(S) <= pos
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + flash/decode core)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, *, d_in: Optional[int] = None, bias: bool = False,
+                   dtype=jnp.bfloat16) -> dict:
+    d_in = d_in or cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_linear(ks[0], d_in, cfg.n_heads * cfg.head_dim, bias=bias, dtype=dtype),
+        "wk": init_linear(ks[1], d_in, cfg.n_kv_heads * cfg.head_dim, bias=bias, dtype=dtype),
+        "wv": init_linear(ks[2], d_in, cfg.n_kv_heads * cfg.head_dim, bias=bias, dtype=dtype),
+        "wo": init_linear(ks[3], cfg.n_heads * cfg.head_dim, cfg.d_model, bias=bias, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = init_norm(cfg.head_dim, "rmsnorm")
+        p["knorm"] = init_norm(cfg.head_dim, "rmsnorm")
+    return p
+
+
+def attention_qkv(p: dict, x: jax.Array, cfg,
+                  angles: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    q = linear(p["wq"], x).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = linear(p["wk"], x).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = linear(p["wv"], x).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qnorm"]["w"])
+        k = rms_norm(k, p["knorm"]["w"])
+    if angles is not None:
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+    return q, k, v
+
+
+def attention(p: dict, x: jax.Array, cfg, *, angles=None, causal=True,
+              kv: Optional[Tuple[jax.Array, jax.Array]] = None) -> jax.Array:
+    """Full-sequence attention (train / prefill).  ``kv`` overrides self-kv
+    for cross-attention (whisper decoder)."""
+    B, S, _ = x.shape
+    q, k, v = attention_qkv(p, x, cfg, angles)
+    if kv is not None:
+        k, v = kv
+        causal = False
+    q = constrain_heads(q)
+    k, v = constrain_kv_heads(k), constrain_kv_heads(v)
+    o = flash_attention(q, k, v, causal=causal,
+                        chunk_q=cfg.attn_chunk, chunk_k=cfg.attn_chunk,
+                        unroll=cfg.lower_unroll)
+    o = constrain_heads(o)
+    return linear(p["wo"], o.reshape(B, S, cfg.n_heads * cfg.head_dim))
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, *, bias: bool = False,
+             dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 3)
+    if act == "silu":  # gated
+        return {"wg": init_linear(ks[0], d_model, d_ff, bias=bias, dtype=dtype),
+                "wu": init_linear(ks[1], d_model, d_ff, bias=bias, dtype=dtype),
+                "wd": init_linear(ks[2], d_ff, d_model, bias=bias, dtype=dtype)}
+    return {"wu": init_linear(ks[0], d_model, d_ff, bias=bias, dtype=dtype),
+            "wd": init_linear(ks[1], d_ff, d_model, bias=bias, dtype=dtype)}
+
+
+def mlp(p: dict, x: jax.Array, act: str) -> jax.Array:
+    if act == "silu":
+        h = jax.nn.silu(linear(p["wg"], x)) * linear(p["wu"], x)
+    else:
+        h = jax.nn.gelu(linear(p["wu"], x))
+    return linear(p["wd"], h)
+
+
+# ---------------------------------------------------------------------------
+# Chunked softmax cross-entropy (vocab-sharded-friendly, O(chunk*V) memory)
+# ---------------------------------------------------------------------------
+
+def chunked_softmax_xent(h: jax.Array, w_out: jax.Array, labels: jax.Array,
+                         *, chunk: int = 512, mask: Optional[jax.Array] = None,
+                         unroll: bool = False) -> jax.Array:
+    """h: (B, S, d); w_out: (d, V); labels: (B, S) int32.  Returns mean NLL.
+
+    Scans over sequence chunks so the (chunk, V) logits tensor — not (S, V) —
+    is the peak activation.  With V sharded over 'model', the logsumexp and
+    one-hot gather reduce over the sharded axis (GSPMD all-reduce)."""
+    B, S, d = h.shape
+    V = w_out.shape[1]
+    c = min(chunk, S)
+    n = -(-S // c)
+    hp = _pad_axis(h, 1, n * c).reshape(B, n, c, d).swapaxes(0, 1)
+    lp = _pad_axis(labels, 1, n * c).reshape(B, n, c).swapaxes(0, 1)
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    mp = _pad_axis(mask, 1, n * c).reshape(B, n, c).swapaxes(0, 1)
+
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def step(carry, xs):
+        tot, cnt = carry
+        hc, lc, mc = xs
+        logits = (hc @ w_out).astype(jnp.float32)  # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(lc, V, dtype=jnp.float32)
+        gold = jnp.sum(logits * onehot, axis=-1)
+        nll = (lse - gold) * mc
+        return (tot + jnp.sum(nll), cnt + jnp.sum(mc)), None
+
+    (tot, cnt), _ = lax.scan(step, (jnp.float32(0), jnp.float32(0)), (hp, lp, mp),
+                             unroll=unroll)
+    return tot / jnp.maximum(cnt, 1.0)

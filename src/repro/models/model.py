@@ -1,0 +1,166 @@
+"""Top-level model: embeddings + family dispatch + LM head, and the cache
+constructors used by the serving path.  ``build_model(cfg)`` returns a
+``Model`` namespace of pure functions usable under jit / eval_shape.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import transformer as tf
+from repro.models.layers import apply_norm, chunked_softmax_xent, init_norm, rope_angles
+
+
+def init_params(key, cfg) -> dict:
+    ks = jax.random.split(key, 4)
+    dtype = jnp.bfloat16
+    p: Dict[str, Any] = {
+        "embed": jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                                   jnp.float32).astype(dtype) * 0.02,
+        "final_ln": init_norm(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.normal(ks[1], (cfg.d_model, cfg.vocab_size),
+                                         jnp.float32).astype(dtype) * 0.02
+    if cfg.family in ("dense", "moe", "vlm"):
+        p["layers"] = tf.init_decoder_stack(ks[2], cfg)
+    elif cfg.family == "hybrid":
+        p["hybrid"] = tf.init_hybrid(ks[2], cfg)
+    elif cfg.family == "encdec":
+        p["encdec"] = tf.init_encdec(ks[2], cfg)
+        p["dec_pos"] = jax.random.normal(ks[3], (65536, cfg.d_model),
+                                         jnp.float32).astype(dtype) * 0.02
+    elif cfg.family == "ssm":
+        p["layers"] = tf.init_rwkv_stack(ks[2], cfg)
+        p["ln_in"] = init_norm(cfg.d_model, cfg.norm)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+def _embed(p, tokens):
+    return p["embed"][tokens]
+
+
+def _angles_for(cfg, positions: Optional[jax.Array], B: int, S: int,
+                offset: int = 0):
+    if cfg.pos_type in ("learned", "none"):
+        return None
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S) + offset, (B, S))
+        if cfg.pos_type == "mrope":
+            positions = jnp.broadcast_to(positions, (3, B, S))
+    secs = cfg.mrope_sections if cfg.pos_type == "mrope" else None
+    return rope_angles(positions, cfg.head_dim, cfg.rope_theta, secs)
+
+
+def _merge_frontend(cfg, h: jax.Array, frontend_embeds: Optional[jax.Array]):
+    """Early fusion: replace the first n_frontend_tokens embeddings with the
+    (stub) modality embeddings."""
+    if frontend_embeds is None or cfg.frontend == "none" or cfg.family == "encdec":
+        return h
+    n = cfg.n_frontend_tokens
+    return jnp.concatenate([frontend_embeds.astype(h.dtype), h[:, n:]], axis=1)
+
+
+def forward(params: dict, cfg, tokens: jax.Array, *,
+            frontend_embeds: Optional[jax.Array] = None,
+            positions: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward -> (hidden (B, S, d), aux_loss)."""
+    B, S = tokens.shape
+    h = _embed(params, tokens)
+    h = _merge_frontend(cfg, h, frontend_embeds)
+    aux = jnp.float32(0)
+    angles = _angles_for(cfg, positions, B, S)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        h, aux = tf.decoder_stack(params["layers"], h, cfg, angles)
+    elif cfg.family == "hybrid":
+        h = tf.hybrid_forward(params["hybrid"], h, cfg, angles)
+    elif cfg.family == "encdec":
+        memory = tf.encoder_forward(params["encdec"], frontend_embeds, cfg)
+        pos_emb = params["dec_pos"][:S][None].astype(h.dtype)
+        h = tf.encdec_decoder(params["encdec"], h + pos_emb, cfg, memory)
+    elif cfg.family == "ssm":
+        h = apply_norm(params["ln_in"], h, cfg.norm)
+        h = tf.rwkv_stack(params["layers"], h, cfg)
+    return apply_norm(params["final_ln"], h, cfg.norm), aux
+
+
+def unembed(params: dict, cfg, h: jax.Array) -> jax.Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (h @ w).astype(jnp.float32)
+
+
+def unembed_matrix(params: dict, cfg) -> jax.Array:
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def init_caches(params, cfg, batch: int, seq: int,
+                frontend_embeds: Optional[jax.Array] = None) -> dict:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return tf.init_kv_caches(cfg, batch, seq)
+    if cfg.family == "hybrid":
+        return tf.init_hybrid_caches(cfg, batch, seq)
+    if cfg.family == "ssm":
+        return tf.init_rwkv_caches(cfg, batch)
+    if cfg.family == "encdec":
+        kv = tf.init_kv_caches(cfg, batch, seq)
+        if frontend_embeds is None:
+            frontend_embeds = jnp.zeros((batch, cfg.n_frontend_tokens, cfg.d_model),
+                                        jnp.bfloat16)
+        memory = tf.encoder_forward(params["encdec"], frontend_embeds, cfg)
+        xk, xv = tf.cross_kv(params["encdec"], memory, cfg)
+        return {**kv, "xk": xk, "xv": xv}
+    raise ValueError(cfg.family)
+
+
+def decode_step(params: dict, cfg, token: jax.Array, caches: dict,
+                pos: jax.Array) -> Tuple[jax.Array, dict]:
+    """One-token decode.  token: (B, 1) int32; pos: scalar int32 (current
+    write position = number of tokens already in context).  Returns
+    (logits (B, 1, V) fp32, new caches)."""
+    B = token.shape[0]
+    h = _embed(params, token)
+    angles = _angles_for(cfg, None, B, 1, offset=0)
+    if angles is not None:
+        # position of the new token is `pos`
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        if cfg.pos_type == "mrope":
+            positions = jnp.broadcast_to(positions, (3, B, 1))
+        angles = rope_angles(positions, cfg.head_dim, cfg.rope_theta,
+                             cfg.mrope_sections if cfg.pos_type == "mrope" else None)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        h, caches = tf.decoder_stack_decode(params["layers"], h, cfg, angles, caches, pos)
+    elif cfg.family == "hybrid":
+        h, caches = tf.hybrid_decode(params["hybrid"], h, cfg, angles, caches, pos)
+    elif cfg.family == "encdec":
+        pos_emb = lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1)[None]
+        h, caches = tf.encdec_decode(params["encdec"], h + pos_emb.astype(h.dtype),
+                                     cfg, caches, pos)
+    elif cfg.family == "ssm":
+        h = apply_norm(params["ln_in"], h, cfg.norm)
+        h, caches = tf.rwkv_stack_decode(params["layers"], h, cfg, caches)
+    h = apply_norm(params["final_ln"], h, cfg.norm)
+    return unembed(params, cfg, h), caches
+
+
+def loss_fn(params: dict, cfg, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    h, aux = forward(params, cfg, batch["tokens"],
+                     frontend_embeds=batch.get("frontend_embeds"),
+                     positions=batch.get("positions"))
+    nll = chunked_softmax_xent(h, unembed_matrix(params, cfg), batch["labels"],
+                               mask=batch.get("loss_mask"),
+                               unroll=cfg.lower_unroll)
+    return nll + aux, {"nll": nll, "aux": aux}

@@ -1,0 +1,201 @@
+"""RWKV-6 (Finch): attention-free time-mix with data-dependent per-channel decay.
+
+Train/prefill uses a chunked parallel form (intra-chunk quadratic + inter-chunk
+state scan, log-space cumulative decays for stability); decode is the O(1)
+recurrence.  Structure follows the RWKV-6 paper: token-shift lerps with
+LoRA-produced mixing coefficients, per-channel decay w = exp(-exp(.)),
+bonus term u for the current token, grouped heads with group-norm output.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import (constrain_inner, init_linear, init_norm,
+                                 layer_norm, linear)
+
+CHUNK = 64
+
+
+def _lora_init(key, d: int, r: int, out: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"a": jax.random.normal(k1, (d, r), jnp.float32).astype(dtype) * 0.01,
+            "b": jax.random.normal(k2, (r, out), jnp.float32).astype(dtype) * 0.01}
+
+
+def _lora(p: dict, x: jax.Array) -> jax.Array:
+    return jnp.tanh(x @ p["a"]) @ p["b"]
+
+
+def init_rwkv6_timemix(key, cfg, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    r = cfg.rwkv_lora_dim
+    H = d // cfg.rwkv_head_dim
+    ks = jax.random.split(key, 12)
+    return {
+        "mu_base": jnp.full((5, d), 0.5, dtype),        # w, k, v, r, g lerp bases
+        "mu_x": jnp.full((d,), 0.5, dtype),
+        "lora_mu": _lora_init(ks[0], d, r, 5 * d, dtype),
+        "wr": init_linear(ks[1], d, d, dtype=dtype),
+        "wk": init_linear(ks[2], d, d, dtype=dtype),
+        "wv": init_linear(ks[3], d, d, dtype=dtype),
+        "wg": init_linear(ks[4], d, d, dtype=dtype),
+        "wo": init_linear(ks[5], d, d, dtype=dtype),
+        "w_base": jnp.full((d,), -6.0, jnp.float32),    # decay base (pre -exp)
+        "lora_w": _lora_init(ks[6], d, r, d, dtype),
+        "u": jax.random.normal(ks[7], (d,), jnp.float32) * 0.1,  # bonus
+        "gnorm": init_norm(cfg.rwkv_head_dim, "layernorm"),
+    }
+
+
+def init_rwkv6_channelmix(key, cfg, dtype=jnp.bfloat16) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "wk": init_linear(ks[0], d, ff, dtype=dtype),
+        "wv": init_linear(ks[1], ff, d, dtype=dtype),
+        "wr": init_linear(ks[2], d, d, dtype=dtype),
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """Shifted-by-one sequence; ``prev`` is the last token of the previous
+    segment (decode carry), zeros at t=0 otherwise."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev[:, None, :], x[:, :-1]], axis=1)
+
+
+def wkv6_chunked(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+                 u: jax.Array, *, chunk: int = CHUNK,
+                 init_state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked WKV recurrence:  S_t = diag(w_t) S_{t-1} + k_t v_t^T,
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T).
+
+    r, k, v: (B, L, H, D);  logw: (B, L, H, D) (log decay, <= 0);  u: (H, D).
+    Returns (o (B, L, H, D), final_state (B, H, D, D)).
+    """
+    B, L, H, D = r.shape
+    c = min(chunk, L)
+    nc = -(-L // c)
+    pad = nc * c - L
+    if pad:
+        padf = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = padf(r), padf(k), padf(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    rc = r.reshape(B, nc, c, H, D).swapaxes(0, 1)
+    kc = k.reshape(B, nc, c, H, D).swapaxes(0, 1)
+    vc = v.reshape(B, nc, c, H, D).swapaxes(0, 1)
+    lw = logw.reshape(B, nc, c, H, D).swapaxes(0, 1).astype(jnp.float32)
+
+    tri_lo = jnp.tril(jnp.ones((c, c), bool), k=-1)  # strictly lower: j < i
+
+    def chunk_step(S, inp):
+        rb, kb, vb, lwb = inp  # (B, c, H, D)
+        cum = jnp.cumsum(lwb, axis=1)                 # inclusive within chunk
+        cum_excl = cum - lwb                          # exclusive
+        # decay from j's insertion to i's read (j < i): exp(cum_excl[i]-cum[j-?])
+        # S accumulated after step j contains k_j; read at i uses decays (j, i-1]
+        # => exp(cum_excl[i] - cum[j])   (both inclusive-of-own-step semantics)
+        # intra-chunk attention-like matrix per channel, log-space safe:
+        # A[i, j, d] = exp(cum_excl[i, d] - cum[j, d])   for j < i
+        diff = cum_excl[:, :, None, :, :] - cum[:, None, :, :, :]  # (B, i, j, H, D)
+        A = jnp.where(tri_lo[None, :, :, None, None], jnp.exp(diff), 0.0)
+        # o[i, e] = sum_{j<i} (sum_d r_i[d] A[i,j,d] k_j[d]) v_j[e]
+        w_rk = jnp.einsum("bihd,bijhd,bjhd->bijh", rb.astype(jnp.float32), A,
+                          kb.astype(jnp.float32))     # (B, i, j, H)
+        o_intra = jnp.einsum("bijh,bjhe->bihe", w_rk, vb.astype(jnp.float32))
+        # bonus (current token):
+        rku = jnp.sum(rb.astype(jnp.float32) * u[None, None].astype(jnp.float32)
+                      * kb.astype(jnp.float32), axis=-1)  # (B, c, H)
+        o_bonus = rku[..., None] * vb.astype(jnp.float32)
+        # inter: state read at i decayed by exp(cum_excl[i])
+        r_dec = rb.astype(jnp.float32) * jnp.exp(cum_excl)
+        o_inter = jnp.einsum("bihd,bhde->bihe", r_dec, S)
+        o = o_intra + o_bonus + o_inter
+        # state update: S' = exp(cum[last]) . S + sum_j exp(cum[last]-cum[j]) k_j v_j^T
+        k_dec = kb.astype(jnp.float32) * jnp.exp(cum[:, -1:, :, :] - cum)
+        S_new = S * jnp.exp(cum[:, -1, :, :])[..., None] + \
+            jnp.einsum("bjhd,bjhe->bhde", k_dec, vb.astype(jnp.float32))
+        return S_new, o
+
+    S0 = init_state if init_state is not None else jnp.zeros((B, H, D, D), jnp.float32)
+    final, o = lax.scan(chunk_step, S0, (rc, kc, vc, lw))
+    o = o.swapaxes(0, 1).reshape(B, nc * c, H, D)
+    return o[:, :L].astype(r.dtype), final
+
+
+def rwkv6_timemix(p: dict, x: jax.Array, cfg,
+                  state: Optional[dict] = None) -> Tuple[jax.Array, Optional[dict]]:
+    """x: (B, L, d).  state={'shift': (B, d), 'wkv': (B, H, D, D)} for decode."""
+    B, L, d = x.shape
+    H = d // cfg.rwkv_head_dim
+    D = cfg.rwkv_head_dim
+
+    prev = state["shift"] if state is not None else None
+    xs = _token_shift(x, prev)
+    dx = xs - x
+    xx = x + dx * p["mu_x"]
+    mus = (_lora(p["lora_mu"], xx).reshape(B, L, 5, d)
+           + p["mu_base"][None, None])                       # (B, L, 5, d)
+    xw, xk, xv, xr, xg = [x + dx * mus[:, :, i] for i in range(5)]
+
+    rr = constrain_inner(linear(p["wr"], xr)).reshape(B, L, H, D)
+    kk = constrain_inner(linear(p["wk"], xk)).reshape(B, L, H, D)
+    vv = constrain_inner(linear(p["wv"], xv)).reshape(B, L, H, D)
+    gg = jax.nn.silu(constrain_inner(linear(p["wg"], xg)))
+    logw = -jnp.exp(p["w_base"][None, None] +
+                    _lora(p["lora_w"], xw).astype(jnp.float32))  # (B, L, d) <= 0
+    logw = logw.reshape(B, L, H, D)
+    u = p["u"].reshape(H, D)
+
+    if state is None:
+        o, _ = wkv6_chunked(rr, kk, vv, logw, u)
+        new_state = None
+    else:
+        S = state["wkv"]
+        r1, k1, v1 = (t[:, 0].astype(jnp.float32) for t in (rr, kk, vv))
+        w1 = jnp.exp(logw[:, 0])
+        rku = jnp.sum(r1 * u[None] * k1, axis=-1)            # (B, H)
+        o = jnp.einsum("bhd,bhde->bhe", r1, S) + rku[..., None] * v1
+        S = S * w1[..., None] + jnp.einsum("bhd,bhe->bhde", k1, v1)
+        o = o[:, None].astype(x.dtype)
+        new_state = {"shift": x[:, -1], "wkv": S}
+
+    # group-norm over heads, gate, project out
+    o = layer_norm(o.reshape(B, -1, H, D), p["gnorm"]["w"], p["gnorm"]["b"])
+    o = o.reshape(B, -1, d) * gg
+    return linear(p["wo"], o), new_state
+
+
+def rwkv6_channelmix(p: dict, x: jax.Array, cfg,
+                     state: Optional[dict] = None) -> Tuple[jax.Array, Optional[dict]]:
+    prev = state["shift"] if state is not None else None
+    xs = _token_shift(x, prev)
+    dx = xs - x
+    xk = x + dx * p["mu_k"]
+    xr = x + dx * p["mu_r"]
+    kk = jnp.square(jax.nn.relu(constrain_inner(linear(p["wk"], xk))))
+    o = jax.nn.sigmoid(linear(p["wr"], xr)) * linear(p["wv"], kk)
+    new_state = {"shift": x[:, -1]} if state is not None else None
+    return o, new_state
+
+
+def init_rwkv6_state(cfg, batch: int) -> dict:
+    d = cfg.d_model
+    H = d // cfg.rwkv_head_dim
+    D = cfg.rwkv_head_dim
+    return {
+        "tm_shift": jnp.zeros((batch, d), jnp.bfloat16),
+        "cm_shift": jnp.zeros((batch, d), jnp.bfloat16),
+        "wkv": jnp.zeros((batch, H, D, D), jnp.float32),
+    }

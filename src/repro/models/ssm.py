@@ -1,0 +1,199 @@
+"""Mamba2 (State Space Duality) block: chunked scan for train/prefill, O(1)
+recurrent step for decode.
+
+Follows the minimal SSD formulation of the Mamba2 paper: the sequence is split
+into chunks; within a chunk the quadratic (masked-attention-like) form runs on
+dense matmuls (MXU-friendly), and chunk-to-chunk state is carried by a scan.
+
+TP layout note: projections are stored separately (z/x/B/C/dt) instead of one
+fused in_proj so that z/x/dt column-shard on the head dimension over 'model'
+while the tiny B/C/state tensors replicate — the SSD scan is then fully local
+per shard (no collectives inside the recurrence).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import (constrain_inner, init_linear, init_norm,
+                                 linear, rms_norm)
+
+CHUNK = 128
+
+
+def init_mamba2(key, cfg, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    H = d_in // cfg.ssm_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "z_proj": init_linear(ks[0], d, d_in, dtype=dtype),
+        "x_proj": init_linear(ks[1], d, d_in, dtype=dtype),
+        "B_proj": init_linear(ks[2], d, N, dtype=dtype),
+        "C_proj": init_linear(ks[3], d, N, dtype=dtype),
+        "dt_proj": init_linear(ks[4], d, H, dtype=dtype),
+        "conv_w": jax.random.normal(ks[5], (cfg.ssm_conv, d_in),
+                                    jnp.float32).astype(dtype) * 0.2,
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "conv_bc_w": jax.random.normal(ks[6], (cfg.ssm_conv, 2 * N),
+                                       jnp.float32).astype(dtype) * 0.2,
+        "conv_bc_b": jnp.zeros((2 * N,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01, jnp.float32))),
+        "norm": init_norm(d_in, "rmsnorm"),
+        "out_proj": init_linear(ks[7], d_in, d, dtype=dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d.  x: (B, L, Cd); w: (K, Cd).  Returns (y, new_state)
+    where state carries the trailing K-1 inputs for decode."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    y = jax.nn.silu(y + b)
+    new_state = xp[:, -(K - 1):, :] if K > 1 else xp[:, :0, :]
+    return y, new_state
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., L).  Returns (..., L, L) with out[i, j] = sum_{j < s <= i} x[s],
+    -inf for j > i (used as exp-decay mask)."""
+    L = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    diff = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba2_scan(xh: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, *, chunk: int = CHUNK,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.
+
+    xh: (B, L, H, P)  value heads;   dt: (B, L, H)  (already softplus'd)
+    A: (H,) negative;  Bm, Cm: (B, L, N)  (single group, broadcast to heads)
+    Returns (y (B, L, H, P), final_state (B, H, P, N)).
+    """
+    Bb, L, H, P = xh.shape
+    N = Bm.shape[-1]
+    c = min(chunk, L)
+    nc = -(-L // c)
+    pad = nc * c - L
+
+    def padL(t):
+        return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2)) if pad else t
+
+    xh, dt, Bm, Cm = map(padL, (xh, dt, Bm, Cm))
+    xc = xh.reshape(Bb, nc, c, H, P)
+    dtc = dt.reshape(Bb, nc, c, H)
+    Bc = Bm.reshape(Bb, nc, c, N)
+    Cc = Cm.reshape(Bb, nc, c, N)
+
+    dA = dtc * A[None, None, None, :]           # (B, nc, c, H), negative
+    dA_cum = jnp.cumsum(dA, axis=2)             # within-chunk cumulative
+
+    # ---- intra-chunk (quadratic within chunk, dense matmuls) ----
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))   # (B, nc, H, c, c)
+    # CB[b,n,i,j] = sum_s Cc[b,n,i,s] * Bc[b,n,j,s]
+    CB = jnp.einsum("bnis,bnjs->bnij", Cc, Bc)          # (B, nc, c, c)
+    W = CB[:, :, None] * Lmat                           # (B, nc, H, c, c)
+    y_diag = jnp.einsum("bnhij,bnjhp,bnjh->bnihp", W, xc, dtc)
+
+    # ---- chunk states (fp32 carry for numerical stability) ----
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)        # (B, nc, c, H)
+    states = jnp.einsum("bnch,bnchp,bncs->bnhps",
+                        (decay_states * dtc).astype(jnp.float32),
+                        xc.astype(jnp.float32), Bc.astype(jnp.float32))
+
+    # ---- inter-chunk scan ----
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])                   # (B, nc, H)
+
+    def step(s, inp):
+        st, dec = inp  # (B, H, P, N), (B, H)
+        s_new = s * dec[..., None, None] + st
+        return s_new, s
+
+    s0 = init_state if init_state is not None else jnp.zeros((Bb, H, P, N), jnp.float32)
+    final, states_in = lax.scan(step, s0,
+                                (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    states_in = states_in.swapaxes(0, 1)                         # (B, nc, H, P, N)
+
+    # ---- contribution of incoming state to each position ----
+    state_decay = jnp.exp(dA_cum)                                # (B, nc, c, H)
+    y_off = jnp.einsum("bncs,bnhps,bnch->bnchp", Cc, states_in, state_decay)
+
+    y = (y_diag + y_off).reshape(Bb, nc * c, H, P)
+    return y[:, :L], final
+
+
+def mamba2_block(p: dict, x: jax.Array, cfg,
+                 state: Optional[dict] = None) -> Tuple[jax.Array, Optional[dict]]:
+    """Full Mamba2 block.  x: (B, L, d).  If ``state`` is given (decode),
+    performs a single-step (L==1) recurrence and returns the new state."""
+    B, L, d = x.shape
+    d_in = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    H = d_in // cfg.ssm_head_dim
+    P = cfg.ssm_head_dim
+
+    z = constrain_inner(linear(p["z_proj"], x))
+    xc = constrain_inner(linear(p["x_proj"], x))
+    bc = jnp.concatenate([linear(p["B_proj"], x), linear(p["C_proj"], x)], axis=-1)
+    dt = linear(p["dt_proj"], x)
+
+    if state is None:
+        xc, _ = _causal_conv(xc, p["conv_w"], p["conv_b"])
+        bc, _ = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"])
+        Bm, Cm = jnp.split(bc, 2, axis=-1)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+        A = -jnp.exp(p["A_log"])
+        y, _ = mamba2_scan(xc.reshape(B, L, H, P), dt, A, Bm, Cm)
+        y = y + p["D"][None, None, :, None] * xc.reshape(B, L, H, P)
+        y = constrain_inner(y.reshape(B, L, d_in).astype(x.dtype))
+        y = rms_norm(y * jax.nn.silu(z), p["norm"]["w"])
+        return linear(p["out_proj"], y), None
+
+    # ---- decode: single-step recurrence ----
+    xc, conv_x = _causal_conv(xc, p["conv_w"], p["conv_b"], state["conv_x"])
+    bc, conv_bc = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"], state["conv_bc"])
+    Bm, Cm = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, 1, H)
+    A = -jnp.exp(p["A_log"])
+    xh = xc.reshape(B, H, P)
+    dAe = jnp.exp(dt[:, 0, :] * A[None, :])                      # (B, H)
+    dBx = jnp.einsum("bh,bhp,bs->bhps", dt[:, 0, :],
+                     xh.astype(jnp.float32), Bm[:, 0, :].astype(jnp.float32))
+    ssm_state = state["ssm"] * dAe[..., None, None] + dBx
+    y = jnp.einsum("bhps,bs->bhp", ssm_state, Cm[:, 0, :].astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"]["w"])
+    new_state = {"conv_x": conv_x.astype(state["conv_x"].dtype),
+                 "conv_bc": conv_bc.astype(state["conv_bc"].dtype),
+                 "ssm": ssm_state}
+    return linear(p["out_proj"], y), new_state
+
+
+def init_mamba2_state(cfg, batch: int) -> dict:
+    d_in = cfg.ssm_expand * cfg.d_model
+    N = cfg.ssm_state
+    H = d_in // cfg.ssm_head_dim
+    P = cfg.ssm_head_dim
+    return {
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, d_in), jnp.bfloat16),
+        "conv_bc": jnp.zeros((batch, cfg.ssm_conv - 1, 2 * N), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+    }

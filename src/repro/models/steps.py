@@ -1,0 +1,112 @@
+"""Step factories: train / prefill / decode, shared by the launcher, the
+dry-run, the smoke tests and the examples.  Each factory closes over the
+model config and returns a pure function suitable for jax.jit.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(cfg, opt_cfg: Optional[AdamWConfig] = None,
+                    microbatches: Optional[int] = None) -> Callable:
+    """One optimizer step.  With microbatches > 1 the global batch is split
+    and gradients are accumulated in fp32 (sharded like the params) — the
+    standard memory lever for 34B+ training; semantics match the monolithic
+    step (same tokens, one gradient reduction, one Adam update)."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    m = microbatches if microbatches is not None else getattr(cfg, "microbatches", 1)
+
+    def monolithic(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: M.loss_fn(p, cfg, batch), has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(opt_cfg, params, grads, opt_state)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return params, opt_state, metrics
+
+    if m <= 1:
+        return monolithic
+
+    def train_step(params, opt_state, batch):
+        def split(x):
+            return x.reshape((m, x.shape[0] // m) + x.shape[1:]) \
+                if x.ndim >= 1 and x.shape[0] % m == 0 else x
+
+        def split_pos(x):  # mrope positions (3, B, S)
+            return x.reshape((x.shape[0], m, x.shape[1] // m) + x.shape[2:]) \
+                .swapaxes(0, 1)
+
+        mb = {k: (split_pos(v) if k == "positions" else split(v))
+              for k, v in batch.items()}
+
+        def body(acc, mbatch):
+            (loss, metrics), g = jax.value_and_grad(
+                lambda p: M.loss_fn(p, cfg, mbatch), has_aux=True)(params)
+            acc = jax.tree.map(lambda a, gi: a + gi.astype(jnp.float32), acc, g)
+            return acc, loss
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        gsum, losses = jax.lax.scan(body, zeros, mb)
+        grads = jax.tree.map(lambda g: g / m, gsum)
+        params, opt_state, opt_metrics = adamw_update(opt_cfg, params, grads, opt_state)
+        loss = jnp.mean(losses)
+        return params, opt_state, {**opt_metrics, "loss": loss, "nll": loss}
+
+    return train_step
+
+
+def make_grad_step(cfg) -> Callable:
+    """Gradient-only step for accumulation / pipelined training drivers."""
+
+    def grad_step(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: M.loss_fn(p, cfg, batch), has_aux=True)(params)
+        return grads, {**metrics, "loss": loss}
+
+    return grad_step
+
+
+def make_apply_grads(cfg, opt_cfg: Optional[AdamWConfig] = None) -> Callable:
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def apply_grads(params, opt_state, grads):
+        return adamw_update(opt_cfg, params, grads, opt_state)
+
+    return apply_grads
+
+
+def make_prefill_step(cfg) -> Callable:
+    def prefill_step(params, batch):
+        """Full-sequence forward producing last-token logits + populated caches.
+
+        The caches are produced by re-projecting K/V per layer — expressed as
+        a fresh forward so the whole prefill is one fused program."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        h, _ = M.forward(params, cfg, tokens,
+                         frontend_embeds=batch.get("frontend_embeds"),
+                         positions=batch.get("positions"))
+        logits = M.unembed(params, cfg, h[:, -1:])
+        return logits
+
+    return prefill_step
+
+
+def make_decode_step(cfg) -> Callable:
+    def decode_step(params, caches, token, pos):
+        logits, caches = M.decode_step(params, cfg, token, caches, pos)
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return next_token, logits, caches
+
+    return decode_step
+
+
+def init_train_state(key, cfg) -> Tuple[Any, Any]:
+    params = M.init_params(key, cfg)
+    return params, adamw_init(params)

@@ -1,0 +1,408 @@
+"""Architecture stacks: dense/MoE/VLM decoders, zamba2 hybrid, whisper enc-dec,
+RWKV6 — each with train/prefill forward and single-token cached decode.
+
+All uniform stacks scan over stacked per-layer parameters (jax.lax.scan) so a
+60-layer model lowers to a single rolled HLO loop — this keeps the 80-cell
+dry-run compile time tractable on the CPU backend and is also what a real
+deployment wants (small executable, layer-granular remat).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_norm, apply_rope, attention,
+                                 attention_qkv, cache_update,
+                                 constrain_residual, decode_attention,
+                                 init_attention, init_mlp, init_norm, linear,
+                                 mlp, rope_angles)
+from repro.models.moe import init_moe, moe_ffn
+
+REMAT_POLICY = jax.checkpoint_policies.nothing_saveable
+
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn, policy=REMAT_POLICY) if cfg.remat else fn
+
+
+# ===========================================================================
+# Uniform decoder stack (dense / moe / vlm)
+# ===========================================================================
+
+def init_decoder_layer(key, cfg) -> dict:
+    ks = jax.random.split(key, 4)
+    bias = cfg.norm == "layernorm"
+    p = {
+        "ln1": init_norm(cfg.d_model, cfg.norm),
+        "attn": init_attention(ks[0], cfg, bias=bias),
+        "ln2": init_norm(cfg.d_model, cfg.norm),
+    }
+    if cfg.is_moe:
+        p["moe"] = init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.act, bias=bias)
+    return p
+
+
+def init_decoder_stack(key, cfg) -> dict:
+    """Stacked params: every leaf gains a leading (n_layers,) dim."""
+    keys = jax.random.split(key, cfg.n_layers)
+    return jax.tree.map(lambda *xs: jnp.stack(xs),
+                        *[init_decoder_layer(k, cfg) for k in keys])
+
+
+def decoder_layer(p: dict, x: jax.Array, cfg, angles) -> Tuple[jax.Array, jax.Array]:
+    h = x + attention(p["attn"], apply_norm(p["ln1"], x, cfg.norm), cfg,
+                      angles=angles, causal=True)
+    ff_in = apply_norm(p["ln2"], h, cfg.norm)
+    if cfg.is_moe:
+        y, aux = moe_ffn(p["moe"], ff_in, cfg)
+    else:
+        y, aux = mlp(p["mlp"], ff_in, cfg.act), jnp.float32(0)
+    return h + y, aux
+
+
+def decoder_stack(params: dict, x: jax.Array, cfg, angles) -> Tuple[jax.Array, jax.Array]:
+    def body(carry, lp):
+        h, aux = carry
+        h, a = decoder_layer(lp, h, cfg, angles)
+        return (constrain_residual(h), aux + a), None
+
+    (x, aux), _ = lax.scan(_maybe_remat(body, cfg), (x, jnp.float32(0)), params,
+                           unroll=cfg.lower_unroll)
+    return x, aux
+
+
+def decoder_layer_decode(p: dict, x: jax.Array, cfg, angles, k_cache, v_cache,
+                         pos) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token step.  x: (B, 1, d); caches: (B, S, Hkv, hd)."""
+    B = x.shape[0]
+    h_in = apply_norm(p["ln1"], x, cfg.norm)
+    q, k, v = attention_qkv(p["attn"], h_in, cfg, angles)
+    k_cache = cache_update(k_cache, k, pos)
+    v_cache = cache_update(v_cache, v, pos)
+    o = decode_attention(q, k_cache, v_cache, pos)
+    h = x + linear(p["attn"]["wo"], o.reshape(B, 1, cfg.n_heads * cfg.head_dim))
+    ff_in = apply_norm(p["ln2"], h, cfg.norm)
+    if cfg.is_moe:
+        y, _ = moe_ffn(p["moe"], ff_in, cfg)
+    else:
+        y = mlp(p["mlp"], ff_in, cfg.act)
+    return h + y, k_cache, v_cache
+
+
+def decoder_stack_decode(params: dict, x: jax.Array, cfg, angles, caches: dict,
+                         pos) -> Tuple[jax.Array, dict]:
+    def body(h, inp):
+        lp, kc, vc = inp
+        h, kc, vc = decoder_layer_decode(lp, h, cfg, angles, kc, vc, pos)
+        return h, (kc, vc)
+
+    x, (k_new, v_new) = lax.scan(body, x, (params, caches["k"], caches["v"]),
+                                 unroll=cfg.lower_unroll)
+    return x, {"k": k_new, "v": v_new}
+
+
+def init_kv_caches(cfg, batch: int, seq: int, n_layers: Optional[int] = None,
+                   dtype=jnp.bfloat16) -> dict:
+    L = n_layers if n_layers is not None else cfg.n_layers
+    shape = (L, batch, seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ===========================================================================
+# Zamba2 hybrid: Mamba2 backbone + ONE shared attention/MLP block
+# ===========================================================================
+
+def init_hybrid(key, cfg) -> dict:
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    n_inv = cfg.n_layers // cfg.shared_attn_period
+    mamba = jax.tree.map(lambda *xs: jnp.stack(xs),
+                         *[{"norm": init_norm(cfg.d_model, cfg.norm),
+                            "mamba": ssm_mod.init_mamba2(ks[i], cfg)}
+                           for i in range(cfg.n_layers)])
+    import dataclasses
+    shared_cfg = cfg
+    return {
+        "mamba_layers": mamba,
+        "shared_ln": init_norm(2 * cfg.d_model, cfg.norm),
+        "shared_attn": init_attention(ks[-4], cfg, d_in=2 * cfg.d_model),
+        "shared_ln2": init_norm(cfg.d_model, cfg.norm),
+        "shared_mlp": init_mlp(ks[-3], cfg.d_model, cfg.d_ff, cfg.act),
+        # per-invocation output projectors (the zamba2 LoRA specialisation)
+        "inv_proj": jax.random.normal(ks[-2], (n_inv, cfg.d_model, cfg.d_model),
+                                      jnp.float32).astype(jnp.bfloat16) * 0.02,
+    }
+
+
+def _shared_block(params: dict, h: jax.Array, emb0: jax.Array, cfg, inv: int,
+                  angles, cache: Optional[Tuple] = None, pos=None):
+    """Shared attention+MLP block on concat(h, original embeddings)."""
+    B = h.shape[0]
+    zin = jnp.concatenate([h, emb0], axis=-1)                  # (B, L, 2d)
+    zin = constrain_residual(apply_norm(params["shared_ln"], zin, cfg.norm))
+    if cache is None:
+        a = attention(params["shared_attn"], zin, cfg, angles=angles, causal=True)
+        new_cache = None
+    else:
+        k_cache, v_cache = cache
+        q, k, v = attention_qkv(params["shared_attn"], zin, cfg, angles)
+        k_cache = cache_update(k_cache, k, pos)
+        v_cache = cache_update(v_cache, v, pos)
+        o = decode_attention(q, k_cache, v_cache, pos)
+        a = linear(params["shared_attn"]["wo"],
+                   o.reshape(B, 1, cfg.n_heads * cfg.head_dim))
+        new_cache = (k_cache, v_cache)
+    a = a @ params["inv_proj"][inv]
+    h = h + a
+    h = h + mlp(params["shared_mlp"], apply_norm(params["shared_ln2"], h, cfg.norm),
+                cfg.act)
+    return h, new_cache
+
+
+def hybrid_forward(params: dict, x: jax.Array, cfg, angles) -> jax.Array:
+    """Train/prefill.  Python loop over layers (38 heterogeneous steps)."""
+    emb0 = x
+    period = cfg.shared_attn_period
+    mamba_layers = params["mamba_layers"]
+
+    def mamba_step(h, lp):
+        y, _ = ssm_mod.mamba2_block(lp["mamba"], apply_norm(lp["norm"], h, cfg.norm), cfg)
+        return constrain_residual(h + y)
+
+    step_fn = _maybe_remat(lambda h, lp: (mamba_step(h, lp), None), cfg)
+
+    def shared_fn(h, e, g):
+        return _shared_block(params, h, e, cfg, g, angles)[0]
+
+    if cfg.remat:
+        shared_fn = jax.checkpoint(shared_fn, policy=REMAT_POLICY,
+                                   static_argnums=(2,))
+    n_inv = cfg.n_layers // period
+    for g in range(n_inv):
+        group = jax.tree.map(lambda t, g=g: t[g * period:(g + 1) * period], mamba_layers)
+        x, _ = lax.scan(step_fn, x, group, unroll=cfg.lower_unroll)
+        x = shared_fn(x, emb0, g)
+    rest = cfg.n_layers - n_inv * period
+    if rest:
+        tail = jax.tree.map(lambda t: t[-rest:], mamba_layers)
+        x, _ = lax.scan(step_fn, x, tail, unroll=cfg.lower_unroll)
+    return x
+
+
+def hybrid_decode(params: dict, x: jax.Array, cfg, angles, caches: dict, pos
+                  ) -> Tuple[jax.Array, dict]:
+    emb0 = x
+    period = cfg.shared_attn_period
+    n_inv = cfg.n_layers // period
+
+    def mamba_step(h, inp):
+        lp, st = inp
+        y, st_new = ssm_mod.mamba2_block(lp["mamba"], apply_norm(lp["norm"], h, cfg.norm),
+                                         cfg, state=st)
+        return h + y, st_new
+
+    new_ssm, new_kv_k, new_kv_v = [], [], []
+    mamba_layers = params["mamba_layers"]
+    for g in range(n_inv):
+        sl = lambda t, g=g: t[g * period:(g + 1) * period]
+        group = jax.tree.map(sl, mamba_layers)
+        states = jax.tree.map(sl, caches["ssm"])
+        x, st = lax.scan(mamba_step, x, (group, states), unroll=cfg.lower_unroll)
+        new_ssm.append(st)
+        kv = (caches["k"][g], caches["v"][g])
+        x, kv = _shared_block(params, x, emb0, cfg, g, angles, cache=kv, pos=pos)
+        new_kv_k.append(kv[0])
+        new_kv_v.append(kv[1])
+    rest = cfg.n_layers - n_inv * period
+    if rest:
+        tail = jax.tree.map(lambda t: t[-rest:], mamba_layers)
+        tail_st = jax.tree.map(lambda t: t[-rest:], caches["ssm"])
+        x, st = lax.scan(mamba_step, x, (tail, tail_st), unroll=cfg.lower_unroll)
+        new_ssm.append(st)
+    new_caches = {
+        "ssm": jax.tree.map(lambda *xs: jnp.concatenate(xs), *new_ssm),
+        "k": jnp.stack(new_kv_k),
+        "v": jnp.stack(new_kv_v),
+    }
+    return x, new_caches
+
+
+def init_hybrid_caches(cfg, batch: int, seq: int) -> dict:
+    n_inv = cfg.n_layers // cfg.shared_attn_period
+    kv = init_kv_caches(cfg, batch, seq, n_layers=n_inv)
+    ssm_states = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[ssm_mod.init_mamba2_state(cfg, batch) for _ in range(cfg.n_layers)])
+    return {"ssm": ssm_states, "k": kv["k"], "v": kv["v"]}
+
+
+# ===========================================================================
+# Whisper enc-dec
+# ===========================================================================
+
+def init_encoder_layer(key, cfg) -> dict:
+    ks = jax.random.split(key, 2)
+    return {"ln1": init_norm(cfg.d_model, cfg.norm),
+            "attn": init_attention(ks[0], cfg, bias=True),
+            "ln2": init_norm(cfg.d_model, cfg.norm),
+            "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, bias=True)}
+
+
+def init_crossdec_layer(key, cfg) -> dict:
+    ks = jax.random.split(key, 3)
+    return {"ln1": init_norm(cfg.d_model, cfg.norm),
+            "attn": init_attention(ks[0], cfg, bias=True),
+            "lnx": init_norm(cfg.d_model, cfg.norm),
+            "xattn": init_attention(ks[1], cfg, bias=True),
+            "ln2": init_norm(cfg.d_model, cfg.norm),
+            "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.act, bias=True)}
+
+
+def init_encdec(key, cfg) -> dict:
+    ks = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ks[0], cfg.n_encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "encoder": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                *[init_encoder_layer(k, cfg) for k in enc_keys]),
+        "enc_ln": init_norm(cfg.d_model, cfg.norm),
+        "enc_pos": jax.random.normal(ks[2], (cfg.n_frontend_tokens, cfg.d_model),
+                                     jnp.float32).astype(jnp.bfloat16) * 0.02,
+        "decoder": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                *[init_crossdec_layer(k, cfg) for k in dec_keys]),
+    }
+
+
+def encoder_forward(params: dict, frames: jax.Array, cfg) -> jax.Array:
+    """frames: (B, F, d) — precomputed conv-frontend embeddings (STUB)."""
+    x = frames + params["enc_pos"][None].astype(frames.dtype)
+
+    def body(h, lp):
+        h = h + attention(lp["attn"], apply_norm(lp["ln1"], h, cfg.norm), cfg,
+                          angles=None, causal=False)
+        h = h + mlp(lp["mlp"], apply_norm(lp["ln2"], h, cfg.norm), cfg.act)
+        return constrain_residual(h), None
+
+    x, _ = lax.scan(_maybe_remat(body, cfg), x, params["encoder"],
+                    unroll=cfg.lower_unroll)
+    return apply_norm(params["enc_ln"], x, cfg.norm)
+
+
+def cross_kv(params: dict, memory: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    """Per-decoder-layer cross K/V from encoder memory: (L, B, F, Hkv, hd)."""
+    def one(lp):
+        B, F, _ = memory.shape
+        k = linear(lp["xattn"]["wk"], memory).reshape(B, F, cfg.n_kv_heads, cfg.head_dim)
+        v = linear(lp["xattn"]["wv"], memory).reshape(B, F, cfg.n_kv_heads, cfg.head_dim)
+        return k, v
+
+    return jax.vmap(one)(params["decoder"])
+
+
+def encdec_decoder(params: dict, x: jax.Array, cfg, memory: jax.Array) -> jax.Array:
+    """Train/prefill decoder pass (full sequence) with cross-attention."""
+    def body(h, lp):
+        h = h + attention(lp["attn"], apply_norm(lp["ln1"], h, cfg.norm), cfg,
+                          angles=None, causal=True)
+        B, S, _ = h.shape
+        zin = apply_norm(lp["lnx"], h, cfg.norm)
+        k = linear(lp["xattn"]["wk"], memory).reshape(B, -1, cfg.n_kv_heads, cfg.head_dim)
+        v = linear(lp["xattn"]["wv"], memory).reshape(B, -1, cfg.n_kv_heads, cfg.head_dim)
+        h = h + attention(lp["xattn"], zin, cfg, kv=(k, v))
+        h = h + mlp(lp["mlp"], apply_norm(lp["ln2"], h, cfg.norm), cfg.act)
+        return constrain_residual(h), None
+
+    x, _ = lax.scan(_maybe_remat(body, cfg), x, params["decoder"],
+                    unroll=cfg.lower_unroll)
+    return x
+
+
+def encdec_decode(params: dict, x: jax.Array, cfg, caches: dict, pos
+                  ) -> Tuple[jax.Array, dict]:
+    """Single-token decode.  caches: k/v self caches + precomputed cross k/v."""
+    def body(h, inp):
+        lp, kc, vc, xk, xv = inp
+        B = h.shape[0]
+        hin = apply_norm(lp["ln1"], h, cfg.norm)
+        q, k, v = attention_qkv(lp["attn"], hin, cfg, None)
+        kc = cache_update(kc, k, pos)
+        vc = cache_update(vc, v, pos)
+        o = decode_attention(q, kc, vc, pos)
+        h = h + linear(lp["attn"]["wo"], o.reshape(B, 1, cfg.n_heads * cfg.head_dim))
+        # cross-attention over fixed memory
+        zin = apply_norm(lp["lnx"], h, cfg.norm)
+        qx, _, _ = attention_qkv(lp["xattn"], zin, cfg, None)
+        F = xk.shape[1]
+        ox = decode_attention(qx, xk, xv, jnp.int32(F - 1))
+        h = h + linear(lp["xattn"]["wo"], ox.reshape(B, 1, cfg.n_heads * cfg.head_dim))
+        h = h + mlp(lp["mlp"], apply_norm(lp["ln2"], h, cfg.norm), cfg.act)
+        return h, (kc, vc)
+
+    x, (k_new, v_new) = lax.scan(body, x, (params["decoder"], caches["k"], caches["v"],
+                                           caches["xk"], caches["xv"]),
+                                 unroll=cfg.lower_unroll)
+    return x, {**caches, "k": k_new, "v": v_new}
+
+
+# ===========================================================================
+# RWKV6 stack
+# ===========================================================================
+
+def init_rwkv_layer(key, cfg) -> dict:
+    ks = jax.random.split(key, 2)
+    return {"ln1": init_norm(cfg.d_model, cfg.norm),
+            "tm": rwkv_mod.init_rwkv6_timemix(ks[0], cfg),
+            "ln2": init_norm(cfg.d_model, cfg.norm),
+            "cm": rwkv_mod.init_rwkv6_channelmix(ks[1], cfg)}
+
+
+def init_rwkv_stack(key, cfg) -> dict:
+    keys = jax.random.split(key, cfg.n_layers)
+    return jax.tree.map(lambda *xs: jnp.stack(xs),
+                        *[init_rwkv_layer(k, cfg) for k in keys])
+
+
+def rwkv_stack(params: dict, x: jax.Array, cfg) -> jax.Array:
+    def body(h, lp):
+        y, _ = rwkv_mod.rwkv6_timemix(lp["tm"], apply_norm(lp["ln1"], h, cfg.norm), cfg)
+        h = h + y
+        y, _ = rwkv_mod.rwkv6_channelmix(lp["cm"], apply_norm(lp["ln2"], h, cfg.norm), cfg)
+        return constrain_residual(h + y), None
+
+    x, _ = lax.scan(_maybe_remat(lambda h, lp: body(h, lp), cfg), x, params,
+                    unroll=cfg.lower_unroll)
+    return x
+
+
+def rwkv_stack_decode(params: dict, x: jax.Array, cfg, caches: dict
+                      ) -> Tuple[jax.Array, dict]:
+    def body(h, inp):
+        lp, st = inp
+        y, tm_new = rwkv_mod.rwkv6_timemix(
+            lp["tm"], apply_norm(lp["ln1"], h, cfg.norm), cfg,
+            state={"shift": st["tm_shift"], "wkv": st["wkv"]})
+        h = h + y
+        y, cm_new = rwkv_mod.rwkv6_channelmix(
+            lp["cm"], apply_norm(lp["ln2"], h, cfg.norm), cfg,
+            state={"shift": st["cm_shift"]})
+        h = h + y
+        st_new = {"tm_shift": tm_new["shift"].astype(st["tm_shift"].dtype),
+                  "wkv": tm_new["wkv"],
+                  "cm_shift": cm_new["shift"].astype(st["cm_shift"].dtype)}
+        return h, st_new
+
+    x, new_states = lax.scan(body, x, (params, caches), unroll=cfg.lower_unroll)
+    return x, new_states
+
+
+def init_rwkv_caches(cfg, batch: int) -> dict:
+    states = [rwkv_mod.init_rwkv6_state(cfg, batch) for _ in range(cfg.n_layers)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)

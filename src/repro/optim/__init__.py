@@ -1,0 +1,7 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               clip_by_global_norm)
+from repro.optim.compression import (compress_int8, decompress_int8,
+                                     compressed_psum_spec)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "clip_by_global_norm",
+           "compress_int8", "decompress_int8", "compressed_psum_spec"]

@@ -1,0 +1,50 @@
+"""Int8 gradient compression with error feedback — a distributed-optimization
+option for the slow inter-pod axis.
+
+Gradients are quantised to int8 with a per-tensor fp32 scale before the
+cross-pod reduction; the quantisation error is fed back into the next step's
+gradient (error-feedback keeps SGD-style convergence guarantees).  The
+compressed representation quarters the bytes moved on the 'pod' axis of the
+multi-pod mesh, directly shrinking the collective roofline term for inter-pod
+data parallelism.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compressed_psum_spec(g: jax.Array):
+    """Bytes on the wire: int8 payload + one fp32 scale (vs 4B/elem fp32)."""
+    return g.size + 4
+
+
+def ef_compress_tree(grads, errors):
+    """Apply error feedback then compress each leaf.  Returns (q_tree,
+    scale_tree, new_error_tree)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = compress_int8(corrected)
+        deq = decompress_int8(q, s)
+        return q, s, corrected - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(errors)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]),
+            treedef.unflatten([o[2] for o in outs]))

@@ -1,0 +1,5 @@
+from repro.runtime.fault_tolerance import (ElasticPolicy, HeartbeatMonitor,
+                                           RestartPolicy, StragglerMitigator)
+
+__all__ = ["ElasticPolicy", "HeartbeatMonitor", "RestartPolicy",
+           "StragglerMitigator"]

@@ -1,0 +1,141 @@
+"""Fault-tolerance runtime: heartbeats, restart policy, elastic re-meshing,
+straggler mitigation.
+
+On real multi-host TPU deployments these hooks sit between the cluster
+scheduler and the training/serving driver; on this single-host container they
+are exercised by the integration tests through simulated clocks/failures.
+The mechanisms are the production ones:
+
+  * HeartbeatMonitor — per-host liveness with timeout-based failure detection
+    (the launcher scripts run one heartbeat thread per host process).
+  * RestartPolicy    — bounded exponential backoff + checkpoint-step replay
+    accounting (at-least-once step semantics; data pipeline is pure in
+    (seed, step) so replays are bit-identical).
+  * ElasticPolicy    — decides the new mesh when hosts are lost: shrink to
+    the largest feasible (data) axis while preserving 'model'=16 (TP degree
+    is a checkpoint-layout invariant here; 'data'/'pod' are elastic).
+  * StragglerMitigator — duplicate-issue of the slowest shards' work (backup
+    tasks) once their latency exceeds p50 * factor, first-result-wins.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+
+class HeartbeatMonitor:
+    def __init__(self, hosts: Sequence[str], *, timeout_s: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout_s = timeout_s
+        self.clock = clock
+        now = clock()
+        self.last_seen: Dict[str, float] = {h: now for h in hosts}
+
+    def beat(self, host: str) -> None:
+        self.last_seen[host] = self.clock()
+
+    def dead_hosts(self) -> List[str]:
+        now = self.clock()
+        return [h for h, t in self.last_seen.items()
+                if now - t > self.timeout_s]
+
+    def alive_hosts(self) -> List[str]:
+        dead = set(self.dead_hosts())
+        return [h for h in self.last_seen if h not in dead]
+
+
+@dataclass
+class RestartPolicy:
+    max_restarts: int = 100
+    base_backoff_s: float = 5.0
+    max_backoff_s: float = 300.0
+    restarts: int = 0
+
+    def next_backoff(self) -> Optional[float]:
+        """None = give up."""
+        if self.restarts >= self.max_restarts:
+            return None
+        b = min(self.base_backoff_s * (2 ** min(self.restarts, 6)),
+                self.max_backoff_s)
+        self.restarts += 1
+        return b
+
+    def replay_from(self, checkpoint_step: Optional[int]) -> int:
+        """Step to resume at (checkpoints are post-step, replay is exact
+        because the data pipeline is pure in (seed, step))."""
+        return 0 if checkpoint_step is None else checkpoint_step + 1
+
+
+@dataclass
+class ElasticPolicy:
+    """Shrink/grow the mesh as hosts come and go.  'model' (TP) stays fixed:
+    parameter layout depends on it; 'pod'/'data' absorb the change.  The
+    checkpoint store is mesh-agnostic, so restoring onto the new mesh is a
+    device_put with new shardings (see checkpoint.load_checkpoint)."""
+    model_degree: int = 16
+    min_data_degree: int = 1
+
+    def propose_mesh(self, chips_alive: int) -> Optional[Tuple[Tuple[int, ...],
+                                                               Tuple[str, ...]]]:
+        usable = (chips_alive // self.model_degree) * self.model_degree
+        data = usable // self.model_degree
+        if data < self.min_data_degree:
+            return None
+        # prefer splitting an explicit 'pod' axis when data is large & even
+        if data % 16 == 0 and data // 16 >= 2:
+            return ((data // 16, 16, self.model_degree), ("pod", "data", "model"))
+        return ((data, self.model_degree), ("data", "model"))
+
+    def global_batch_for(self, base_global_batch: int, base_data: int,
+                         new_data: int) -> int:
+        """Keep per-replica batch constant; scale global batch with the mesh
+        (linear-scaling rule; optimizer LR schedule consumes tokens, so the
+        token-based schedule is unchanged)."""
+        per = base_global_batch // base_data
+        return per * new_data
+
+
+@dataclass
+class _ShardRecord:
+    issued_at: float
+    done: bool = False
+    backup_issued: bool = False
+
+
+class StragglerMitigator:
+    """Track per-shard latency; issue backup work for outliers."""
+
+    def __init__(self, *, factor: float = 3.0, min_history: int = 8,
+                 clock: Callable[[], float] = time.monotonic):
+        self.factor = factor
+        self.min_history = min_history
+        self.clock = clock
+        self.history: List[float] = []
+        self.inflight: Dict[str, _ShardRecord] = {}
+
+    def issue(self, shard_id: str) -> None:
+        self.inflight[shard_id] = _ShardRecord(issued_at=self.clock())
+
+    def complete(self, shard_id: str) -> None:
+        rec = self.inflight.pop(shard_id, None)
+        if rec is not None and not rec.done:
+            self.history.append(self.clock() - rec.issued_at)
+            if len(self.history) > 256:
+                self.history = self.history[-128:]
+
+    def backups_needed(self) -> List[str]:
+        """Shards whose latency exceeds p50 * factor — issue duplicates
+        (first result wins; pure (seed, step) shards make this safe)."""
+        if len(self.history) < self.min_history:
+            return []
+        hist = sorted(self.history)
+        p50 = hist[len(hist) // 2]
+        now = self.clock()
+        out = []
+        for sid, rec in self.inflight.items():
+            if not rec.backup_issued and now - rec.issued_at > p50 * self.factor:
+                rec.backup_issued = True
+                out.append(sid)
+        return out

@@ -1,0 +1,5 @@
+from repro.serving.batching import BatchingQueue, Request
+from repro.serving.rag import RagPipeline
+from repro.serving.semantic_cache import SemanticCache
+
+__all__ = ["BatchingQueue", "Request", "RagPipeline", "SemanticCache"]

@@ -1,0 +1,89 @@
+"""Request batching with deadlines and straggler requeue.
+
+The serving loop collects requests into fixed-size batches (padding the tail
+with no-op slots so compiled shapes never change), honours a max-wait
+deadline so p99 latency is bounded at low load, and requeues work from shards
+that miss their deadline (first-result-wins, paired with
+runtime.StragglerMitigator).
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    payload: Any
+    enqueued_at: float = field(default_factory=time.monotonic)
+    result: Any = None
+    done: bool = False
+
+
+class BatchingQueue:
+    def __init__(self, batch_size: int, *, max_wait_s: float = 0.01,
+                 clock: Callable[[], float] = time.monotonic):
+        self.batch_size = batch_size
+        self.max_wait_s = max_wait_s
+        self.clock = clock
+        self.pending: Deque[Request] = deque()
+        self._next_rid = 0
+
+    def submit(self, payload: Any) -> Request:
+        req = Request(self._next_rid, payload, enqueued_at=self.clock())
+        self._next_rid += 1
+        self.pending.append(req)
+        return req
+
+    def ready(self) -> bool:
+        if not self.pending:
+            return False
+        if len(self.pending) >= self.batch_size:
+            return True
+        return self.clock() - self.pending[0].enqueued_at >= self.max_wait_s
+
+    def next_batch(self) -> List[Optional[Request]]:
+        """Fixed-size batch: real requests + None padding (compiled-shape
+        stability — the engine scores padded slots against zero queries)."""
+        out: List[Optional[Request]] = []
+        while self.pending and len(out) < self.batch_size:
+            out.append(self.pending.popleft())
+        out.extend([None] * (self.batch_size - len(out)))
+        return out
+
+    def requeue(self, reqs: List[Request]) -> None:
+        for r in reqs:
+            if not r.done:
+                self.pending.appendleft(r)
+
+
+def run_query_batches(engine_fn: Callable[[np.ndarray], Any],
+                      queue: BatchingQueue, d: int, *,
+                      max_batches: Optional[int] = None) -> int:
+    """Drain the queue through the engine; returns #batches executed."""
+    n = 0
+    while queue.pending and (max_batches is None or n < max_batches):
+        batch = queue.next_batch()
+        q = np.zeros((len(batch), d), np.float32)
+        for i, r in enumerate(batch):
+            if r is not None:
+                q[i] = r.payload
+        results = engine_fn(q)
+        for i, r in enumerate(batch):
+            if r is not None:
+                r.result = jax_index(results, i)
+                r.done = True
+        n += 1
+    return n
+
+
+def jax_index(results, i):
+    if isinstance(results, tuple):
+        return tuple(np.asarray(r)[i] for r in results)
+    return np.asarray(results)[i]

@@ -1,0 +1,87 @@
+"""Retrieval-augmented serving: embed -> PilotANN search -> augmented decode.
+
+This is the paper's deployment context (RAG / retrieval engines): the vector
+search engine is the first-class serving feature, and the LM stack supplies
+both the query embeddings and the generator.  The pipeline is deliberately
+modular: any assigned architecture plugs in as the generator (the retrieval
+layer never touches the LM's internals — DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PilotANNIndex, SearchParams
+from repro.models import decode_step as model_decode
+from repro.models import forward as model_forward
+from repro.models import init_caches
+
+
+@dataclass
+class RagPipeline:
+    index: PilotANNIndex
+    params: dict
+    cfg: object
+    search_params: SearchParams = None
+    max_new_tokens: int = 8
+
+    def __post_init__(self):
+        if self.search_params is None:
+            self.search_params = SearchParams(k=4, ef=64, ef_pilot=64)
+
+    # -- embedding: mean-pooled final hidden state of the LM --------------
+    def embed(self, tokens: np.ndarray) -> np.ndarray:
+        h, _ = model_forward(self.params, self.cfg, jnp.asarray(tokens))
+        emb = jnp.mean(h.astype(jnp.float32), axis=1)
+        emb = emb / jnp.maximum(jnp.linalg.norm(emb, axis=-1, keepdims=True), 1e-6)
+        return np.asarray(emb)
+
+    def embed_to_corpus_dim(self, tokens: np.ndarray) -> np.ndarray:
+        emb = self.embed(tokens)
+        d = self.index.d
+        if emb.shape[1] >= d:
+            return np.ascontiguousarray(emb[:, :d])
+        reps = -(-d // emb.shape[1])
+        return np.ascontiguousarray(np.tile(emb, (1, reps))[:, :d])
+
+    # -- retrieve ---------------------------------------------------------
+    def retrieve(self, query_tokens: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        q = self.embed_to_corpus_dim(query_tokens)
+        ids, dists, _ = self.index.search(q, self.search_params)
+        return ids, dists
+
+    # -- generate with retrieved context ----------------------------------
+    def generate(self, query_tokens: np.ndarray,
+                 context_tokens_for: Callable[[int], np.ndarray]
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """Greedy decode conditioned on retrieved passages.  Returns
+        (new_tokens (B, max_new), retrieved ids (B, k))."""
+        ids, _ = self.retrieve(query_tokens)
+        B = query_tokens.shape[0]
+        ctx = np.stack([
+            np.concatenate([context_tokens_for(int(ids[b, 0])),
+                            query_tokens[b]])[-query_tokens.shape[1]:]
+            for b in range(B)])
+        seq = ctx.shape[1] + self.max_new_tokens
+        caches = init_caches(self.params, self.cfg, B, seq)
+        # prefill by stepping (smoke-scale; production uses the prefill step)
+        out = np.zeros((B, self.max_new_tokens), np.int32)
+        tok = jnp.asarray(ctx[:, :1])
+        pos = 0
+        for t in range(1, ctx.shape[1]):
+            _, caches = model_decode(self.params, self.cfg, tok, caches,
+                                     jnp.int32(pos))
+            tok = jnp.asarray(ctx[:, t:t + 1])
+            pos += 1
+        for t in range(self.max_new_tokens):
+            logits, caches = model_decode(self.params, self.cfg, tok, caches,
+                                          jnp.int32(pos))
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            out[:, t] = np.asarray(tok)[:, 0]
+            pos += 1
+        return out, ids

@@ -1,0 +1,62 @@
+"""Semantic cache (GPTCache-style — one of the paper's motivating workloads):
+short-circuit generation when a semantically-near query was already answered.
+
+The cache IS a PilotANN index over past query embeddings; hits are distance-
+thresholded.  Inserts rebuild lazily in batches (graph construction is the
+offline path, exactly like the paper's index build)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import IndexConfig, PilotANNIndex, SearchParams
+
+
+@dataclass
+class SemanticCache:
+    dim: int
+    threshold: float = 0.25          # max squared distance for a hit
+    rebuild_every: int = 256
+    index_cfg: IndexConfig = field(default_factory=lambda: IndexConfig(
+        R=16, sample_ratio=0.5, svd_ratio=0.5, n_entry=512))
+
+    _keys: List[np.ndarray] = field(default_factory=list)
+    _values: List[Any] = field(default_factory=list)
+    _index: Optional[PilotANNIndex] = None
+    _staged: int = 0
+    hits: int = 0
+    misses: int = 0
+
+    def lookup(self, emb: np.ndarray) -> Optional[Any]:
+        if self._index is None:
+            self.misses += 1
+            return None
+        params = SearchParams(k=1, ef=32, ef_pilot=32)
+        ids, dists, _ = self._index.search(emb[None, :], params)
+        if dists[0, 0] <= self.threshold:
+            self.hits += 1
+            return self._values[int(ids[0, 0])]
+        self.misses += 1
+        return None
+
+    def insert(self, emb: np.ndarray, value: Any) -> None:
+        self._keys.append(np.asarray(emb, np.float32))
+        self._values.append(value)
+        self._staged += 1
+        if self._index is None and len(self._keys) >= 64:
+            self._rebuild()
+        elif self._staged >= self.rebuild_every:
+            self._rebuild()
+
+    def _rebuild(self) -> None:
+        x = np.stack(self._keys)
+        self._index = PilotANNIndex(self.index_cfg, x)
+        self._staged = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0

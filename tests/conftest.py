@@ -1,0 +1,28 @@
+import os
+
+# Smoke tests and benches must see ONE device; only launch/dryrun sets the
+# 512-device flag (in its own process).
+os.environ.pop("XLA_FLAGS", None)
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    from repro.data import synthetic_vectors
+    return synthetic_vectors(3000, 32, n_queries=128, seed=1)
+
+
+@pytest.fixture(scope="session")
+def built_index(small_dataset):
+    from repro.core import IndexConfig, PilotANNIndex
+    return PilotANNIndex(
+        IndexConfig(R=16, sample_ratio=0.35, svd_ratio=0.5, n_entry=512,
+                    build_method="exact"),
+        small_dataset.vectors)

@@ -1,0 +1,173 @@
+"""Unit + property tests for the core primitives: SVD split, bloom filters,
+CSR subgraphs, graph build, FES clustering."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import bloom as B
+from repro.core import csr
+from repro.core import graph_build as GB
+from repro.core.fes import build_fes, fes_select_bruteforce, fes_select_ref
+from repro.core.svd import svd_fit
+
+
+# ---------------------------------------------------------------------------
+# SVD (§4.1): rotation preserves distances; primary+residual decompose exactly
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(4, 48), st.floats(0.1, 1.0), st.integers(0, 2**31 - 1))
+def test_svd_distance_decomposition(d, ratio, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(200, d)).astype(np.float32)
+    q = rng.normal(size=(16, d)).astype(np.float32)
+    red = svd_fit(x, ratio, sample=128, seed=0)
+    xp, xr = red.split(x)
+    qp, qr = red.split(q)
+    d_full = ((q[:, None] - x[None]) ** 2).sum(-1)
+    d_p = ((qp[:, None] - xp[None]) ** 2).sum(-1)
+    d_r = ((qr[:, None] - xr[None]) ** 2).sum(-1)
+    np.testing.assert_allclose(d_p + d_r, d_full, rtol=2e-3, atol=2e-3)
+    assert 1 <= red.d_primary <= d
+
+
+def test_svd_primary_captures_most_variance():
+    rng = np.random.default_rng(0)
+    scales = np.linspace(3, 0.1, 24).astype(np.float32)
+    x = rng.normal(size=(2000, 24)).astype(np.float32) * scales
+    red = svd_fit(x, 0.5, seed=0)
+    xp, xr = red.split(x)
+    assert (xp ** 2).sum() > 2.5 * (xr ** 2).sum()
+
+
+# ---------------------------------------------------------------------------
+# Bloom (§4.3): NO false negatives ever; exact bitmap is exact
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=25)
+@given(st.lists(st.integers(0, 100000), min_size=1, max_size=200),
+       st.integers(1024, 16384))
+def test_bloom_no_false_negatives(ids, n_bits):
+    ids = np.array(ids, np.int32).reshape(1, -1)
+    filt = B.bloom_init(1, n_bits)
+    filt = B.bloom_insert(filt, jnp.asarray(ids),
+                          jnp.ones(ids.shape, bool))
+    assert bool(B.bloom_test(filt, jnp.asarray(ids)).all())
+
+
+def test_bloom_false_positive_rate_reasonable():
+    rng = np.random.default_rng(0)
+    inserted = rng.choice(1 << 20, size=(1, 1500), replace=False).astype(np.int32)
+    others = rng.choice(1 << 20, size=(1, 4000), replace=False).astype(np.int32)
+    others = others[:, ~np.isin(others[0], inserted[0])][None, 0, :2000]
+    filt = B.bloom_init(1, 16384)
+    filt = B.bloom_insert(filt, jnp.asarray(inserted),
+                          jnp.ones(inserted.shape, bool))
+    fp = float(B.bloom_test(filt, jnp.asarray(others)).mean())
+    assert fp < 0.15, fp
+
+
+def test_exact_bitmap_no_false_positives():
+    ids = np.array([[1, 5, 9]], np.int32)
+    filt = B.exact_init(1, 100)
+    filt = B.exact_insert(filt, jnp.asarray(ids), jnp.ones((1, 3), bool))
+    probe = np.array([[1, 2, 5, 6, 9, 10]], np.int32)
+    got = np.asarray(B.exact_test(filt, jnp.asarray(probe)))[0]
+    assert got.tolist() == [True, False, True, False, True, False]
+
+
+def test_bloom_mask_respected():
+    ids = np.array([[3, 4]], np.int32)
+    filt = B.bloom_init(1, 4096)
+    filt = B.bloom_insert(filt, jnp.asarray(ids),
+                          jnp.asarray([[True, False]]))
+    assert bool(B.bloom_test(filt, jnp.asarray([[3]]))[0, 0])
+    assert not bool(B.bloom_test(filt, jnp.asarray([[4]]))[0, 0])
+
+
+# ---------------------------------------------------------------------------
+# CSR / subgraph (§4.3)
+# ---------------------------------------------------------------------------
+
+def _toy_graph(n=200, R=8, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, 8)).astype(np.float32)
+    return GB.build_graph(x, R, method="exact"), x
+
+
+def test_graph_valid_and_connected():
+    g, x = _toy_graph()
+    csr.validate_graph(g)
+    entry = GB.medoid(x)
+    assert GB.bfs_reachable(g.neighbors, g.n, entry).all()
+
+
+def test_zero_outdegree_subgraph_properties():
+    g, x = _toy_graph()
+    keep = csr.subgraph_sample(g, 0.4, seed=1)
+    sub = csr.zero_outdegree_subgraph(g, keep)
+    csr.validate_graph(sub)
+    assert sub.n == g.n, "id space must be preserved (no remapping)"
+    deg = sub.out_degrees()
+    assert (deg[~keep] == 0).all(), "dropped nodes must have zero out-degree"
+    real = sub.neighbors[sub.neighbors < sub.n]
+    assert keep[real].all(), "edges into dropped nodes must be pruned"
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.floats(0.1, 0.9), st.integers(0, 1000))
+def test_subgraph_sample_hits_ratio(ratio, seed):
+    g, _ = _toy_graph(seed=3)
+    keep = csr.subgraph_sample(g, ratio, seed=seed)
+    assert abs(keep.mean() - ratio) < 0.02
+
+
+def test_csr_roundtrip():
+    g, _ = _toy_graph()
+    indptr, indices = g.to_csr()
+    assert indptr[-1] == len(indices)
+    deg = g.out_degrees()
+    np.testing.assert_array_equal(np.diff(indptr), deg)
+
+
+# ---------------------------------------------------------------------------
+# FES (§5)
+# ---------------------------------------------------------------------------
+
+def test_fes_routes_to_nearest_cluster_topk():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(3000, 16)).astype(np.float32)
+    idx = build_fes(x, np.arange(3000), r=8, n_entry=1024, align=64, seed=0)
+    q = rng.normal(size=(32, 16)).astype(np.float32)
+    ids, dists = fes_select_ref(jnp.asarray(q), jnp.asarray(idx.centroids),
+                                jnp.asarray(idx.entries),
+                                jnp.asarray(idx.entry_ids),
+                                jnp.asarray(idx.valid), 8)
+    ids, dists = np.asarray(ids), np.asarray(dists)
+    # verify: distances are true; ids are members of the routed cluster
+    d2c = ((q[:, None] - idx.centroids[None]) ** 2).sum(-1)
+    route = d2c.argmin(1)
+    for b in range(8):
+        members = set(idx.entry_ids[route[b]][idx.valid[route[b]]].tolist())
+        assert set(ids[b].tolist()) <= members
+        d_true = ((q[b] - x[ids[b]]) ** 2).sum(-1)
+        np.testing.assert_allclose(dists[b], d_true, rtol=1e-3, atol=1e-3)
+
+
+def test_fes_bruteforce_reverts_to_global_topk():
+    """Table 2: with 1 block FES == brute force over all entries."""
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(1000, 8)).astype(np.float32)
+    idx = build_fes(x, np.arange(1000), r=4, n_entry=256, align=32, seed=0)
+    q = rng.normal(size=(8, 8)).astype(np.float32)
+    ids, _ = fes_select_bruteforce(jnp.asarray(q), jnp.asarray(idx.entries),
+                                   jnp.asarray(idx.entry_ids),
+                                   jnp.asarray(idx.valid), 4)
+    flat_ids = idx.entry_ids[idx.valid]
+    flat = x[flat_ids]
+    d = ((q[:, None] - flat[None]) ** 2).sum(-1)
+    expect = flat_ids[np.argsort(d, axis=1)[:, :4]]
+    assert (np.sort(np.asarray(ids), 1) == np.sort(expect, 1)).all()

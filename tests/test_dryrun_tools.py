@@ -1,0 +1,74 @@
+"""Dry-run tooling units that need no devices: HLO collective parsing,
+roofline term arithmetic, MODEL_FLOPS accounting."""
+
+import numpy as np
+import pytest
+
+
+HLO_SAMPLE = """
+HloModule jit_step
+
+%fused (a: f32[16,128]) -> f32[16,128] {
+  %x = f32[16,128]{1,0} parameter(0)
+}
+
+ENTRY %main {
+  %ag = f32[32,128]{1,0} all-gather(%p0), dimensions={0}
+  %ar.1 = bf16[1024]{0} all-reduce(%p1), to_apply=%sum
+  %rs = f32[8,128]{1,0} reduce-scatter(%ag), dimensions={0}
+  %a2a = f32[16,16]{1,0} all-to-all(%p2), dimensions={1}
+  %cp = u32[64]{0} collective-permute(%p3), source_target_pairs={{0,1}}
+  %ars = f32[512]{0} all-reduce-start(%p4), to_apply=%sum
+  %ard = f32[512]{0} all-reduce-done(%ars)
+  %not_a_coll = f32[99]{0} add(%p5, %p6)
+}
+"""
+
+
+def test_collective_bytes_parser():
+    from repro.launch.dryrun import collective_bytes
+    out = collective_bytes(HLO_SAMPLE)
+    assert out["all-gather"] == 32 * 128 * 4
+    assert out["all-reduce"] == 1024 * 2 + 512 * 4  # start counted, done not
+    assert out["reduce-scatter"] == 8 * 128 * 4
+    assert out["all-to-all"] == 16 * 16 * 4
+    assert out["collective-permute"] == 64 * 4
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_roofline_terms_pick_bottleneck():
+    from repro.launch.dryrun import HW, roofline_terms
+    acct = {"flops_per_dev": HW["peak_flops"] * 0.5,      # 0.5 s compute
+            "bytes_per_dev": HW["hbm_bw"] * 0.1,          # 0.1 s memory
+            "coll_bytes_per_dev": HW["ici_bw"] * 2.0}     # 2.0 s collective
+    r = roofline_terms(acct)
+    assert r["bottleneck"] == "collective"
+    assert r["t_compute"] == pytest.approx(0.5)
+    assert r["roofline_frac"] == pytest.approx(0.25)
+
+
+def test_model_flops_modes():
+    from benchmarks.roofline import model_flops
+    from repro.configs import get_config
+    cfg = get_config("tinyllama-1.1b")
+    n = cfg.active_param_count()
+    assert model_flops("tinyllama-1.1b", "train_4k") == \
+        pytest.approx(6.0 * n * 256 * 4096)
+    assert model_flops("tinyllama-1.1b", "decode_32k") == \
+        pytest.approx(2.0 * n * 128)
+    # MoE: active < total
+    moe = get_config("olmoe-1b-7b")
+    assert moe.active_param_count() < moe.param_count()
+
+
+def test_cell_runnability_rules():
+    from repro.configs import SHAPES, cell_is_runnable, get_config
+    ok, _ = cell_is_runnable(get_config("yi-34b"), SHAPES["long_500k"])
+    assert not ok, "pure full-attention arch must skip long_500k"
+    ok, _ = cell_is_runnable(get_config("rwkv6-1.6b"), SHAPES["long_500k"])
+    assert ok
+    ok, _ = cell_is_runnable(get_config("zamba2-1.2b"), SHAPES["long_500k"])
+    assert ok
+    for shape in ("train_4k", "prefill_32k", "decode_32k"):
+        ok, _ = cell_is_runnable(get_config("whisper-medium"), SHAPES[shape])
+        assert ok

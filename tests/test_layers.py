@@ -1,0 +1,150 @@
+"""Layer-level tests: flash attention vs naive softmax attention (causal +
+GQA + padding), RoPE/M-RoPE structure, chunked cross-entropy, MoE routing."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.models.layers import (apply_rope, chunked_softmax_xent,
+                                 decode_attention, flash_attention,
+                                 rope_angles)
+from repro.models.moe import init_moe, moe_ffn
+
+
+def naive_attention(q, k, v, causal=True):
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) / np.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, k.shape[1]), bool))
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), v)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)
+
+
+@pytest.mark.parametrize("Sq,Sk,H,Hkv,D,chunk,causal", [
+    (16, 16, 4, 4, 8, 8, True),
+    (33, 33, 4, 2, 16, 8, True),      # padding (33 not multiple of 8)
+    (16, 16, 6, 2, 8, 16, True),      # GQA group 3
+    (12, 24, 4, 4, 8, 8, False),      # cross-attention (non-causal, Sq != Sk)
+])
+def test_flash_matches_naive(Sq, Sk, H, Hkv, D, chunk, causal):
+    rng = np.random.default_rng(Sq + Sk)
+    q = jnp.asarray(rng.normal(size=(2, Sq, H, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, Sk, Hkv, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, Sk, Hkv, D)).astype(np.float32))
+    got = flash_attention(q, k, v, causal=causal, chunk_q=chunk, chunk_k=chunk)
+    want = naive_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_decode_attention_matches_naive_last_row():
+    rng = np.random.default_rng(0)
+    B, S, H, Hkv, D = 2, 24, 4, 2, 8
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(B, 1, H, D)).astype(np.float32))
+    pos = 17
+    got = decode_attention(q, k, v, jnp.int32(pos))
+    want = naive_attention(
+        jnp.concatenate([jnp.zeros((B, pos, H, D)), q], axis=1),
+        k[:, :pos + 1], v[:, :pos + 1], causal=True)[:, -1:]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, 8, 2, 16)).astype(np.float32))
+    pos = jnp.arange(8)[None].astype(jnp.int32)
+    ang = rope_angles(pos, 16, 1e4)
+    y = apply_rope(x, ang)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-4)
+    # relative property: <R(p)q, R(p+k)v> depends only on k
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 1, 1, 16)).astype(np.float32))
+    dots = []
+    for p in (0, 5):
+        pq = jnp.asarray([[p]], jnp.int32)
+        pv = jnp.asarray([[p + 3]], jnp.int32)
+        rq = apply_rope(q, rope_angles(pq, 16, 1e4))
+        rv = apply_rope(v, rope_angles(pv, 16, 1e4))
+        dots.append(float(jnp.sum(rq * rv)))
+    assert dots[0] == pytest.approx(dots[1], rel=1e-4)
+
+
+def test_mrope_sections_use_distinct_position_streams():
+    pos = jnp.stack([jnp.zeros((1, 4), jnp.int32),
+                     jnp.ones((1, 4), jnp.int32) * 5,
+                     jnp.ones((1, 4), jnp.int32) * 9])
+    ang = rope_angles(pos, 16, 1e4, (3, 3, 2))
+    a = np.asarray(ang)[0, 0]
+    assert (a[:3] == 0).all()          # temporal stream = 0
+    assert (a[3:6] != 0).all()         # height stream = 5
+    assert not np.allclose(a[4:6], a[6:8])  # height vs width streams differ
+
+
+def test_chunked_xent_matches_dense():
+    rng = np.random.default_rng(0)
+    B, S, d, V = 2, 24, 16, 50
+    h = jnp.asarray(rng.normal(size=(B, S, d)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(d, V)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, V, (B, S)), jnp.int32)
+    got = chunked_softmax_xent(h, w, labels, chunk=7)
+    logits = (h @ w).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    want = jnp.mean(lse - gold)
+    assert float(got) == pytest.approx(float(want), rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE routing invariants
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = reduced(get_config("olmoe-1b-7b"))
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    return cfg, p
+
+
+def test_moe_output_finite_and_shaped(moe_setup):
+    cfg, p = moe_setup
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(2, 16, cfg.d_model)).astype(np.float32)).astype(jnp.bfloat16)
+    y, aux = moe_ffn(p, x, cfg)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y, np.float32)).all()
+    assert float(aux) >= 0
+
+
+def test_moe_deterministic(moe_setup):
+    cfg, p = moe_setup
+    x = jnp.asarray(np.random.default_rng(1).normal(
+        size=(1, 8, cfg.d_model)).astype(np.float32)).astype(jnp.bfloat16)
+    y1, _ = moe_ffn(p, x, cfg)
+    y2, _ = moe_ffn(p, x, cfg)
+    np.testing.assert_array_equal(np.asarray(y1, np.float32),
+                                  np.asarray(y2, np.float32))
+
+
+def test_moe_zero_capacity_factor_drops_everything():
+    import dataclasses
+    cfg = reduced(get_config("olmoe-1b-7b"))
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    # capacity 128 (floor) with 8 tokens -> nothing dropped; scale tokens up
+    x = jnp.asarray(np.random.default_rng(2).normal(
+        size=(1, 8, cfg.d_model)).astype(np.float32)).astype(jnp.bfloat16)
+    y, _ = moe_ffn(p, x, cfg)
+    assert float(jnp.max(jnp.abs(y.astype(jnp.float32)))) > 0

@@ -1,0 +1,97 @@
+"""Per-arch smoke tests (reduced same-family configs): one forward/train step
+on CPU asserting output shapes + no NaNs, plus prefill-vs-decode consistency
+— the strongest correctness check for the cache/recurrence paths."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.models import (decode_step, forward, init_caches, init_params,
+                          loss_fn, unembed)
+from repro.models.frontends import synthetic_frontend_embeds
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch_setup(request):
+    cfg = reduced(get_config(request.param))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    B, S = 2, 16
+    tokens = jnp.asarray(rng.integers(1, cfg.vocab_size, (B, S)), jnp.int32)
+    fe = synthetic_frontend_embeds(cfg, B)
+    return request.param, cfg, params, tokens, fe
+
+
+def test_forward_shapes_and_finite(arch_setup):
+    arch, cfg, params, tokens, fe = arch_setup
+    h, aux = forward(params, cfg, tokens, frontend_embeds=fe)
+    assert h.shape == (*tokens.shape, cfg.d_model)
+    assert np.isfinite(np.asarray(h, np.float32)).all(), f"{arch}: NaN hidden"
+    logits = unembed(params, cfg, h)
+    assert logits.shape == (*tokens.shape, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_train_step_loss_finite_and_grads_flow(arch_setup):
+    arch, cfg, params, tokens, fe = arch_setup
+    batch = {"tokens": tokens, "labels": tokens}
+    if fe is not None:
+        batch["frontend_embeds"] = fe
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
+    assert np.isfinite(float(loss)), arch
+    gnorms = [float(jnp.max(jnp.abs(g.astype(jnp.float32))))
+              for g in jax.tree.leaves(grads)]
+    assert any(g > 0 for g in gnorms), f"{arch}: all-zero grads"
+    assert all(np.isfinite(g) for g in gnorms), f"{arch}: NaN grads"
+
+
+def test_prefill_decode_consistency(arch_setup):
+    """Teacher-forced decode must reproduce the full-sequence forward logits
+    (validates KV caches, SSM/RWKV recurrences vs their chunked forms,
+    positions, and the whisper cross-attention cache)."""
+    arch, cfg, params, tokens, fe = arch_setup
+    B, S = tokens.shape
+    # early-fusion archs replace leading embeddings with image patches in
+    # prefill, which step-decode cannot reproduce from token ids — run the
+    # consistency check text-only for those; whisper keeps its (cached)
+    # encoder memory in both paths.
+    fe_c = fe if cfg.family == "encdec" else None
+    h, _ = forward(params, cfg, tokens, frontend_embeds=fe_c)
+    full_logits = np.asarray(unembed(params, cfg, h))  # (B, S, V)
+
+    caches = init_caches(params, cfg, B, S + 1, frontend_embeds=fe_c)
+    step_logits = []
+    for t in range(S):
+        lg, caches = decode_step(params, cfg, tokens[:, t:t + 1], caches,
+                                 jnp.int32(t))
+        step_logits.append(np.asarray(lg)[:, 0])
+    step_logits = np.stack(step_logits, axis=1)  # (B, S, V)
+
+    a = full_logits
+    b = step_logits
+    # bf16 params + different reduction orders: compare top-1 agreement and
+    # correlation rather than strict allclose
+    top_match = (a.argmax(-1) == b.argmax(-1)).mean()
+    # MoE: near-tie routing flips under bf16 noise between execution orders
+    thresh = 0.90 if cfg.is_moe else 0.95
+    assert top_match >= thresh, f"{arch}: decode diverges (top1 {top_match:.2f})"
+    denom = np.abs(a).mean() + 1e-6
+    rel = np.abs(a - b).mean() / denom
+    assert rel < (0.25 if cfg.is_moe else 0.15), \
+        f"{arch}: decode rel err {rel:.3f}"
+
+
+def test_decode_step_updates_cache(arch_setup):
+    arch, cfg, params, tokens, fe = arch_setup
+    B = tokens.shape[0]
+    caches = init_caches(params, cfg, B, 8, frontend_embeds=fe)
+    before = jax.tree.map(lambda x: np.asarray(x).copy(), caches)
+    _, after = decode_step(params, cfg, tokens[:, :1], caches, jnp.int32(0))
+    changed = any(
+        not np.array_equal(b, np.asarray(a))
+        for b, a in zip(jax.tree.leaves(before), jax.tree.leaves(after)))
+    assert changed, f"{arch}: decode did not write its cache/state"

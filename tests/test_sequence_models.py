@@ -1,0 +1,97 @@
+"""Equivalence tests for the sub-quadratic sequence models: the chunked
+parallel forms must match naive step-by-step recurrences exactly (fp32)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.rwkv import wkv6_chunked
+from repro.models.ssm import mamba2_scan
+
+
+def test_mamba2_chunked_matches_naive_recurrence():
+    rng = np.random.default_rng(0)
+    B, L, H, P, N = 2, 37, 3, 4, 5  # deliberately non-multiple of chunk
+    xh = jnp.asarray(rng.normal(size=(B, L, H, P)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, size=(B, L, H)).astype(np.float32))
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, size=(H,)).astype(np.float32))
+    Bm = jnp.asarray(rng.normal(size=(B, L, N)).astype(np.float32))
+    Cm = jnp.asarray(rng.normal(size=(B, L, N)).astype(np.float32))
+
+    y_chunk, final = mamba2_scan(xh, dt, A, Bm, Cm, chunk=8)
+
+    # naive: S_t = exp(dt_t A) S_{t-1} + dt_t B_t x_t ; y_t = C_t . S_t
+    S = np.zeros((B, H, P, N), np.float32)
+    ys = []
+    for t in range(L):
+        dA = np.exp(np.asarray(dt)[:, t, :, None, None] * np.asarray(A)[None, :, None, None])
+        dBx = (np.asarray(dt)[:, t, :, None, None]
+               * np.asarray(xh)[:, t, :, :, None]
+               * np.asarray(Bm)[:, t, None, None, :])
+        S = dA * S + dBx
+        ys.append(np.einsum("bhpn,bn->bhp", S, np.asarray(Cm)[:, t]))
+    y_naive = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), y_naive, rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final), S, rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_chunked_matches_naive_recurrence():
+    rng = np.random.default_rng(1)
+    B, L, H, D = 2, 21, 2, 4
+    r = jnp.asarray(rng.normal(size=(B, L, H, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, L, H, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, L, H, D)).astype(np.float32))
+    logw = jnp.asarray(-rng.uniform(0.05, 2.0, size=(B, L, H, D)).astype(np.float32))
+    u = jnp.asarray(rng.normal(size=(H, D)).astype(np.float32))
+
+    o_chunk, final = wkv6_chunked(r, k, v, logw, u, chunk=8)
+
+    # naive: o_t = r_t . (S_{t-1} + diag(u) k_t v_t^T); S_t = diag(w_t) S + k_t v_t^T
+    S = np.zeros((B, H, D, D), np.float32)
+    os_ = []
+    rn, kn, vn = (np.asarray(t) for t in (r, k, v))
+    wn = np.exp(np.asarray(logw))
+    un = np.asarray(u)
+    for t in range(L):
+        bonus = np.einsum("bhd,hd,bhd,bhe->bhe", rn[:, t], un, kn[:, t], vn[:, t])
+        o = np.einsum("bhd,bhde->bhe", rn[:, t], S) + bonus
+        S = wn[:, t, :, :, None] * S + np.einsum("bhd,bhe->bhde", kn[:, t], vn[:, t])
+        os_.append(o)
+    o_naive = np.stack(os_, axis=1)
+    np.testing.assert_allclose(np.asarray(o_chunk), o_naive, rtol=3e-4,
+                               atol=3e-4)
+    np.testing.assert_allclose(np.asarray(final), S, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("chunk", [4, 16, 64])
+def test_wkv6_chunk_size_invariance(chunk):
+    rng = np.random.default_rng(2)
+    B, L, H, D = 1, 32, 2, 8
+    args = [jnp.asarray(rng.normal(size=(B, L, H, D)).astype(np.float32))
+            for _ in range(3)]
+    logw = jnp.asarray(-rng.uniform(0.1, 1.0, size=(B, L, H, D)).astype(np.float32))
+    u = jnp.asarray(rng.normal(size=(H, D)).astype(np.float32))
+    o1, f1 = wkv6_chunked(*args, logw, u, chunk=chunk)
+    o2, f2 = wkv6_chunked(*args, logw, u, chunk=L)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("chunk", [8, 32])
+def test_mamba2_chunk_size_invariance(chunk):
+    rng = np.random.default_rng(3)
+    B, L, H, P, N = 1, 48, 2, 4, 6
+    xh = jnp.asarray(rng.normal(size=(B, L, H, P)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.01, 0.3, size=(B, L, H)).astype(np.float32))
+    A = -jnp.asarray(rng.uniform(0.5, 1.5, size=(H,)).astype(np.float32))
+    Bm = jnp.asarray(rng.normal(size=(B, L, N)).astype(np.float32))
+    Cm = jnp.asarray(rng.normal(size=(B, L, N)).astype(np.float32))
+    y1, f1 = mamba2_scan(xh, dt, A, Bm, Cm, chunk=chunk)
+    y2, f2 = mamba2_scan(xh, dt, A, Bm, Cm, chunk=L)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4,
+                               atol=1e-4)

@@ -1,0 +1,217 @@
+"""Substrate tests: checkpointing (atomic, keep-N, elastic restore), data
+pipeline purity, optimizer, compression, fault-tolerance runtime, serving
+queue, semantic cache."""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.checkpoint.store import latest_step
+from repro.data import TokenPipeline, synthetic_vectors
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         clip_by_global_norm, compress_int8, decompress_int8)
+from repro.optim.compression import ef_compress_tree
+from repro.runtime import (ElasticPolicy, HeartbeatMonitor, RestartPolicy,
+                           StragglerMitigator)
+from repro.serving import BatchingQueue, SemanticCache
+from repro.serving.batching import run_query_batches
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16),
+                  "d": jnp.int32(7)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 3, t)
+    restored, step = load_checkpoint(str(tmp_path), t)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomic_no_partial_dirs(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree())
+    entries = os.listdir(tmp_path)
+    assert not any(e.startswith(".tmp") for e in entries)
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_checkpoint_manager_keep_n(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, save_interval=1)
+    for s in range(1, 6):
+        mgr.maybe_save(s, _tree())
+    steps = sorted(e for e in os.listdir(tmp_path) if e.startswith("step_"))
+    assert len(steps) == 2 and steps[-1] == "step_00000005"
+
+
+def test_checkpoint_restore_or_none(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    assert mgr.restore_or_none(_tree()) is None
+    mgr.maybe_save(4, _tree(), force=True)
+    out = mgr.restore_or_none(_tree())
+    assert out is not None and out[1] == 4
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline: purity + host sharding
+# ---------------------------------------------------------------------------
+
+def test_pipeline_pure_in_seed_step():
+    p = TokenPipeline(vocab_size=1000, seq_len=32, global_batch=8, seed=5)
+    a = p.batch_at(7)
+    b = p.batch_at(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = p.batch_at(8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_pipeline_hosts_disjoint_and_labels_shifted():
+    ps = [TokenPipeline(1000, 32, 8, n_hosts=4, host_id=h) for h in range(4)]
+    batches = [p.batch_at(0) for p in ps]
+    assert all(b["tokens"].shape == (2, 32) for b in batches)
+    assert not np.array_equal(batches[0]["tokens"], batches[1]["tokens"])
+    b = batches[0]
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_synthetic_vectors_spectral_structure():
+    ds = synthetic_vectors(2000, 32, seed=0)
+    _, s, _ = np.linalg.svd(ds.vectors - ds.vectors.mean(0), full_matrices=False)
+    var = s ** 2
+    assert var[: 8].sum() / var.sum() > 0.5, "top dims must dominate (SVD-able)"
+
+
+# ---------------------------------------------------------------------------
+# Optimizer + compression
+# ---------------------------------------------------------------------------
+
+def test_adamw_reduces_quadratic_loss():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=1, total_steps=100, weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw_init(params)
+    for _ in range(60):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state, _ = adamw_update(cfg, params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    got = float(jnp.linalg.norm(clipped["a"]))
+    assert got == pytest.approx(1.0, rel=1e-3)
+
+
+def test_int8_compression_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+    q, s = compress_int8(g)
+    deq = decompress_int8(q, s)
+    assert q.dtype == jnp.int8
+    assert float(jnp.max(jnp.abs(deq - g))) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_accumulates():
+    g = {"w": jnp.asarray([0.001, 0.002, 1.0], jnp.float32)}
+    e = {"w": jnp.zeros((3,), jnp.float32)}
+    # after many rounds, the carried error keeps small components alive
+    total = jnp.zeros((3,))
+    for _ in range(50):
+        q, s, e = ef_compress_tree(g, e)
+        total = total + decompress_int8(q["w"], s["w"])
+    avg = np.asarray(total) / 50
+    np.testing.assert_allclose(avg, np.asarray(g["w"]), rtol=0.2, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# Fault-tolerance runtime
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_detects_dead_hosts():
+    t = [0.0]
+    mon = HeartbeatMonitor(["h0", "h1"], timeout_s=10, clock=lambda: t[0])
+    t[0] = 5.0
+    mon.beat("h0")
+    t[0] = 12.0
+    assert mon.dead_hosts() == ["h1"]
+    assert mon.alive_hosts() == ["h0"]
+
+
+def test_restart_policy_backoff_and_replay():
+    rp = RestartPolicy(max_restarts=3, base_backoff_s=1.0)
+    backs = [rp.next_backoff() for _ in range(4)]
+    assert backs[:3] == [1.0, 2.0, 4.0] and backs[3] is None
+    assert rp.replay_from(None) == 0
+    assert rp.replay_from(99) == 100
+
+
+def test_elastic_policy_meshes():
+    ep = ElasticPolicy(model_degree=16)
+    assert ep.propose_mesh(512) == ((2, 16, 16), ("pod", "data", "model"))
+    assert ep.propose_mesh(256) == ((16, 16), ("data", "model"))
+    # losing 3 chips drops a full TP group
+    assert ep.propose_mesh(253) == ((15, 16), ("data", "model"))
+    assert ep.propose_mesh(10) is None
+    assert ep.global_batch_for(256, 16, 8) == 128
+
+
+def test_straggler_mitigator_issues_backups():
+    t = [0.0]
+    sm = StragglerMitigator(factor=3.0, min_history=2, clock=lambda: t[0])
+    for i in range(4):
+        sm.issue(f"s{i}")
+        t[0] += 1.0
+        sm.complete(f"s{i}")
+    sm.issue("slow")
+    t[0] += 10.0
+    assert sm.backups_needed() == ["slow"]
+    assert sm.backups_needed() == []  # only once
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def test_batching_queue_pads_and_deadline():
+    t = [0.0]
+    q = BatchingQueue(4, max_wait_s=1.0, clock=lambda: t[0])
+    q.submit(np.ones(3))
+    assert not q.ready()
+    t[0] = 2.0
+    assert q.ready()
+    batch = q.next_batch()
+    assert len(batch) == 4 and batch[0] is not None and batch[1] is None
+
+
+def test_run_query_batches_assigns_results():
+    q = BatchingQueue(2, max_wait_s=0.0)
+    r1 = q.submit(np.full(4, 1.0, np.float32))
+    r2 = q.submit(np.full(4, 2.0, np.float32))
+    n = run_query_batches(lambda x: x.sum(axis=1), q, 4)
+    assert n == 1 and r1.done and r2.done
+    assert float(r1.result) == pytest.approx(4.0)
+
+
+def test_semantic_cache_hit_miss():
+    rng = np.random.default_rng(0)
+    cache = SemanticCache(dim=16, threshold=0.05, rebuild_every=16)
+    keys = rng.normal(size=(80, 16)).astype(np.float32)
+    for i, k in enumerate(keys):
+        assert cache.lookup(k) is None or True  # warm phase
+        cache.insert(k, f"answer-{i}")
+    hit = cache.lookup(keys[3] + 1e-4)
+    assert hit == "answer-3"
+    assert cache.lookup(rng.normal(size=16).astype(np.float32) * 10) is None

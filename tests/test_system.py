@@ -1,0 +1,85 @@
+"""End-to-end behaviour tests for the PilotANN system (the paper's claims at
+test scale): multistage reaches baseline-or-better recall with fewer CPU-side
+distance computations; graceful degradation; stage accounting."""
+
+import numpy as np
+import pytest
+
+from repro.core import (IndexConfig, PilotANNIndex, SearchParams,
+                        brute_force_topk, recall_at_k)
+
+
+@pytest.fixture(scope="module")
+def gt(small_dataset):
+    return brute_force_topk(small_dataset.vectors, small_dataset.queries, 10)
+
+
+def test_multistage_recall_and_cpu_savings(built_index, small_dataset, gt):
+    params = SearchParams(k=10, ef=48, ef_pilot=48)
+    ids_b, _, st_b = built_index.search_baseline(small_dataset.queries, params)
+    ids_m, _, st_m = built_index.search(small_dataset.queries, params)
+    r_b = recall_at_k(ids_b, gt, 10)
+    r_m = recall_at_k(ids_m, gt, 10)
+    assert r_m >= 0.85, f"multistage recall too low: {r_m}"
+    assert r_m >= r_b - 0.02, (r_m, r_b)
+    # the paper's core claim: CPU-side distance computations shrink
+    assert st_m["total_cpu_dist"].mean() < st_b["total_cpu_dist"].mean(), \
+        (st_m["total_cpu_dist"].mean(), st_b["total_cpu_dist"].mean())
+
+
+def test_graceful_degradation_matches_baseline(built_index, small_dataset):
+    """With every stage disabled the engine IS the greedy baseline (§4.1)."""
+    params = SearchParams(k=10, ef=48, use_fes=False, use_pilot=False,
+                          use_refine=False)
+    ids_m, d_m, _ = built_index.search(small_dataset.queries, params)
+    ids_b, d_b, _ = built_index.search_baseline(small_dataset.queries, params)
+    assert np.array_equal(ids_m, ids_b)
+    np.testing.assert_allclose(d_m, d_b, rtol=1e-5)
+
+
+@pytest.mark.parametrize("flags", [
+    dict(use_fes=False), dict(use_refine=False),
+    dict(use_fes=False, use_refine=False), dict(use_pilot=False)])
+def test_ablation_modes_run(built_index, small_dataset, gt, flags):
+    params = SearchParams(k=10, ef=48, ef_pilot=48, **flags)
+    ids, _, stats = built_index.search(small_dataset.queries, params)
+    assert recall_at_k(ids, gt, 10) >= 0.70
+    assert stats["total_cpu_dist"].mean() > 0
+
+
+def test_stage_accounting_is_complete(built_index, small_dataset):
+    params = SearchParams(k=10, ef=48, ef_pilot=48)
+    _, _, st = built_index.search(small_dataset.queries, params)
+    for key in ("fes_dist", "pilot_dist", "refine_dist", "final_dist",
+                "total_cpu_dist"):
+        assert key in st and st[key].shape == (len(small_dataset.queries),)
+    assert (st["total_cpu_dist"] == st["refine_dist"] + st["final_dist"]).all()
+
+
+def test_results_sorted_and_valid(built_index, small_dataset):
+    params = SearchParams(k=10, ef=48)
+    ids, dists, _ = built_index.search(small_dataset.queries, params)
+    n = built_index.n
+    assert (ids >= 0).all() and (ids < n).all()
+    assert (np.diff(dists, axis=1) >= -1e-5).all(), "results not sorted"
+    # distances are true squared distances to the returned ids
+    q = small_dataset.queries
+    x = small_dataset.vectors
+    d_true = ((q[:, None, :] - x[ids]) ** 2).sum(-1)
+    np.testing.assert_allclose(dists, d_true, rtol=1e-3, atol=1e-2)
+
+
+def test_exact_and_bloom_visited_agree_on_recall(built_index, small_dataset, gt):
+    pb = SearchParams(k=10, ef=48, visited_mode="bloom")
+    pe = SearchParams(k=10, ef=48, visited_mode="exact")
+    ids_b, _, _ = built_index.search(small_dataset.queries, pb)
+    ids_e, _, _ = built_index.search(small_dataset.queries, pe)
+    rb, re_ = recall_at_k(ids_b, gt, 10), recall_at_k(ids_e, gt, 10)
+    # bloom FPs may skip nodes but multi-stage refinement bounds the loss (§4.3)
+    assert rb >= re_ - 0.05, (rb, re_)
+
+
+def test_memory_report_pilot_smaller_than_full(built_index):
+    rep = built_index.memory_report()
+    assert rep["pilot_bytes"] < rep["full_bytes"]
+    assert rep["ratio"] > 1.0

@@ -1,0 +1,143 @@
+"""Integration: train loop + checkpoint/restart on a reduced arch; loss
+decreases; restart resumes bit-compatible state; sharding specs are valid
+(divisibility) for every arch x mode on the production mesh shape."""
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, ShapeSpec, get_config, reduced
+from repro.launch.train import train
+
+
+SMOKE_SHAPE = ShapeSpec("smoke", seq_len=32, global_batch=4, mode="train")
+
+
+def _reduced_train(arch, steps, ckpt_dir=None, seed=0):
+    import repro.launch.train as T
+    import repro.configs as C
+    cfg = reduced(get_config(arch))
+    orig = T.get_config
+    try:
+        T.get_config = lambda a: cfg
+        return train(arch, steps=steps, ckpt_dir=ckpt_dir, save_interval=5,
+                     shape=SMOKE_SHAPE, seed=seed, log_every=100)
+    finally:
+        T.get_config = orig
+
+
+def test_train_loss_decreases():
+    _, history = _reduced_train("tinyllama-1.1b", steps=12)
+    losses = [l for _, l in history]
+    assert losses[-1] < losses[0], losses
+
+
+def test_checkpoint_restart_resumes(tmp_path):
+    ckpt = str(tmp_path / "ck")
+    params_a, _ = _reduced_train("smollm-360m", steps=11, ckpt_dir=ckpt)
+    # fresh call restores from step 10 and continues to 12
+    params_b, hist_b = _reduced_train("smollm-360m", steps=13, ckpt_dir=ckpt)
+    assert hist_b[0][0] >= 11, "must resume after the checkpointed step"
+
+
+def test_train_step_deterministic():
+    from repro.data import make_token_pipeline
+    from repro.models import steps as ST
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    pipe = make_token_pipeline(cfg, SMOKE_SHAPE, seed=3)
+    step = jax.jit(ST.make_train_step(cfg))
+    outs = []
+    for _ in range(2):
+        params, opt = ST.init_train_state(jax.random.PRNGKey(1), cfg)
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+        p, o, m = step(params, opt, batch)
+        outs.append(float(m["loss"]))
+    assert outs[0] == outs[1]
+
+
+def test_microbatched_step_matches_monolithic_loss():
+    from repro.data import make_token_pipeline
+    from repro.models import steps as ST
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    pipe = make_token_pipeline(cfg, SMOKE_SHAPE, seed=4)
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+    params, opt = ST.init_train_state(jax.random.PRNGKey(1), cfg)
+    _, _, m1 = jax.jit(ST.make_train_step(cfg, microbatches=1))(params, opt, batch)
+    params, opt = ST.init_train_state(jax.random.PRNGKey(1), cfg)
+    _, _, m2 = jax.jit(ST.make_train_step(cfg, microbatches=2))(params, opt, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# Sharding validity: every param/cache/input spec must evenly divide its dim
+# on the production mesh (jit rejects uneven argument shardings) — this test
+# catches sharding-rule regressions without compiling.
+# ---------------------------------------------------------------------------
+
+class _FakeMesh:
+    axis_names = ("pod", "data", "model")
+    shape = {"pod": 2, "data": 16, "model": 16}
+
+
+def _check_tree(specs, shapes, mesh, label):
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: hasattr(x, "spec"))
+    flat_l = jax.tree.leaves(shapes)
+    assert len(flat_s) == len(flat_l)
+    for sh, leaf in zip(flat_s, flat_l):
+        spec = sh.spec
+        for i, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            k = 1
+            for a in axes:
+                k *= mesh.shape[a]
+            assert leaf.shape[i] % k == 0, \
+                f"{label}: dim {i} of {leaf.shape} not divisible by {k} ({ax})"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape_name", ["train_4k", "decode_32k"])
+def test_sharding_specs_divide(arch, shape_name):
+    from jax.sharding import PartitionSpec as P
+    from repro.launch import sharding as SH
+    from repro.launch import specs as SP
+    from repro.configs import cell_is_runnable
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, _ = cell_is_runnable(cfg, shape)
+    if not ok:
+        pytest.skip("cell not runnable")
+
+    class Mesh(_FakeMesh):
+        pass
+
+    # monkey-style NamedSharding stand-in: record spec only
+    class NS:
+        def __init__(self, mesh, spec):
+            self.spec = spec
+
+    import repro.launch.sharding as shmod
+    orig = shmod.NamedSharding
+    shmod.NamedSharding = NS
+    try:
+        params_shape = SP.params_specs(cfg)
+        p = shmod.params_shardings(params_shape, cfg, Mesh(), mode=shape.mode)
+        _check_tree(p, params_shape, Mesh(), f"{arch} params")
+        if shape.mode == "train":
+            opt_shape = SP.opt_specs(cfg, params_shape)
+            o = shmod.opt_state_shardings(opt_shape, p, cfg, Mesh())
+            _check_tree(o, opt_shape, Mesh(), f"{arch} opt")
+        else:
+            cache_shape = SP.cache_specs(cfg, shape, params_shape)
+            c = shmod.cache_shardings(cache_shape, cfg, Mesh(),
+                                      shape.global_batch)
+            _check_tree(c, cache_shape, Mesh(), f"{arch} caches")
+    finally:
+        shmod.NamedSharding = orig

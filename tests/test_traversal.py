@@ -1,0 +1,120 @@
+"""Traversal invariants (Algorithm 1) + hypothesis properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import graph_build as GB
+from repro.core.traversal import (TraversalSpec, greedy_search, sq_dists,
+                                  topk_from_state)
+
+
+def _setup(n=400, d=8, R=8, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    g = GB.build_graph(x, R, method="exact")
+    table = g.padded_table()
+    vec_table = np.concatenate([x, np.zeros((1, d), np.float32)])
+    return x, g, jnp.asarray(table), jnp.asarray(vec_table)
+
+
+def test_exact_visited_full_ef_finds_true_topk():
+    """With ef >= n and full connectivity the greedy search is exhaustive."""
+    rng = np.random.default_rng(0)
+    n, d = 60, 6
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    # fully-connected ring graph => everything reachable
+    nb = np.stack([np.roll(np.arange(n), -k)[:n] for k in range(1, 9)], 1)
+    table = np.concatenate([nb, np.full((1, 8), n)], 0).astype(np.int32)
+    vec_table = np.concatenate([x, np.zeros((1, d), np.float32)])
+    q = rng.normal(size=(4, d)).astype(np.float32)
+    spec = TraversalSpec(ef=n, visited_mode="exact", max_iters=4 * n)
+    state = greedy_search(spec, jnp.asarray(q), jnp.asarray(table),
+                          jnp.asarray(vec_table), n,
+                          jnp.zeros((4, 1), jnp.int32))
+    ids, dists = topk_from_state(state, 5)
+    d2 = ((q[:, None] - x[None]) ** 2).sum(-1)
+    expect = np.argsort(d2, axis=1)[:, :5]
+    np.testing.assert_array_equal(np.asarray(ids), expect)
+
+
+def test_distance_counter_counts_each_node_once_exact():
+    x, g, table, vec_table = _setup()
+    q = x[:8] + 0.01
+    spec = TraversalSpec(ef=32, visited_mode="exact")
+    st_ = greedy_search(spec, jnp.asarray(q), table, vec_table, g.n,
+                        jnp.zeros((8, 1), jnp.int32))
+    # can never compute more distances than nodes exist
+    assert (np.asarray(st_.n_dist) <= g.n).all()
+    assert (np.asarray(st_.n_dist) > 0).all()
+
+
+def test_seeded_search_reduces_distance_calcs():
+    """Fig. 3: starting with partial ground truth cuts distance computations."""
+    x, g, table, vec_table = _setup(n=800, seed=2)
+    rng = np.random.default_rng(3)
+    q = x[rng.choice(800, 16, replace=False)] + 0.01
+    d2 = sq_dists(jnp.asarray(q),
+                  jnp.asarray(np.broadcast_to(x, (16, 800, x.shape[1]))))
+    gt_ids = jnp.argsort(d2, axis=1)[:, :8].astype(jnp.int32)
+    gt_d = jnp.take_along_axis(d2, gt_ids, axis=1)
+
+    spec = TraversalSpec(ef=32, visited_mode="exact")
+    cold = greedy_search(spec, jnp.asarray(q), table, vec_table, g.n,
+                         jnp.zeros((16, 1), jnp.int32))
+    seeded = greedy_search(spec, jnp.asarray(q), table, vec_table, g.n,
+                           jnp.full((16, 1), g.n, jnp.int32),
+                           extra_id=gt_ids, extra_d=gt_d)
+    assert seeded.n_dist.mean() < cold.n_dist.mean()
+
+
+def test_fixed_iters_matches_unrolled():
+    """Rolled (fori) and unrolled lowering run the same algorithm; XLA may
+    re-vectorise float math differently, so compare semantically: same
+    distance profile and (near-)same beam membership."""
+    x, g, table, vec_table = _setup(seed=4)
+    q = x[:6] + 0.02
+    spec = TraversalSpec(ef=16, visited_mode="exact")
+    a = greedy_search(spec, jnp.asarray(q), table, vec_table, g.n,
+                      jnp.zeros((6, 1), jnp.int32), iters=5)
+    b = greedy_search(spec, jnp.asarray(q), table, vec_table, g.n,
+                      jnp.zeros((6, 1), jnp.int32), iters=5, unroll=True)
+    da, db = np.asarray(a.cand_d), np.asarray(b.cand_d)
+    fa, fb = np.isfinite(da), np.isfinite(db)
+    np.testing.assert_array_equal(fa, fb)
+    np.testing.assert_allclose(da[fa], db[fb], rtol=1e-3, atol=1e-3)
+    ia, ib = np.asarray(a.cand_id), np.asarray(b.cand_id)
+    overlap = np.mean([len(set(ra[ra < g.n]) & set(rb[rb < g.n])) /
+                       max(len(set(ra[ra < g.n])), 1)
+                       for ra, rb in zip(ia, ib)])
+    assert overlap >= 0.9, overlap
+    assert np.array_equal(np.asarray(a.n_dist), np.asarray(b.n_dist)) or \
+        abs(int(a.n_dist.sum()) - int(b.n_dist.sum())) <= 6
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(4, 32), st.integers(0, 100))
+def test_beam_sorted_and_deduped(ef, seed):
+    x, g, table, vec_table = _setup(n=300, seed=5)
+    rng = np.random.default_rng(seed)
+    q = x[rng.choice(300, 4, replace=False)] + 0.05
+    spec = TraversalSpec(ef=ef, visited_mode="exact")
+    st_ = greedy_search(spec, jnp.asarray(q), table, vec_table, g.n,
+                        jnp.zeros((4, 2), jnp.int32).at[:, 1].set(7))
+    ids = np.asarray(st_.cand_id)
+    ds = np.asarray(st_.cand_d)
+    assert (np.diff(ds, axis=1) >= -1e-6).all()
+    for row in ids:
+        real = row[row < g.n]
+        assert len(set(real.tolist())) == len(real), "duplicate in beam"
+
+
+def test_sq_dists_matches_numpy():
+    rng = np.random.default_rng(0)
+    q = rng.normal(size=(5, 16)).astype(np.float32)
+    v = rng.normal(size=(5, 9, 16)).astype(np.float32)
+    got = np.asarray(sq_dists(jnp.asarray(q), jnp.asarray(v)))
+    want = ((q[:, None] - v) ** 2).sum(-1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
