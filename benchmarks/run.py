@@ -12,7 +12,8 @@ import sys
 import time
 
 ALL = ["density", "stage_breakdown", "accel_threshold", "recall_qps",
-       "ablation", "memory_scaling", "fes_benefit", "graph_sensitivity"]
+       "ablation", "memory_scaling", "fes_benefit", "graph_sensitivity",
+       "pilot_kernel"]
 
 
 def main(argv=None) -> int:

@@ -1,0 +1,46 @@
+#!/usr/bin/env bash
+# Pre-PR smoke check (see README.md). Runs all three sections even if an
+# earlier one fails, then summarizes:
+#   1. tier-1 verify (ROADMAP.md), minus the tests known-red on this
+#      container's jax version (flash-attention pallas internals, qwen2-vl,
+#      train-integration, and the slow mesh tests) — so a red section 1
+#      means *your* change regressed something
+#   2. fused pilot-traversal kernel parity, interpret mode
+#   3. the quickstart example end-to-end
+set -uo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# Known-red on this container (jax 0.4.x CPU): see .claude/skills/verify.
+KNOWN_RED=(
+    --ignore=tests/test_kernels_flash.py
+    --deselect "tests/test_models.py::test_prefill_decode_consistency[qwen2-vl-7b]"
+    --deselect tests/test_train_integration.py::test_train_loss_decreases
+    --deselect tests/test_train_integration.py::test_checkpoint_restart_resumes
+)
+
+declare -A status
+
+echo "== [1/3] tier-1 verify (minus known-red, minus slow) =="
+python -m pytest -x -q -m "not slow" "${KNOWN_RED[@]}"
+status[tier1]=$?
+
+echo "== [2/3] fused traversal kernel parity (interpret mode) =="
+python -m pytest -q "tests/test_traversal_kernel.py::test_pallas_greedy_search_parity_4k[bloom]"
+status[kernel_parity]=$?
+
+echo "== [3/3] quickstart =="
+python examples/quickstart.py
+status[quickstart]=$?
+
+echo
+rc=0
+for k in tier1 kernel_parity quickstart; do
+    if [ "${status[$k]}" -eq 0 ]; then
+        echo "smoke: $k OK"
+    else
+        echo "smoke: $k FAILED (exit ${status[$k]})"
+        rc=1
+    fi
+done
+exit $rc

@@ -24,6 +24,7 @@ from repro.core.multistage import SearchParams
 
 @dataclass
 class IndexConfig:
+    """Build-time index knobs (full field reference: docs/api.md)."""
     R: int = 32                  # graph degree bound
     sample_ratio: float = 0.25   # subgraph node ratio (paper Table 3)
     svd_ratio: float = 0.5       # primary-dims ratio (paper Table 3)
@@ -121,11 +122,25 @@ class PilotANNIndex:
             self._search_fns[key] = jax.jit(partial(fn, params=params))
         return self._search_fns[key]
 
+    @staticmethod
+    def _pad_batch(q: jax.Array, params: SearchParams,
+                   align: int = 8) -> Tuple[jax.Array, int]:
+        """Pallas path: pad the query batch to a sublane-aligned size so the
+        fused hop kernel tiles cleanly (DESIGN.md §3); results are sliced
+        back to the caller's batch.  Also caps jit-signature churn for
+        ragged client batches."""
+        B = q.shape[0]
+        if not params.use_pallas_traversal or B % align == 0:
+            return q, B
+        return jnp.pad(q, ((0, align - B % align), (0, 0))), B
+
     def search(self, queries: np.ndarray, params: SearchParams,
                *, rotated: bool = False) -> Tuple[np.ndarray, np.ndarray, Dict]:
         q = jnp.asarray(queries) if rotated else self.rotate_queries(queries)
+        q, B = self._pad_batch(q, params)
         ids, dists, stats = self._get_fn(params, False)(self.arrays, queries=q)
-        return np.asarray(ids), np.asarray(dists), jax.tree.map(np.asarray, stats)
+        return (np.asarray(ids[:B]), np.asarray(dists[:B]),
+                jax.tree.map(lambda a: np.asarray(a)[:B], stats))
 
     def search_baseline(self, queries: np.ndarray, params: SearchParams,
                         *, rotated: bool = False

@@ -27,17 +27,27 @@ from repro.core import traversal as T
 
 @dataclass(frozen=True)
 class SearchParams:
-    k: int = 10
-    ef: int = 128            # stage-③ beam
-    ef_pilot: int = 128      # stage-① beam
-    fes_L: int = 32          # entries returned by FES
+    """Per-call search knobs (hashable: the engine jit-caches per value).
+
+    See docs/api.md for the full field reference and the glossary of the
+    ``stats`` dict this search returns.
+    """
+    k: int = 10              # results returned per query
+    ef: int = 128            # stage-③ beam width (recall/latency dial)
+    ef_pilot: int = 128      # stage-① beam width
+    fes_L: int = 32          # entries returned by FES (stage-0 fan-in)
     refine_iters: int = 2    # stage-② bounded traversal rounds (paper: 2)
-    use_fes: bool = True
-    use_pilot: bool = True
-    use_refine: bool = True
-    visited_mode: str = "bloom"
-    bloom_bits: int = 16384
-    max_iters: int = 512
+    use_fes: bool = True     # stage 0: FES entry selection vs coarse layer
+    use_pilot: bool = True   # stage ①: pilot subgraph traversal
+    use_refine: bool = True  # stage ②: residual refinement
+    visited_mode: str = "bloom"   # bloom | exact visited-set structure
+    bloom_bits: int = 16384  # bloom filter width per query (bits)
+    max_iters: int = 512     # safety bound on expansion rounds per stage
+    # stage ① via the fused Pallas hop kernel (DESIGN.md §3).
+    # pallas_interpret=True emulates the kernel on CPU (tests/benchmarks);
+    # set False on real TPU to run the compiled kernel.
+    use_pallas_traversal: bool = False
+    pallas_interpret: bool = True
 
 
 class Stats(dict):
@@ -99,7 +109,9 @@ def multistage_search(arrays: Dict[str, jax.Array], params: SearchParams,
     if params.use_pilot:
         spec1 = T.TraversalSpec(ef=params.ef_pilot, visited_mode=params.visited_mode,
                                 bloom_bits=params.bloom_bits,
-                                max_iters=params.max_iters)
+                                max_iters=params.max_iters,
+                                use_pallas=params.use_pallas_traversal,
+                                pallas_interpret=params.pallas_interpret)
         padded_primary = arrays["primary"]
         st1 = T.greedy_search(spec1, q_primary, arrays["sub_neighbors"],
                               padded_primary, n, entry_ids)

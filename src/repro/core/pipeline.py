@@ -40,7 +40,9 @@ def split_stages(arrays: Dict[str, jax.Array], params: SearchParams):
                                         arrays["fes_valid"], params.fes_L)
         spec1 = T.TraversalSpec(ef=params.ef_pilot, visited_mode=params.visited_mode,
                                 bloom_bits=params.bloom_bits,
-                                max_iters=params.max_iters)
+                                max_iters=params.max_iters,
+                                use_pallas=params.use_pallas_traversal,
+                                pallas_interpret=params.pallas_interpret)
         st1 = T.greedy_search(spec1, qp, arrays["sub_neighbors"],
                               arrays["primary"], n, entry_ids)
         return st1.cand_id, st1.cand_d, st1.visited

@@ -47,6 +47,12 @@ class TraversalSpec:
     # expansion round
     state_spec: Optional[object] = None
     dense_visited_update: bool = False
+    # fused Pallas hop (kernels/traversal_kernel.py, DESIGN.md §3): one
+    # kernel per expansion round instead of the op-by-op body below.
+    # pallas_interpret runs the kernel through the Pallas interpreter
+    # (CPU-correct; compiled lowering is for real TPU runs).
+    use_pallas: bool = False
+    pallas_interpret: bool = True
 
 
 def sq_dists(q: jax.Array, vecs: jax.Array) -> jax.Array:
@@ -138,6 +144,10 @@ def expansion_round(spec: TraversalSpec, state: SearchState, queries: jax.Array,
     Bq, ef = state.cand_id.shape
     R = neighbor_table.shape[1]
 
+    if spec.use_pallas and nbr_fn is None and dist_fn is None:
+        return _pallas_round(spec, state, queries, neighbor_table,
+                             vector_table, n)
+
     # best unchecked candidate per query (rows with none stay idle)
     unchecked = ~state.checked & (state.cand_id < n)
     has_work = jnp.any(unchecked, axis=1)
@@ -184,6 +194,29 @@ def expansion_round(spec: TraversalSpec, state: SearchState, queries: jax.Array,
     )
 
 
+def _pallas_round(spec: TraversalSpec, state: SearchState, queries: jax.Array,
+                  neighbor_table: jax.Array, vector_table: jax.Array,
+                  n: int) -> SearchState:
+    """Fused expansion round: the whole hop body runs as one Pallas kernel
+    (gather + visited filter + MXU distances + bitonic beam merge); only the
+    counters are maintained here (cheap (B, ef)/(B, R) reductions)."""
+    from repro.kernels.traversal_kernel import fused_traversal_hop
+
+    has_work = jnp.any(~state.checked & (state.cand_id < n), axis=1)
+    new_id, new_d, new_ck, visited, fresh = fused_traversal_hop(
+        queries, neighbor_table, vector_table, state.cand_id, state.cand_d,
+        state.checked, state.visited, n, visited_mode=spec.visited_mode,
+        interpret=spec.pallas_interpret)
+    return SearchState(
+        cand_id=new_id,
+        cand_d=new_d,
+        checked=new_ck,
+        visited=visited,
+        n_dist=state.n_dist + jnp.sum(fresh, axis=1).astype(jnp.int32),
+        n_hops=state.n_hops + has_work.astype(jnp.int32),
+    )
+
+
 def greedy_search(spec: TraversalSpec, queries: jax.Array,
                   neighbor_table: jax.Array, vector_table: jax.Array, n: int,
                   entry_ids: jax.Array, *,
@@ -206,6 +239,14 @@ def greedy_search(spec: TraversalSpec, queries: jax.Array,
     """
     state = init_state(spec, queries, entry_ids, vector_table[:-1], n,
                        visited=visited, extra_id=extra_id, extra_d=extra_d)
+
+    if spec.use_pallas and nbr_fn is None and dist_fn is None:
+        # hoist the kernel's row-alignment padding out of the hop loop: with
+        # pre-aligned tables the per-round fused_traversal_hop pad is a no-op
+        # instead of an O(n·d) copy per expansion round
+        from repro.kernels.traversal_kernel import align_tables
+        neighbor_table, vector_table = align_tables(neighbor_table,
+                                                    vector_table, n)
 
     round_fn = partial(expansion_round, spec, queries=queries,
                        neighbor_table=neighbor_table,

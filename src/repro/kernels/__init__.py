@@ -1,6 +1,7 @@
 from repro.kernels.fes_kernel import fes_distances
 from repro.kernels.flash_attention import flash_attention_tpu
 from repro.kernels.ops import fes_select, fused_expand_merge
+from repro.kernels.traversal_kernel import fused_traversal_hop
 
 __all__ = ["fes_distances", "fes_select", "flash_attention_tpu",
-           "fused_expand_merge"]
+           "fused_expand_merge", "fused_traversal_hop"]

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.kernels.fes_kernel import fes_distances
 from repro.kernels.topk_kernel import fused_expand_merge
+from repro.kernels.traversal_kernel import fused_traversal_hop
 
 
 def _pad_to(x: jax.Array, axis: int, size: int, value=0):
@@ -81,4 +82,5 @@ def fes_select(queries: jax.Array, centroids: jax.Array, entries: jax.Array,
     return out_ids, out_d
 
 
-__all__ = ["fes_select", "fes_distances", "fused_expand_merge"]
+__all__ = ["fes_select", "fes_distances", "fused_expand_merge",
+           "fused_traversal_hop"]

@@ -18,6 +18,50 @@ def fes_distances_ref(q_grouped: jax.Array, entries: jax.Array) -> jax.Array:
     return qn + en - 2.0 * dot
 
 
+def traversal_hop_ref(q, nbr_table, vec_table, beam_id, beam_d, beam_ck,
+                      visited, n: int, *, visited_mode: str = "bloom"):
+    """Oracle for fused_traversal_hop: one full expansion round in pure jnp
+    (frontier select, gather, visited filter, distances, beam merge).
+    Returns (new_id, new_d, new_ck, new_visited, fresh)."""
+    from repro.core import bloom as B
+
+    Bq, ef = beam_id.shape
+    unchecked = ~beam_ck & (beam_id < n)
+    has_work = jnp.any(unchecked, axis=1)
+    first = jnp.argmax(unchecked, axis=1)
+    u = jnp.where(has_work,
+                  jnp.take_along_axis(beam_id, first[:, None], axis=1)[:, 0],
+                  n)
+    rows = jnp.arange(Bq)
+    checked = beam_ck.at[rows, first].set(
+        jnp.where(has_work, True, beam_ck[rows, first]))
+
+    nbrs = nbr_table[u]                                   # (B, R)
+    valid = nbrs < n
+    test = B.bloom_test if visited_mode == "bloom" else B.exact_test
+    ins = B.bloom_insert if visited_mode == "bloom" else B.exact_insert
+    seen = test(visited, jnp.where(valid, nbrs, 0))
+    fresh = valid & ~seen
+    new_visited = ins(visited, jnp.where(valid, nbrs, 0), fresh)
+
+    nv = vec_table[nbrs].astype(jnp.float32)              # (B, R, d)
+    qf = q.astype(jnp.float32)
+    qn = jnp.sum(qf * qf, axis=-1)[:, None]
+    vn = jnp.sum(nv * nv, axis=-1)
+    dot = jnp.einsum("bd,brd->br", qf, nv)
+    d = jnp.maximum(qn + vn - 2.0 * dot, 0.0)
+    d = jnp.where(fresh, d, jnp.inf)
+
+    all_id = jnp.concatenate([beam_id, jnp.where(fresh, nbrs, n)], axis=1)
+    all_d = jnp.concatenate([beam_d, d], axis=1)
+    all_ck = jnp.concatenate([checked, ~fresh], axis=1)
+    order = jnp.argsort(all_d, axis=1)[:, :ef]
+    return (jnp.take_along_axis(all_id, order, axis=1),
+            jnp.take_along_axis(all_d, order, axis=1),
+            jnp.take_along_axis(all_ck, order, axis=1),
+            new_visited, fresh)
+
+
 def expand_merge_ref(q, nvecs, nids, fresh, beam_id, beam_d, beam_ck, n: int):
     """Oracle for fused_expand_merge: score fresh neighbours, merge into the
     sorted beam, return (ids, dists, checked) (B, ef)."""

@@ -1,0 +1,266 @@
+"""Pallas TPU kernel: one fully-fused pilot-traversal hop (stage ①).
+
+The unfused hop body (``core.traversal.expansion_round``) round-trips four
+intermediates through HBM per expansion round: the gathered neighbour ids,
+the gathered neighbour vectors, the (B, R) distance block, and the (B, ef+R)
+merge buffer.  This kernel fuses the whole of Algorithm 1's inner loop —
+frontier selection, neighbour gather, visited filtering, MXU distances and
+the sorted-beam merge — into a single ``pallas_call`` per hop, so every
+intermediate lives and dies in VMEM (DESIGN.md §3).
+
+TPU adaptation notes (DESIGN.md §3 spells out the full contract):
+  * gathers are *one-hot matmuls*: ``onehot(u) @ table`` is MXU-dense and
+    lowers everywhere, unlike a dynamic row gather from VMEM.  This requires
+    node ids to be fp32-exact (n < 2**24) and is why the pilot index — not
+    the full corpus — is the target: the replicated subgraph tables are
+    sized to fit on-chip (paper §4.1).
+  * the visited structure (bloom filter or exact bitmap) is updated with the
+    scatter-free one-hot form of ``core.bloom.bloom_insert_dense``, looped
+    over the R neighbour slots so the transient stays (bt, n_bits).
+  * the beam merge uses a *stable* bitonic compare-exchange network (same
+    static schedule as ``topk_kernel``'s, plus a position payload for
+    tie-breaks) so the fused merge matches the unfused path's stable
+    argsort exactly, ties included.
+  * masked distances use BIG (3e38), not +inf, inside the sort; the wrapper
+    maps +inf <-> BIG at the boundary so callers keep the +inf convention.
+
+``fused_traversal_hop`` is the jit-safe host wrapper: it pads the query
+batch to the tile size, table rows to the sublane multiple (sentinel rows,
+id = n), and the visited lanes to 128, then slices everything back.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.topk_kernel import BIG, _next_pow2, _swap_lanes
+
+
+def _bitonic_sort_stable(keys, vals, flags):
+    """Ascending bitonic sort of (B, W) keys carrying (vals, flags), with
+    ties broken by *original lane position* — i.e. a stable sort, matching
+    ``jnp.argsort``'s behaviour in the unfused merge exactly, including on
+    tied distances (duplicate vectors).  W must be a power of two.
+
+    Same compare-exchange schedule as topk_kernel._bitonic_sort_pairs, which
+    instead ties on the id payload (fine for its callers, where equal keys
+    imply equal sentinel ids)."""
+    Bq, W = keys.shape
+    pos = jnp.broadcast_to(
+        jax.lax.broadcasted_iota(jnp.int32, (Bq, W), 1), (Bq, W))
+    stages = int(math.log2(W))
+    for s in range(stages):
+        for t in range(s, -1, -1):
+            stride = 1 << t
+            idx = jax.lax.broadcasted_iota(jnp.int32, (Bq, W), 1)
+            partner = idx ^ stride
+            asc = (idx & (1 << (s + 1))) == 0
+            k_p = _swap_lanes(keys, stride)
+            v_p = _swap_lanes(vals, stride)
+            f_p = _swap_lanes(flags, stride)
+            p_p = _swap_lanes(pos, stride)
+            is_lo = partner > idx
+            keep = jnp.where(is_lo == asc, keys <= k_p, keys > k_p)
+            tie = keys == k_p
+            keep = jnp.where(tie, (pos <= p_p) == (is_lo == asc), keep)
+            keys = jnp.where(keep, keys, k_p)
+            vals = jnp.where(keep, vals, v_p)
+            flags = jnp.where(keep, flags, f_p)
+            pos = jnp.where(keep, pos, p_p)
+    return keys, vals, flags
+
+
+def _bloom_hashes(ids: jax.Array, n_bits: int):
+    """core.bloom.hashes with literal constants — Pallas kernels cannot
+    capture the module-level jnp.uint32 arrays bloom.py uses.  Must stay
+    bit-identical to bloom.hashes (parity with the unfused path)."""
+    x = ids.astype(jnp.uint32)
+    h1 = (x * np.uint32(0x9E3779B1)) ^ ((x * np.uint32(0x85EBCA77)) >> 15)
+    h2 = (x * np.uint32(0xC2B2AE3D)) ^ (x >> 13) ^ (x * np.uint32(0x27D4EB2F))
+    return ((h1 % np.uint32(n_bits)).astype(jnp.int32),
+            (h2 % np.uint32(n_bits)).astype(jnp.int32))
+
+
+def _hop_kernel(q_ref, nbr_ref, vec_ref, bid_ref, bd_ref, bck_ref, vis_ref,
+                oid_ref, od_ref, ock_ref, ovis_ref, ofresh_ref, *,
+                n: int, R: int, ef: int, Wsort: int, hash_bits: int,
+                visited_mode: str):
+    q = q_ref[...].astype(jnp.float32)                    # (bt, dp)
+    bid = bid_ref[...]                                    # (bt, ef) i32
+    bd = bd_ref[...]                                      # (bt, ef) f32
+    bck = bck_ref[...]                                    # (bt, ef) bool
+    vis = vis_ref[...]                                    # (bt, vpad) bool
+    bt = bid.shape[0]
+    Npad = nbr_ref.shape[0]
+    vpad = vis.shape[1]
+
+    # ---- frontier selection: first unchecked candidate per query ----
+    unchecked = ~bck & (bid < n)
+    has_work = jnp.any(unchecked, axis=1)
+    cum = jnp.cumsum(unchecked.astype(jnp.int32), axis=1)
+    firstmask = unchecked & (cum == 1)
+    u = jnp.sum(jnp.where(firstmask, bid, 0), axis=1)
+    u = jnp.where(has_work, u, n)                         # idle rows expand
+    checked = bck | firstmask                             # the sentinel row
+
+    # ---- neighbour-id gather: onehot(u) @ nbr_table (MXU-dense) ----
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (bt, Npad), 1)
+    onehot_u = (row_iota == u[:, None]).astype(jnp.float32)
+    nbrs_f = jax.lax.dot_general(onehot_u, nbr_ref[...].astype(jnp.float32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    nbrs = (nbrs_f + 0.5).astype(jnp.int32)               # ids fp32-exact
+    valid = nbrs < n                                      # (bt, R)
+
+    # ---- visited test + scatter-free insert (bloom or exact bitmap) ----
+    bit_iota = jax.lax.broadcasted_iota(jnp.int32, (bt, vpad), 1)
+    if visited_mode == "bloom":
+        h1, h2 = _bloom_hashes(nbrs, hash_bits)
+    else:
+        h1 = h2 = jnp.clip(nbrs, 0, vpad - 1)
+    seen_cols, ins = [], jnp.zeros_like(vis)
+    # test all R slots against the *pre-insert* filter (matches the unfused
+    # round: duplicates within one round are each scored), then union inserts
+    for r in range(R):
+        m1 = bit_iota == h1[:, r][:, None]
+        m2 = bit_iota == h2[:, r][:, None]
+        t = jnp.any(vis & m1, axis=1) & jnp.any(vis & m2, axis=1)
+        seen_cols.append(t)
+        fresh_r = valid[:, r] & ~t
+        ins = ins | ((m1 | m2) & fresh_r[:, None])
+    seen = jnp.stack(seen_cols, axis=1)
+    fresh = valid & ~seen
+    ovis_ref[...] = vis | ins
+
+    # ---- distances via the MXU identity, one gather-matmul per slot ----
+    qn = jnp.sum(q * q, axis=1)                           # (bt,)
+    vec = vec_ref[...].astype(jnp.float32)                # (Npad, dp)
+    d_cols = []
+    for r in range(R):
+        onehot_r = (row_iota == nbrs[:, r][:, None]).astype(jnp.float32)
+        nv = jax.lax.dot_general(onehot_r, vec, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        vn = jnp.sum(nv * nv, axis=1)
+        dot = jnp.sum(nv * q, axis=1)
+        d_cols.append(jnp.maximum(qn + vn - 2.0 * dot, 0.0))
+    d = jnp.where(fresh, jnp.stack(d_cols, axis=1), BIG)  # (bt, R)
+
+    # ---- bitonic merge into the sorted beam ----
+    pad = Wsort - (ef + R)
+    keys = jnp.concatenate(
+        [bd, d] + ([jnp.full((bt, pad), BIG, jnp.float32)] if pad else []),
+        axis=1)
+    vals = jnp.concatenate(
+        [bid, jnp.where(fresh, nbrs, n)] +
+        ([jnp.full((bt, pad), n, jnp.int32)] if pad else []), axis=1)
+    flags = jnp.concatenate(
+        [checked.astype(jnp.int32), (~fresh).astype(jnp.int32)] +
+        ([jnp.ones((bt, pad), jnp.int32)] if pad else []), axis=1)
+    keys, vals, flags = _bitonic_sort_stable(keys, vals, flags)
+    od_ref[...] = keys[:, :ef]
+    oid_ref[...] = vals[:, :ef]
+    ock_ref[...] = flags[:, :ef] != 0
+    ofresh_ref[...] = fresh
+
+
+def align_tables(nbr_table: jax.Array, vec_table: jax.Array, n: int,
+                 sublane: int = 8) -> Tuple[jax.Array, jax.Array]:
+    """Pad table rows to the kernel's sublane multiple (sentinel id-n rows /
+    zero vector rows).  Single source of truth for the alignment contract:
+    greedy_search hoists this out of the hop loop, and fused_traversal_hop
+    applies it as a no-op fallback for direct callers."""
+    N1 = nbr_table.shape[0]
+    Npad = -(-N1 // sublane) * sublane
+    if Npad == N1:
+        return nbr_table, vec_table
+    return (jnp.pad(nbr_table, ((0, Npad - N1), (0, 0)), constant_values=n),
+            jnp.pad(vec_table, ((0, Npad - N1), (0, 0))))
+
+
+def fused_traversal_hop(q: jax.Array, nbr_table: jax.Array,
+                        vec_table: jax.Array, beam_id: jax.Array,
+                        beam_d: jax.Array, beam_ck: jax.Array,
+                        visited: jax.Array, n: int, *,
+                        visited_mode: str = "bloom", b_tile: int = 128,
+                        interpret: bool = False
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                   jax.Array, jax.Array]:
+    """One fused expansion round.
+
+    q (B, dp); nbr_table (n+1, R) int32 with sentinel row n; vec_table
+    (n+1, dp) with zero row at n; beam_* (B, ef) sorted beam (+inf sentinel
+    distances); visited (B, n_bits) bloom filter or (B, n+1) exact bitmap.
+
+    Returns ``(new_id, new_d, new_ck, new_visited, fresh)`` with the same
+    semantics as ``core.traversal.expansion_round`` minus the counters —
+    ``fresh`` (B, R) lets the caller account n_dist.
+    """
+    Bq, dp = q.shape
+    N1, R = nbr_table.shape
+    ef = beam_id.shape[1]
+    vbits = visited.shape[1]
+    assert n < (1 << 24), "one-hot gather needs fp32-exact node ids"
+    assert vec_table.shape[0] == N1
+
+    # no-op for pre-aligned tables (greedy_search hoists this out of the
+    # hop loop)
+    nbr_t, vec_t = align_tables(nbr_table, vec_table, n)
+    Npad = nbr_t.shape[0]
+    # visited lanes -> 128 multiple (hash modulus stays the logical width)
+    vpad = -(-vbits // 128) * 128
+    vis = jnp.pad(visited, ((0, 0), (0, vpad - vbits))) \
+        if vpad != vbits else visited
+
+    bt = min(b_tile, Bq)
+    Bpad = -(-Bq // bt) * bt
+    if Bpad != Bq:
+        pb = Bpad - Bq
+        q = jnp.pad(q, ((0, pb), (0, 0)))
+        beam_id = jnp.pad(beam_id, ((0, pb), (0, 0)), constant_values=n)
+        beam_d = jnp.pad(beam_d, ((0, pb), (0, 0)), constant_values=jnp.inf)
+        beam_ck = jnp.pad(beam_ck, ((0, pb), (0, 0)), constant_values=True)
+        vis = jnp.pad(vis, ((0, pb), (0, 0)))
+    bd = jnp.where(jnp.isfinite(beam_d), beam_d, BIG)
+
+    kern = functools.partial(
+        _hop_kernel, n=n, R=R, ef=ef, Wsort=_next_pow2(ef + R),
+        hash_bits=vbits, visited_mode=visited_mode)
+    out_shapes = (
+        jax.ShapeDtypeStruct((Bpad, ef), jnp.int32),
+        jax.ShapeDtypeStruct((Bpad, ef), jnp.float32),
+        jax.ShapeDtypeStruct((Bpad, ef), bool),
+        jax.ShapeDtypeStruct((Bpad, vpad), bool),
+        jax.ShapeDtypeStruct((Bpad, R), bool),
+    )
+    oid, od, ock, ovis, ofresh = pl.pallas_call(
+        kern,
+        grid=(Bpad // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, dp), lambda i: (i, 0)),
+            pl.BlockSpec((Npad, R), lambda i: (0, 0)),
+            pl.BlockSpec((Npad, dp), lambda i: (0, 0)),
+            pl.BlockSpec((bt, ef), lambda i: (i, 0)),
+            pl.BlockSpec((bt, ef), lambda i: (i, 0)),
+            pl.BlockSpec((bt, ef), lambda i: (i, 0)),
+            pl.BlockSpec((bt, vpad), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bt, ef), lambda i: (i, 0)),
+            pl.BlockSpec((bt, ef), lambda i: (i, 0)),
+            pl.BlockSpec((bt, ef), lambda i: (i, 0)),
+            pl.BlockSpec((bt, vpad), lambda i: (i, 0)),
+            pl.BlockSpec((bt, R), lambda i: (i, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(q, nbr_t, vec_t, beam_id, bd, beam_ck, vis)
+
+    od = jnp.where(od >= BIG, jnp.inf, od)
+    return (oid[:Bq], od[:Bq], ock[:Bq], ovis[:Bq, :vbits], ofresh[:Bq])

@@ -3,6 +3,8 @@ CSR subgraphs, graph build, FES clustering."""
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

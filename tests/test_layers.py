@@ -3,6 +3,8 @@ GQA + padding), RoPE/M-RoPE structure, chunked cross-entropy, MoE routing."""
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax

@@ -1,0 +1,161 @@
+"""Fused pilot-traversal kernel (kernels/traversal_kernel.py): interpret-mode
+parity against the pure-jnp oracle, the op-by-op greedy_search, and the full
+multi-stage pipeline (DESIGN.md §3)."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import SearchParams, brute_force_topk, recall_at_k
+from repro.core import bloom as B
+from repro.core.traversal import TraversalSpec, greedy_search
+from repro.kernels.ref import traversal_hop_ref
+from repro.kernels.traversal_kernel import _bloom_hashes, fused_traversal_hop
+
+
+def _random_index(n, R, d, seed):
+    """Random regular digraph + random vectors (padded tables)."""
+    rng = np.random.default_rng(seed)
+    nbr = np.stack([rng.choice(n, R, replace=False) for _ in range(n)])
+    nbr_t = np.concatenate([nbr, np.full((1, R), n)]).astype(np.int32)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    vec_t = np.concatenate([x, np.zeros((1, d), np.float32)])
+    return jnp.asarray(nbr_t), jnp.asarray(vec_t)
+
+
+def _random_beam(rng, Bq, ef, n, n_sentinel=3):
+    bid = rng.integers(0, n, (Bq, ef)).astype(np.int32)
+    bd = np.sort(rng.random((Bq, ef)).astype(np.float32) * 40, axis=1)
+    bck = rng.random((Bq, ef)) > 0.6
+    bid[:, ef - n_sentinel:] = n
+    bd[:, ef - n_sentinel:] = np.inf
+    bck[:, ef - n_sentinel:] = True
+    return bid, bd, bck
+
+
+def test_bloom_hashes_match_core():
+    """The kernel-local literal-constant hash must stay bit-identical to
+    core.bloom.hashes (else fused/unfused visited sets diverge)."""
+    ids = jnp.asarray(np.random.default_rng(0).integers(0, 1 << 23, (4, 64)))
+    for bits in (1024, 16384):
+        k1, k2 = _bloom_hashes(ids, bits)
+        r1, r2 = B.hashes(ids, bits)
+        np.testing.assert_array_equal(np.asarray(k1), np.asarray(r1))
+        np.testing.assert_array_equal(np.asarray(k2), np.asarray(r2))
+
+
+@pytest.mark.parametrize("B_,R,ef,d", [
+    (8, 8, 16, 16), (32, 16, 32, 32), (64, 32, 48, 64), (12, 8, 16, 24),
+])
+@pytest.mark.parametrize("mode", ["bloom", "exact"])
+def test_fused_hop_matches_oracle(B_, R, ef, d, mode):
+    rng = np.random.default_rng(B_ + R + ef)
+    n = 600
+    nbr_t, vec_t = _random_index(n, R, d, seed=7)
+    q = jnp.asarray(rng.normal(size=(B_, d)).astype(np.float32))
+    bid, bd, bck = _random_beam(rng, B_, ef, n)
+
+    vis = B.bloom_init(B_, 2048) if mode == "bloom" else B.exact_init(B_, n)
+    ins = B.bloom_insert if mode == "bloom" else B.exact_insert
+    vis = ins(vis, jnp.asarray(np.where(bid < n, bid, 0)),
+              jnp.asarray(bid < n))
+
+    args = [jnp.asarray(a) for a in (q, nbr_t, vec_t, bid, bd, bck)]
+    got = fused_traversal_hop(*args, vis, n, visited_mode=mode,
+                              interpret=True)
+    want = traversal_hop_ref(*args, vis, n, visited_mode=mode)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]))
+    np.testing.assert_array_equal(np.asarray(got[3]), np.asarray(want[3]))
+    np.testing.assert_array_equal(np.asarray(got[4]), np.asarray(want[4]))
+
+
+def test_fused_hop_pads_ragged_batch():
+    """B not a tile multiple: wrapper pads to b_tile and slices back."""
+    rng = np.random.default_rng(3)
+    n, R, ef, d, B_ = 600, 8, 16, 16, 10
+    nbr_t, vec_t = _random_index(n, R, d, seed=9)
+    q = jnp.asarray(rng.normal(size=(B_, d)).astype(np.float32))
+    bid, bd, bck = _random_beam(rng, B_, ef, n)
+    vis = B.exact_insert(B.exact_init(B_, n),
+                         jnp.asarray(np.where(bid < n, bid, 0)),
+                         jnp.asarray(bid < n))
+    args = [jnp.asarray(a) for a in (q, nbr_t, vec_t, bid, bd, bck)]
+    got = fused_traversal_hop(*args, vis, n, visited_mode="exact",
+                              b_tile=4, interpret=True)
+    want = traversal_hop_ref(*args, vis, n, visited_mode="exact")
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    assert got[0].shape == (B_, ef) and got[3].shape == vis.shape
+
+
+@pytest.mark.parametrize("mode", ["bloom", "exact"])
+def test_pallas_greedy_search_parity_4k(mode):
+    """Acceptance: identical ids/dists (and counters) to the op-by-op
+    greedy_search on a >=4k-node random index, run to convergence."""
+    rng = np.random.default_rng(11)
+    n, R, d, B_, ef = 4096, 16, 32, 32, 32
+    nbr_t, vec_t = _random_index(n, R, d, seed=11)
+    q = jnp.asarray(rng.normal(size=(B_, d)).astype(np.float32))
+    entries = jnp.asarray(rng.integers(0, n, (B_, 4)).astype(np.int32))
+
+    ref = greedy_search(TraversalSpec(ef=ef, visited_mode=mode),
+                        q, nbr_t, vec_t, n, entries)
+    fused = greedy_search(TraversalSpec(ef=ef, visited_mode=mode,
+                                        use_pallas=True),
+                          q, nbr_t, vec_t, n, entries)
+    np.testing.assert_array_equal(np.asarray(ref.cand_id),
+                                  np.asarray(fused.cand_id))
+    np.testing.assert_allclose(np.asarray(ref.cand_d),
+                               np.asarray(fused.cand_d),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ref.n_dist),
+                                  np.asarray(fused.n_dist))
+    np.testing.assert_array_equal(np.asarray(ref.n_hops),
+                                  np.asarray(fused.n_hops))
+
+
+def test_parity_holds_on_tied_distances():
+    """Duplicate vectors produce exactly tied distances; the fused merge is
+    a *stable* sort (position tie-break) so it must still match the unfused
+    path's stable argsort bit-for-bit."""
+    rng = np.random.default_rng(21)
+    n, R, d, B_, ef = 512, 8, 8, 8, 16
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    x[1::2] = x[::2]                       # every node has an exact twin
+    nbr = np.stack([rng.choice(n, R, replace=False) for _ in range(n)])
+    nbr_t = jnp.asarray(np.concatenate([nbr, np.full((1, R), n)])
+                        .astype(np.int32))
+    vec_t = jnp.asarray(np.concatenate([x, np.zeros((1, d), np.float32)]))
+    q = jnp.asarray(x[rng.choice(n, B_)] + 0.01)
+    entries = jnp.asarray(rng.integers(0, n, (B_, 2)).astype(np.int32))
+
+    ref = greedy_search(TraversalSpec(ef=ef, visited_mode="exact"),
+                        q, nbr_t, vec_t, n, entries)
+    fused = greedy_search(TraversalSpec(ef=ef, visited_mode="exact",
+                                        use_pallas=True),
+                          q, nbr_t, vec_t, n, entries)
+    np.testing.assert_array_equal(np.asarray(ref.cand_id),
+                                  np.asarray(fused.cand_id))
+    np.testing.assert_array_equal(np.asarray(ref.n_dist),
+                                  np.asarray(fused.n_dist))
+
+
+def test_multistage_recall_unchanged(built_index, small_dataset):
+    """Acceptance: use_pallas_traversal=True leaves multistage_search recall
+    (in fact the exact result ids) unchanged; ragged query batches are padded
+    by the engine and sliced back."""
+    queries = small_dataset.queries[:100]          # 100: not sublane-aligned
+    gt = brute_force_topk(small_dataset.vectors, queries, 10)
+    base = SearchParams(k=10, ef=48, ef_pilot=48)
+    fused = SearchParams(k=10, ef=48, ef_pilot=48, use_pallas_traversal=True)
+
+    ids0, d0, st0 = built_index.search(queries, base)
+    ids1, d1, st1 = built_index.search(queries, fused)
+    assert ids1.shape == (100, 10)
+    np.testing.assert_array_equal(ids0, ids1)
+    assert recall_at_k(ids1, gt, 10) == recall_at_k(ids0, gt, 10)
+    np.testing.assert_array_equal(st0["pilot_dist"], st1["pilot_dist"])
+    assert st1["pilot_dist"].shape == (100,)
