@@ -1,12 +1,15 @@
 #!/usr/bin/env bash
-# Pre-PR smoke check (see README.md). Runs all three sections even if an
-# earlier one fails, then summarizes:
+# Pre-PR smoke check (see README.md); also what CI runs
+# (.github/workflows/ci.yml). Runs all four sections even if an earlier one
+# fails, then summarizes:
 #   1. tier-1 verify (ROADMAP.md), minus the tests known-red on this
 #      container's jax version (flash-attention pallas internals, qwen2-vl,
 #      train-integration, and the slow mesh tests) — so a red section 1
 #      means *your* change regressed something
 #   2. fused pilot-traversal kernel parity, interpret mode
 #   3. the quickstart example end-to-end
+#   4. quick benchmark smoke: the frontier_sweep module, with
+#      machine-readable BENCH_frontier_sweep.json for the perf trajectory
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -21,21 +24,25 @@ KNOWN_RED=(
 
 declare -A status
 
-echo "== [1/3] tier-1 verify (minus known-red, minus slow) =="
+echo "== [1/4] tier-1 verify (minus known-red, minus slow) =="
 python -m pytest -x -q -m "not slow" "${KNOWN_RED[@]}"
 status[tier1]=$?
 
-echo "== [2/3] fused traversal kernel parity (interpret mode) =="
+echo "== [2/4] fused traversal kernel parity (interpret mode) =="
 python -m pytest -q "tests/test_traversal_kernel.py::test_pallas_greedy_search_parity_4k[bloom]"
 status[kernel_parity]=$?
 
-echo "== [3/3] quickstart =="
+echo "== [3/4] quickstart =="
 python examples/quickstart.py
 status[quickstart]=$?
 
+echo "== [4/4] benchmark smoke (frontier_sweep, interpret mode) =="
+python -m benchmarks.run --only frontier_sweep --json .
+status[bench_smoke]=$?
+
 echo
 rc=0
-for k in tier1 kernel_parity quickstart; do
+for k in tier1 kernel_parity quickstart bench_smoke; do
     if [ "${status[$k]}" -eq 0 ]; then
         echo "smoke: $k OK"
     else

@@ -52,6 +52,8 @@ class PodIndexSpec:
     refine_iters: int = 2
     final_iters: int = 24
     bloom_bits: int = 16384
+    frontier_width: int = 1       # stage-②③ candidates expanded per round
+    frontier_width_pilot: int = 1  # stage-① multi-frontier width
     vec_dtype: str = "float32"   # corpus vector storage (bf16 halves memory
                                  # and naive-gather wire bytes; fp32 accum)
 
@@ -123,7 +125,9 @@ def make_pod_search_step(spec: PodIndexSpec, params: Optional[SearchParams] = No
     shard_map hooks: distances/neighbour-rows are produced corpus-shard-side
     and psum'd — (B, E) scalars on the wire instead of (B, E, d) vectors."""
     params = params or SearchParams(ef=spec.ef, ef_pilot=spec.ef_pilot,
-                                    bloom_bits=spec.bloom_bits)
+                                    bloom_bits=spec.bloom_bits,
+                                    frontier_width=spec.frontier_width,
+                                    frontier_width_pilot=spec.frontier_width_pilot)
 
     def search_step(pilot_neighbors, pilot_vecs, pilot_to_full,
                     fes_centroids, fes_entries, fes_entry_ids, fes_valid,
@@ -157,6 +161,7 @@ def make_pod_search_step(spec: PodIndexSpec, params: Optional[SearchParams] = No
         spec1 = T.TraversalSpec(
             ef=params.ef_pilot, visited_mode="bloom",
             bloom_bits=params.bloom_bits,
+            frontier_width=params.frontier_width_pilot,
             dense_visited_update=gather_mode == "shardwise",
             state_spec=(P(tuple(mesh.axis_names), None)
                         if gather_mode == "shardwise" else None))
@@ -175,9 +180,14 @@ def make_pod_search_step(spec: PodIndexSpec, params: Optional[SearchParams] = No
             d_full = dist_fn(queries, cand_full)
         d_full = jnp.where(cand_full < n, d_full, jnp.inf)
 
-        # ---- stage ③: bounded traversal on the sharded full index ----
+        # ---- stage ③: bounded traversal on the sharded full index.
+        # W-wide rounds stay query-sharded under 'shardwise': nbr_fn runs
+        # once per frontier ((B,) ids in, (B, R) rows psum'd back) and
+        # dist_fn scores the whole (B, W·R) id block shard-side, so the only
+        # W-dependent wire traffic is the (B, W·R) scalar psum ----
         spec3 = T.TraversalSpec(ef=params.ef, visited_mode="bloom",
                                 bloom_bits=params.bloom_bits,
+                                frontier_width=params.frontier_width,
                                 dense_visited_update=gather_mode == "shardwise",
                                 state_spec=(jax.sharding.PartitionSpec(
                                     query_spec[0], None)

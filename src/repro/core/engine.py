@@ -125,12 +125,16 @@ class PilotANNIndex:
     @staticmethod
     def _pad_batch(q: jax.Array, params: SearchParams,
                    align: int = 8) -> Tuple[jax.Array, int]:
-        """Pallas path: pad the query batch to a sublane-aligned size so the
-        fused hop kernel tiles cleanly (DESIGN.md §3); results are sliced
-        back to the caller's batch.  Also caps jit-signature churn for
-        ragged client batches."""
+        """Pallas path (per-hop or persistent): pad the query batch to a
+        sublane-aligned size so the fused kernels tile cleanly (DESIGN.md
+        §3); results are sliced back to the caller's batch.  Also caps
+        jit-signature churn for ragged client batches.  The jit cache key is
+        ``dataclasses.astuple(params)``, so frontier widths and the
+        persistent-kernel switch each compile (and cache) their own search
+        function."""
         B = q.shape[0]
-        if not params.use_pallas_traversal or B % align == 0:
+        use_pallas = params.use_pallas_traversal or params.use_persistent_traversal
+        if not use_pallas or B % align == 0:
             return q, B
         return jnp.pad(q, ((0, align - B % align), (0, 0))), B
 

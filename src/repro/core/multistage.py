@@ -43,11 +43,19 @@ class SearchParams:
     visited_mode: str = "bloom"   # bloom | exact visited-set structure
     bloom_bits: int = 16384  # bloom filter width per query (bits)
     max_iters: int = 512     # safety bound on expansion rounds per stage
+    # multi-frontier expansion: candidates expanded per round.  frontier_width
+    # drives stages ②/③ (and the baseline); frontier_width_pilot drives
+    # stage ①.  1 = the classic single-frontier round (bit-identical).
+    frontier_width: int = 1
+    frontier_width_pilot: int = 1
     # stage ① via the fused Pallas hop kernel (DESIGN.md §3).
     # pallas_interpret=True emulates the kernel on CPU (tests/benchmarks);
     # set False on real TPU to run the compiled kernel.
     use_pallas_traversal: bool = False
     pallas_interpret: bool = True
+    # stage ① via the persistent whole-search kernel (one pallas_call for the
+    # entire pilot search; implies the fused hop path).  DESIGN.md §3.
+    use_persistent_traversal: bool = False
 
 
 class Stats(dict):
@@ -63,11 +71,8 @@ def hierarchical_entries(arrays: Dict[str, jax.Array], queries: jax.Array,
     Bq = queries.shape[0]
     cv = arrays["coarse_vecs"][:-1]                # (m, d), drop sentinel row
     m = cv.shape[0]
-    q = queries.astype(jnp.float32)
-    qn = jnp.sum(q * q, axis=1)[:, None]
-    cn = jnp.sum(cv * cv, axis=1)[None, :]
-    d2 = qn + cn - 2.0 * (q @ cv.T)                # (B, m)
-    neg, idx = jax.lax.top_k(-d2, n_out)
+    d2 = T.sq_dists(queries, cv)                   # (B, m)
+    idx = jax.lax.top_k(-d2, n_out)[1]
     cost = jnp.full((Bq,), m, jnp.int32)
     return arrays["coarse_ids"][idx], cost
 
@@ -110,18 +115,24 @@ def multistage_search(arrays: Dict[str, jax.Array], params: SearchParams,
         spec1 = T.TraversalSpec(ef=params.ef_pilot, visited_mode=params.visited_mode,
                                 bloom_bits=params.bloom_bits,
                                 max_iters=params.max_iters,
-                                use_pallas=params.use_pallas_traversal,
-                                pallas_interpret=params.pallas_interpret)
+                                frontier_width=params.frontier_width_pilot,
+                                use_pallas=(params.use_pallas_traversal or
+                                            params.use_persistent_traversal),
+                                pallas_interpret=params.pallas_interpret,
+                                use_persistent=params.use_persistent_traversal)
         padded_primary = arrays["primary"]
         st1 = T.greedy_search(spec1, q_primary, arrays["sub_neighbors"],
                               padded_primary, n, entry_ids)
         stats["pilot_dist"] = st1.n_dist
         stats["pilot_hops"] = st1.n_hops
+        stats["pilot_expanded"] = st1.n_exp
         cand_id, cand_dp = st1.cand_id, st1.cand_d
         visited = st1.visited
     else:
         cand_id, cand_dp = None, None
         stats["pilot_dist"] = jnp.zeros((Bq,), jnp.int32)
+        stats["pilot_hops"] = jnp.zeros((Bq,), jnp.int32)
+        stats["pilot_expanded"] = jnp.zeros((Bq,), jnp.int32)
 
     # ---- stage ②: residual refinement ----------------------------------
     if params.use_refine and params.use_pilot:
@@ -133,7 +144,8 @@ def multistage_search(arrays: Dict[str, jax.Array], params: SearchParams,
         stats["refine_dist"] = jnp.sum(cand_id < n, axis=1).astype(jnp.int32)
         # re-rank, then bounded traversal on subgraph with FULL vectors
         spec2 = T.TraversalSpec(ef=params.ef, visited_mode=params.visited_mode,
-                                bloom_bits=params.bloom_bits)
+                                bloom_bits=params.bloom_bits,
+                                frontier_width=params.frontier_width)
         st2 = T.greedy_search(spec2, queries, arrays["sub_neighbors"],
                               arrays["rot_vecs"], n,
                               entry_ids=jnp.full((Bq, 1), n, jnp.int32),
@@ -154,7 +166,8 @@ def multistage_search(arrays: Dict[str, jax.Array], params: SearchParams,
     # ---- stage ③: final traversal (full graph + vectors) ---------------
     spec3 = T.TraversalSpec(ef=params.ef, visited_mode=params.visited_mode,
                             bloom_bits=params.bloom_bits,
-                            max_iters=params.max_iters)
+                            max_iters=params.max_iters,
+                            frontier_width=params.frontier_width)
     if seed_id is not None:
         st3 = T.greedy_search(spec3, queries, arrays["full_neighbors"],
                               arrays["rot_vecs"], n,
@@ -169,6 +182,7 @@ def multistage_search(arrays: Dict[str, jax.Array], params: SearchParams,
                               arrays["rot_vecs"], n, entry_ids=entry_ids)
     stats["final_dist"] = st3.n_dist
     stats["final_hops"] = st3.n_hops
+    stats["final_expanded"] = st3.n_exp
     stats["total_cpu_dist"] = stats["refine_dist"] + stats["final_dist"]
 
     ids, dists = T.topk_from_state(st3, params.k)
@@ -177,16 +191,27 @@ def multistage_search(arrays: Dict[str, jax.Array], params: SearchParams,
 
 def baseline_search(arrays: Dict[str, jax.Array], params: SearchParams,
                     queries: jax.Array) -> Tuple[jax.Array, jax.Array, Dict]:
-    """Single-stage greedy search on the full index (the HNSW-CPU baseline)."""
+    """Single-stage greedy search on the full index (the HNSW-CPU baseline).
+
+    Returns the same unified ``stats`` schema as ``multistage_search``
+    (docs/api.md glossary): the skipped stages report zero, the coarse
+    entry-layer scan is charged as ``fes_dist``, and ``total_cpu_dist``
+    includes it (the baseline's entry scan is host-side work, unlike the
+    accelerator-resident FES pass)."""
     n = arrays["rot_vecs"].shape[0] - 1
     Bq = queries.shape[0]
     spec = T.TraversalSpec(ef=params.ef, visited_mode=params.visited_mode,
                            bloom_bits=params.bloom_bits,
-                           max_iters=params.max_iters)
+                           max_iters=params.max_iters,
+                           frontier_width=params.frontier_width)
     entries, entry_cost = hierarchical_entries(arrays, queries, params)
     st = T.greedy_search(spec, queries, arrays["full_neighbors"],
                          arrays["rot_vecs"], n, entries)
     ids, dists = T.topk_from_state(st, params.k)
-    total = st.n_dist + entry_cost
-    return ids, dists, {"final_dist": total, "final_hops": st.n_hops,
-                        "total_cpu_dist": total}
+    zeros = jnp.zeros((Bq,), jnp.int32)
+    return ids, dists, {"fes_dist": entry_cost,
+                        "pilot_dist": zeros, "pilot_hops": zeros,
+                        "pilot_expanded": zeros, "refine_dist": zeros,
+                        "final_dist": st.n_dist, "final_hops": st.n_hops,
+                        "final_expanded": st.n_exp,
+                        "total_cpu_dist": st.n_dist + entry_cost}

@@ -41,8 +41,11 @@ def split_stages(arrays: Dict[str, jax.Array], params: SearchParams):
         spec1 = T.TraversalSpec(ef=params.ef_pilot, visited_mode=params.visited_mode,
                                 bloom_bits=params.bloom_bits,
                                 max_iters=params.max_iters,
-                                use_pallas=params.use_pallas_traversal,
-                                pallas_interpret=params.pallas_interpret)
+                                frontier_width=params.frontier_width_pilot,
+                                use_pallas=(params.use_pallas_traversal or
+                                            params.use_persistent_traversal),
+                                pallas_interpret=params.pallas_interpret,
+                                use_persistent=params.use_persistent_traversal)
         st1 = T.greedy_search(spec1, qp, arrays["sub_neighbors"],
                               arrays["primary"], n, entry_ids)
         return st1.cand_id, st1.cand_d, st1.visited
@@ -54,7 +57,8 @@ def split_stages(arrays: Dict[str, jax.Array], params: SearchParams):
         d_full = jnp.where(cand_id < n, cand_dp + T.sq_dists(qr, rvecs), jnp.inf)
         Bq = queries.shape[0]
         spec2 = T.TraversalSpec(ef=params.ef, visited_mode=params.visited_mode,
-                                bloom_bits=params.bloom_bits)
+                                bloom_bits=params.bloom_bits,
+                                frontier_width=params.frontier_width)
         st2 = T.greedy_search(spec2, queries, arrays["sub_neighbors"],
                               arrays["rot_vecs"], n,
                               entry_ids=jnp.full((Bq, 1), n, jnp.int32),
@@ -62,7 +66,8 @@ def split_stages(arrays: Dict[str, jax.Array], params: SearchParams):
                               extra_id=cand_id, extra_d=d_full)
         spec3 = T.TraversalSpec(ef=params.ef, visited_mode=params.visited_mode,
                                 bloom_bits=params.bloom_bits,
-                                max_iters=params.max_iters)
+                                max_iters=params.max_iters,
+                                frontier_width=params.frontier_width)
         st3 = T.greedy_search(spec3, queries, arrays["full_neighbors"],
                               arrays["rot_vecs"], n,
                               entry_ids=jnp.full((Bq, 1), n, jnp.int32),

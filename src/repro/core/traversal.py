@@ -5,7 +5,11 @@ dynamic traversal, a *query batch* advances one neighbour-expansion round per
 step — every op is dense and fixed-shape, so the same code runs under jit on
 CPU (reference engine), vectorises on TPU, and lowers on the production mesh
 (distributed engine).  The candidate list is a sorted (B, ef) beam; visited
-tracking is a bloom filter (paper §4.3) or an exact bitmap.
+tracking is a bloom filter (paper §4.3) or an exact bitmap.  Rounds are
+W-wide (spec.frontier_width): the top-W unchecked beam entries expand
+together, scoring up to W·R neighbours in one (B, W·R, d) MXU-dense block —
+the CAGRA-style lever that trades a few extra distance computations for a
+~W× cut in rounds-to-convergence (serial depth).
 
 The traversal returns per-query distance-computation counts — the unit in
 which the paper reports all of its complexity results (Tables 1–2, Fig. 3–4).
@@ -32,7 +36,9 @@ class SearchState(NamedTuple):
     checked: jax.Array   # (B, ef) bool
     visited: jax.Array   # (B, n_bits/n) bool filter
     n_dist: jax.Array    # (B,) int32 distance-computation counter
-    n_hops: jax.Array    # (B,) int32
+    n_hops: jax.Array    # (B,) int32 expansion *rounds* with work
+    n_exp: jax.Array     # (B,) int32 candidates actually expanded
+                         # (== n_hops at frontier_width=1)
 
 
 @dataclass(frozen=True)
@@ -41,6 +47,10 @@ class TraversalSpec:
     visited_mode: str = "bloom"      # bloom | exact
     bloom_bits: int = 16384
     max_iters: int = 512
+    # multi-frontier expansion: expand the top-W unchecked beam entries per
+    # round, scoring up to W·R neighbours in one (B, W·R, dp) distance block.
+    # W=1 is bit-identical to the classic single-frontier round.
+    frontier_width: int = 1
     # distributed engines pin the per-query state (beam, visited bitset) to
     # the query sharding and use the scatter-free bloom update: the scatter
     # form partitions as replicated-operand + all-reduce(OR) — gigabytes per
@@ -53,17 +63,29 @@ class TraversalSpec:
     # (CPU-correct; compiled lowering is for real TPU runs).
     use_pallas: bool = False
     pallas_interpret: bool = True
+    # persistent stage-① kernel (kernels/traversal_kernel.fused_pilot_search):
+    # the whole search — frontier selection, gather, visited filter,
+    # distances, merge, convergence — runs inside ONE pallas_call with a
+    # while_loop over hops, so beam/visited/counters stay in VMEM for the
+    # whole search.  Requires use_pallas; falls back to per-hop kernels when
+    # custom nbr_fn/dist_fn hooks are injected or unroll is requested.
+    use_persistent: bool = False
 
 
 def sq_dists(q: jax.Array, vecs: jax.Array) -> jax.Array:
-    """q: (B, d); vecs: (B, R, d) -> (B, R) squared euclidean, fp32.
+    """q: (B, d); vecs: (B, R, d) — or (m, d) shared across the batch —
+    -> (B, R) / (B, m) squared euclidean, fp32.
 
     Formulated as norms - 2·dot so the contraction is a matmul (MXU-dense on
-    TPU; the FES kernel uses the same identity with cluster tiling)."""
+    TPU; the FES kernel uses the same identity with cluster tiling).  This is
+    the single source of truth for the norms-minus-2dot identity; callers
+    (stage ② re-rank, coarse entry layer) reuse it instead of open-coding."""
     q = q.astype(jnp.float32)
     vecs = vecs.astype(jnp.float32)
     qn = jnp.sum(q * q, axis=-1)[:, None]
     vn = jnp.sum(vecs * vecs, axis=-1)
+    if vecs.ndim == 2:                     # one shared (m, d) table
+        return jnp.maximum(qn + vn[None, :] - 2.0 * (q @ vecs.T), 0.0)
     dot = jnp.einsum("bd,brd->br", q, vecs)
     return jnp.maximum(qn + vn - 2.0 * dot, 0.0)
 
@@ -130,42 +152,65 @@ def init_state(spec: TraversalSpec, queries: jax.Array, entry_ids: jax.Array,
                            cand_id < n)
     return SearchState(cand_id=cand_id.astype(jnp.int32), cand_d=cand_d,
                        checked=cand_id >= n, visited=filt,
-                       n_dist=n_dist, n_hops=jnp.zeros((Bq,), jnp.int32))
+                       n_dist=n_dist, n_hops=jnp.zeros((Bq,), jnp.int32),
+                       n_exp=jnp.zeros((Bq,), jnp.int32))
 
 
 def expansion_round(spec: TraversalSpec, state: SearchState, queries: jax.Array,
                     neighbor_table: jax.Array, vector_table: jax.Array,
                     n: int, nbr_fn=None, dist_fn=None) -> SearchState:
-    """One synchronous neighbour-expansion round for the whole batch.
+    """One synchronous W-wide neighbour-expansion round for the whole batch.
 
-    ``nbr_fn(u) -> (B, R)`` and ``dist_fn(queries, ids, fresh) -> (B, R)``
-    override the table lookups — the distributed engine injects shard_map
-    versions that fetch/score corpus rows shard-side (perf: 'shardwise')."""
+    The top ``W = spec.frontier_width`` unchecked beam entries are expanded
+    together: their up-to W·R neighbours are scored in a single
+    ``(B, W·R, d)`` distance block (one MXU-dense matmul) and merged into the
+    beam in one ``ef + W·R``-wide stable sort.  Visited filtering is
+    *sequential per frontier* — frontier ``w`` is tested against the filter
+    including frontiers ``< w``'s inserts — so a node reachable from two
+    frontiers in the same round is scored once, exactly as if the frontiers
+    had been expanded in consecutive single-frontier rounds.  W=1 therefore
+    reduces bit-identically to the classic one-candidate round.
+
+    ``nbr_fn(u) -> (B, R)`` (called once per frontier) and
+    ``dist_fn(queries, ids, fresh) -> ids.shape`` override the table lookups —
+    the distributed engine injects shard_map versions that fetch/score corpus
+    rows shard-side (perf: 'shardwise')."""
     Bq, ef = state.cand_id.shape
     R = neighbor_table.shape[1]
+    W = spec.frontier_width
 
     if spec.use_pallas and nbr_fn is None and dist_fn is None:
         return _pallas_round(spec, state, queries, neighbor_table,
                              vector_table, n)
 
-    # best unchecked candidate per query (rows with none stay idle)
+    # top-W unchecked candidates per query: the beam is distance-sorted, so
+    # the first W unchecked slots are the W best (rows with none stay idle)
     unchecked = ~state.checked & (state.cand_id < n)
     has_work = jnp.any(unchecked, axis=1)
-    first = jnp.argmax(unchecked, axis=1)                     # first True
-    u = jnp.where(has_work,
-                  jnp.take_along_axis(state.cand_id, first[:, None], axis=1)[:, 0],
-                  n)
-    checked = state.checked.at[jnp.arange(Bq), first].set(
-        jnp.where(has_work, True, state.checked[jnp.arange(Bq), first]))
+    cum = jnp.cumsum(unchecked.astype(jnp.int32), axis=1)
+    sel = unchecked & (cum <= W)
+    checked = state.checked | sel
+    n_exp = state.n_exp + jnp.sum(sel, axis=1).astype(jnp.int32)
 
-    nbrs = (neighbor_table[u] if nbr_fn is None else nbr_fn(u))  # (B, R)
-    valid = nbrs < n
-    seen = _visited_test(spec, state.visited, jnp.where(valid, nbrs, 0))
-    fresh = valid & ~seen
-    visited = _visited_insert(spec, state.visited, jnp.where(valid, nbrs, 0), fresh)
+    visited = state.visited
+    nbrs_w, fresh_w = [], []
+    for w in range(W):
+        mask_w = sel & (cum == w + 1)                     # w-th frontier slot
+        u_w = jnp.where(jnp.any(mask_w, axis=1),
+                        jnp.sum(jnp.where(mask_w, state.cand_id, 0), axis=1),
+                        n)
+        nw = (neighbor_table[u_w] if nbr_fn is None else nbr_fn(u_w))  # (B, R)
+        vw = nw < n
+        seen = _visited_test(spec, visited, jnp.where(vw, nw, 0))
+        fw = vw & ~seen
+        visited = _visited_insert(spec, visited, jnp.where(vw, nw, 0), fw)
+        nbrs_w.append(nw)
+        fresh_w.append(fw)
+    nbrs = nbrs_w[0] if W == 1 else jnp.concatenate(nbrs_w, axis=1)  # (B, W·R)
+    fresh = fresh_w[0] if W == 1 else jnp.concatenate(fresh_w, axis=1)
 
     if dist_fn is None:
-        nvecs = vector_table[nbrs]                            # (B, R, d)
+        nvecs = vector_table[nbrs]                            # (B, W·R, d)
         d = jnp.where(fresh, sq_dists(queries, nvecs), INF)
     else:
         d = jnp.where(fresh, dist_fn(queries, nbrs, fresh), INF)
@@ -173,7 +218,7 @@ def expansion_round(spec: TraversalSpec, state: SearchState, queries: jax.Array,
     if spec.state_spec is not None:
         visited = lax.with_sharding_constraint(visited, spec.state_spec)
 
-    # merge beam with fresh neighbours
+    # merge beam with fresh neighbours (stable: ties keep beam-first order)
     all_id = jnp.concatenate([state.cand_id, jnp.where(fresh, nbrs, n)], axis=1)
     all_d = jnp.concatenate([state.cand_d, d], axis=1)
     all_ck = jnp.concatenate([checked, ~fresh], axis=1)
@@ -191,22 +236,28 @@ def expansion_round(spec: TraversalSpec, state: SearchState, queries: jax.Array,
         visited=visited,
         n_dist=n_dist,
         n_hops=state.n_hops + has_work.astype(jnp.int32),
+        n_exp=n_exp,
     )
 
 
 def _pallas_round(spec: TraversalSpec, state: SearchState, queries: jax.Array,
                   neighbor_table: jax.Array, vector_table: jax.Array,
                   n: int) -> SearchState:
-    """Fused expansion round: the whole hop body runs as one Pallas kernel
-    (gather + visited filter + MXU distances + bitonic beam merge); only the
-    counters are maintained here (cheap (B, ef)/(B, R) reductions)."""
+    """Fused expansion round: the whole W-wide hop body runs as one Pallas
+    kernel (frontier selection + gather + visited filter + MXU distances +
+    bitonic beam merge); only the counters are maintained here (cheap
+    (B, ef)/(B, W·R) reductions)."""
     from repro.kernels.traversal_kernel import fused_traversal_hop
 
-    has_work = jnp.any(~state.checked & (state.cand_id < n), axis=1)
+    unchecked = ~state.checked & (state.cand_id < n)
+    has_work = jnp.any(unchecked, axis=1)
+    cum = jnp.cumsum(unchecked.astype(jnp.int32), axis=1)
+    n_sel = jnp.sum(unchecked & (cum <= spec.frontier_width),
+                    axis=1).astype(jnp.int32)
     new_id, new_d, new_ck, visited, fresh = fused_traversal_hop(
         queries, neighbor_table, vector_table, state.cand_id, state.cand_d,
-        state.checked, state.visited, n, visited_mode=spec.visited_mode,
-        interpret=spec.pallas_interpret)
+        state.checked, state.visited, n, width=spec.frontier_width,
+        visited_mode=spec.visited_mode, interpret=spec.pallas_interpret)
     return SearchState(
         cand_id=new_id,
         cand_d=new_d,
@@ -214,6 +265,7 @@ def _pallas_round(spec: TraversalSpec, state: SearchState, queries: jax.Array,
         visited=visited,
         n_dist=state.n_dist + jnp.sum(fresh, axis=1).astype(jnp.int32),
         n_hops=state.n_hops + has_work.astype(jnp.int32),
+        n_exp=state.n_exp + n_sel,
     )
 
 
@@ -226,7 +278,8 @@ def greedy_search(spec: TraversalSpec, queries: jax.Array,
                   extra_id: Optional[jax.Array] = None,
                   extra_d: Optional[jax.Array] = None,
                   nbr_fn=None, dist_fn=None) -> SearchState:
-    """Greedy best-first search (Algorithm 1), batched.
+    """Greedy best-first search (Algorithm 1), batched, W-wide per round
+    (spec.frontier_width).
 
     neighbor_table: (n+1, R) padded adjacency (row n = sentinel row).
     vector_table:   (n+1, d) vectors with zero row at n.
@@ -236,6 +289,9 @@ def greedy_search(spec: TraversalSpec, queries: jax.Array,
     unroll: emit the fixed rounds as straight-line HLO instead of a while
     loop — the dry-run uses this so cost_analysis()/collective parsing see
     every round (XLA does not scale loop-body costs by trip count).
+    With spec.use_persistent (and no hooks/unroll) the entire hop loop runs
+    inside one persistent Pallas kernel instead (DESIGN.md §3) — results
+    are identical either way.
     """
     state = init_state(spec, queries, entry_ids, vector_table[:-1], n,
                        visited=visited, extra_id=extra_id, extra_d=extra_d)
@@ -247,6 +303,25 @@ def greedy_search(spec: TraversalSpec, queries: jax.Array,
         from repro.kernels.traversal_kernel import align_tables
         neighbor_table, vector_table = align_tables(neighbor_table,
                                                     vector_table, n)
+
+        if spec.use_persistent and not unroll:
+            # persistent stage-① kernel: the whole search (hop loop included)
+            # is ONE pallas_call — beam/visited/counters never leave VMEM.
+            # Convergence is handled inside the kernel; a converged round is
+            # a fixed point, so a fixed `iters` budget and run-to-convergence
+            # agree with the per-hop path exactly.
+            from repro.kernels.traversal_kernel import fused_pilot_search
+            rounds = iters if iters is not None else spec.max_iters
+            nid, nd, nck, nvis, d_dist, d_hops, d_exp = fused_pilot_search(
+                queries, neighbor_table, vector_table, state.cand_id,
+                state.cand_d, state.checked, state.visited, n,
+                rounds=rounds, width=spec.frontier_width,
+                visited_mode=spec.visited_mode,
+                interpret=spec.pallas_interpret)
+            return SearchState(cand_id=nid, cand_d=nd, checked=nck,
+                               visited=nvis, n_dist=state.n_dist + d_dist,
+                               n_hops=state.n_hops + d_hops,
+                               n_exp=state.n_exp + d_exp)
 
     round_fn = partial(expansion_round, spec, queries=queries,
                        neighbor_table=neighbor_table,

@@ -19,32 +19,38 @@ def fes_distances_ref(q_grouped: jax.Array, entries: jax.Array) -> jax.Array:
 
 
 def traversal_hop_ref(q, nbr_table, vec_table, beam_id, beam_d, beam_ck,
-                      visited, n: int, *, visited_mode: str = "bloom"):
-    """Oracle for fused_traversal_hop: one full expansion round in pure jnp
-    (frontier select, gather, visited filter, distances, beam merge).
-    Returns (new_id, new_d, new_ck, new_visited, fresh)."""
+                      visited, n: int, *, width: int = 1,
+                      visited_mode: str = "bloom"):
+    """Oracle for fused_traversal_hop: one full W-wide expansion round in
+    pure jnp (top-W frontier select, gather, sequential-per-frontier visited
+    filter, distances, stable beam merge).
+    Returns (new_id, new_d, new_ck, new_visited, fresh) with fresh (B, W·R)."""
     from repro.core import bloom as B
 
     Bq, ef = beam_id.shape
     unchecked = ~beam_ck & (beam_id < n)
-    has_work = jnp.any(unchecked, axis=1)
-    first = jnp.argmax(unchecked, axis=1)
-    u = jnp.where(has_work,
-                  jnp.take_along_axis(beam_id, first[:, None], axis=1)[:, 0],
-                  n)
-    rows = jnp.arange(Bq)
-    checked = beam_ck.at[rows, first].set(
-        jnp.where(has_work, True, beam_ck[rows, first]))
+    cum = jnp.cumsum(unchecked.astype(jnp.int32), axis=1)
+    sel = unchecked & (cum <= width)
+    checked = beam_ck | sel
 
-    nbrs = nbr_table[u]                                   # (B, R)
-    valid = nbrs < n
     test = B.bloom_test if visited_mode == "bloom" else B.exact_test
     ins = B.bloom_insert if visited_mode == "bloom" else B.exact_insert
-    seen = test(visited, jnp.where(valid, nbrs, 0))
-    fresh = valid & ~seen
-    new_visited = ins(visited, jnp.where(valid, nbrs, 0), fresh)
+    nbrs_w, fresh_w = [], []
+    for w in range(width):
+        mask_w = sel & (cum == w + 1)
+        u_w = jnp.where(jnp.any(mask_w, axis=1),
+                        jnp.sum(jnp.where(mask_w, beam_id, 0), axis=1), n)
+        nw = nbr_table[u_w]                               # (B, R)
+        vw = nw < n
+        seen = test(visited, jnp.where(vw, nw, 0))
+        fw = vw & ~seen
+        visited = ins(visited, jnp.where(vw, nw, 0), fw)
+        nbrs_w.append(nw)
+        fresh_w.append(fw)
+    nbrs = jnp.concatenate(nbrs_w, axis=1)                # (B, W·R)
+    fresh = jnp.concatenate(fresh_w, axis=1)
 
-    nv = vec_table[nbrs].astype(jnp.float32)              # (B, R, d)
+    nv = vec_table[nbrs].astype(jnp.float32)              # (B, W·R, d)
     qf = q.astype(jnp.float32)
     qn = jnp.sum(qf * qf, axis=-1)[:, None]
     vn = jnp.sum(nv * nv, axis=-1)
@@ -59,7 +65,32 @@ def traversal_hop_ref(q, nbr_table, vec_table, beam_id, beam_d, beam_ck,
     return (jnp.take_along_axis(all_id, order, axis=1),
             jnp.take_along_axis(all_d, order, axis=1),
             jnp.take_along_axis(all_ck, order, axis=1),
-            new_visited, fresh)
+            visited, fresh)
+
+
+def pilot_search_ref(q, nbr_table, vec_table, beam_id, beam_d, beam_ck,
+                     visited, n: int, *, rounds: int, width: int = 1,
+                     visited_mode: str = "bloom"):
+    """Oracle for fused_pilot_search: run up to ``rounds`` W-wide expansion
+    rounds (stopping at convergence) by iterating traversal_hop_ref.
+    Returns (beam_id, beam_d, beam_ck, visited, n_dist, n_hops, n_exp) with
+    the counters as (B,) int32 deltas, like the persistent kernel."""
+    Bq = beam_id.shape[0]
+    nd = nh = ne = jnp.zeros((Bq,), jnp.int32)
+    for _ in range(rounds):
+        unchecked = ~beam_ck & (beam_id < n)
+        if not bool(jnp.any(unchecked)):
+            break
+        has_work = jnp.any(unchecked, axis=1)
+        cum = jnp.cumsum(unchecked.astype(jnp.int32), axis=1)
+        n_sel = jnp.sum((unchecked & (cum <= width)).astype(jnp.int32), axis=1)
+        beam_id, beam_d, beam_ck, visited, fresh = traversal_hop_ref(
+            q, nbr_table, vec_table, beam_id, beam_d, beam_ck, visited, n,
+            width=width, visited_mode=visited_mode)
+        nd = nd + jnp.sum(fresh.astype(jnp.int32), axis=1)
+        nh = nh + has_work.astype(jnp.int32)
+        ne = ne + n_sel
+    return beam_id, beam_d, beam_ck, visited, nd, nh, ne
 
 
 def expand_merge_ref(q, nvecs, nids, fresh, beam_id, beam_d, beam_ck, n: int):

@@ -1,12 +1,22 @@
-"""Pallas TPU kernel: one fully-fused pilot-traversal hop (stage ①).
+"""Pallas TPU kernels for stage-① pilot traversal: fused W-wide expansion
+hops and the persistent whole-search kernel.
 
 The unfused hop body (``core.traversal.expansion_round``) round-trips four
 intermediates through HBM per expansion round: the gathered neighbour ids,
-the gathered neighbour vectors, the (B, R) distance block, and the (B, ef+R)
-merge buffer.  This kernel fuses the whole of Algorithm 1's inner loop —
-frontier selection, neighbour gather, visited filtering, MXU distances and
-the sorted-beam merge — into a single ``pallas_call`` per hop, so every
-intermediate lives and dies in VMEM (DESIGN.md §3).
+the gathered neighbour vectors, the (B, W·R) distance block, and the
+(B, ef+W·R) merge buffer.  Two fusion levels fix that (DESIGN.md §3):
+
+* ``fused_traversal_hop`` — one ``pallas_call`` per expansion round: frontier
+  selection (top-W unchecked beam entries), neighbour gather, visited
+  filtering, MXU distances and the sorted-beam merge all run in VMEM; only
+  the beam/visited state crosses HBM between rounds.
+* ``fused_pilot_search`` — the *persistent* kernel: the entire search runs
+  inside ONE ``pallas_call`` with a ``lax.while_loop`` over hops, so the
+  beam, visited filter and counters stay VMEM-resident for the whole search
+  and the convergence check happens on-chip.  A converged round is a fixed
+  point (sentinel frontier → sentinel gathers → no fresh → stable re-sort of
+  a sorted beam), which is what makes the in-kernel early exit agree exactly
+  with the per-hop path under both fixed budgets and run-to-convergence.
 
 TPU adaptation notes (DESIGN.md §3 spells out the full contract):
   * gathers are *one-hot matmuls*: ``onehot(u) @ table`` is MXU-dense and
@@ -16,17 +26,19 @@ TPU adaptation notes (DESIGN.md §3 spells out the full contract):
     sized to fit on-chip (paper §4.1).
   * the visited structure (bloom filter or exact bitmap) is updated with the
     scatter-free one-hot form of ``core.bloom.bloom_insert_dense``, looped
-    over the R neighbour slots so the transient stays (bt, n_bits).
+    over the neighbour slots so the transient stays (bt, n_bits).  Frontiers
+    are filtered *sequentially* (frontier w tests against frontiers < w's
+    inserts), matching the unfused multi-frontier round exactly.
   * the beam merge uses a *stable* bitonic compare-exchange network (same
     static schedule as ``topk_kernel``'s, plus a position payload for
     tie-breaks) so the fused merge matches the unfused path's stable
-    argsort exactly, ties included.
+    argsort exactly, ties included — at any frontier width.
   * masked distances use BIG (3e38), not +inf, inside the sort; the wrapper
     maps +inf <-> BIG at the boundary so callers keep the +inf convention.
 
-``fused_traversal_hop`` is the jit-safe host wrapper: it pads the query
-batch to the tile size, table rows to the sublane multiple (sentinel rows,
-id = n), and the visited lanes to 128, then slices everything back.
+Both host wrappers are jit-safe: they pad the query batch to the tile size,
+table rows to the sublane multiple (sentinel rows, id = n), and the visited
+lanes to 128, then slice everything back.
 """
 
 from __future__ import annotations
@@ -38,6 +50,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 from jax.experimental import pallas as pl
 
 from repro.kernels.topk_kernel import BIG, _next_pow2, _swap_lanes
@@ -88,72 +101,79 @@ def _bloom_hashes(ids: jax.Array, n_bits: int):
             (h2 % np.uint32(n_bits)).astype(jnp.int32))
 
 
-def _hop_kernel(q_ref, nbr_ref, vec_ref, bid_ref, bd_ref, bck_ref, vis_ref,
-                oid_ref, od_ref, ock_ref, ovis_ref, ofresh_ref, *,
-                n: int, R: int, ef: int, Wsort: int, hash_bits: int,
+def _round_body(q, qn, nbr_f, vec, row_iota, bit_iota, bid, bd, bck, vis, *,
+                n: int, R: int, W: int, ef: int, Wsort: int, hash_bits: int,
                 visited_mode: str):
-    q = q_ref[...].astype(jnp.float32)                    # (bt, dp)
-    bid = bid_ref[...]                                    # (bt, ef) i32
-    bd = bd_ref[...]                                      # (bt, ef) f32
-    bck = bck_ref[...]                                    # (bt, ef) bool
-    vis = vis_ref[...]                                    # (bt, vpad) bool
+    """One W-wide expansion round on VMEM-resident values.  Shared by the
+    per-hop kernel and the persistent kernel's loop body (which is what
+    guarantees their bit-exact parity).
+
+    Distances stay in the BIG domain.  Returns
+    ``(new_id, new_d, new_ck, vis, fresh, n_sel, has_work)`` where fresh is
+    (bt, W·R), n_sel is the per-row count of expanded candidates and
+    has_work flags rows that had any unchecked candidate."""
     bt = bid.shape[0]
-    Npad = nbr_ref.shape[0]
     vpad = vis.shape[1]
 
-    # ---- frontier selection: first unchecked candidate per query ----
+    # ---- frontier selection: top-W unchecked candidates per query (the
+    # beam is distance-sorted, so the first W unchecked slots are best) ----
     unchecked = ~bck & (bid < n)
     has_work = jnp.any(unchecked, axis=1)
     cum = jnp.cumsum(unchecked.astype(jnp.int32), axis=1)
-    firstmask = unchecked & (cum == 1)
-    u = jnp.sum(jnp.where(firstmask, bid, 0), axis=1)
-    u = jnp.where(has_work, u, n)                         # idle rows expand
-    checked = bck | firstmask                             # the sentinel row
+    sel = unchecked & (cum <= W)
+    checked = bck | sel                                   # idle rows keep bck
+    n_sel = jnp.sum(sel.astype(jnp.int32), axis=1)
 
-    # ---- neighbour-id gather: onehot(u) @ nbr_table (MXU-dense) ----
-    row_iota = jax.lax.broadcasted_iota(jnp.int32, (bt, Npad), 1)
-    onehot_u = (row_iota == u[:, None]).astype(jnp.float32)
-    nbrs_f = jax.lax.dot_general(onehot_u, nbr_ref[...].astype(jnp.float32),
-                                 (((1,), (0,)), ((), ())),
-                                 preferred_element_type=jnp.float32)
-    nbrs = (nbrs_f + 0.5).astype(jnp.int32)               # ids fp32-exact
-    valid = nbrs < n                                      # (bt, R)
+    # ---- per frontier: one-hot gather + sequential visited filter ----
+    nbrs_cols, fresh_cols = [], []
+    for w in range(W):
+        mask_w = sel & (cum == w + 1)
+        u_w = jnp.where(jnp.any(mask_w, axis=1),
+                        jnp.sum(jnp.where(mask_w, bid, 0), axis=1),
+                        n)                                # sentinel row
+        onehot_u = (row_iota == u_w[:, None]).astype(jnp.float32)
+        nbrs_raw = jax.lax.dot_general(onehot_u, nbr_f,
+                                       (((1,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+        nbrs_w = (nbrs_raw + 0.5).astype(jnp.int32)       # ids fp32-exact
+        valid = nbrs_w < n                                # (bt, R)
 
-    # ---- visited test + scatter-free insert (bloom or exact bitmap) ----
-    bit_iota = jax.lax.broadcasted_iota(jnp.int32, (bt, vpad), 1)
-    if visited_mode == "bloom":
-        h1, h2 = _bloom_hashes(nbrs, hash_bits)
-    else:
-        h1 = h2 = jnp.clip(nbrs, 0, vpad - 1)
-    seen_cols, ins = [], jnp.zeros_like(vis)
-    # test all R slots against the *pre-insert* filter (matches the unfused
-    # round: duplicates within one round are each scored), then union inserts
-    for r in range(R):
-        m1 = bit_iota == h1[:, r][:, None]
-        m2 = bit_iota == h2[:, r][:, None]
-        t = jnp.any(vis & m1, axis=1) & jnp.any(vis & m2, axis=1)
-        seen_cols.append(t)
-        fresh_r = valid[:, r] & ~t
-        ins = ins | ((m1 | m2) & fresh_r[:, None])
-    seen = jnp.stack(seen_cols, axis=1)
-    fresh = valid & ~seen
-    ovis_ref[...] = vis | ins
+        if visited_mode == "bloom":
+            h1, h2 = _bloom_hashes(nbrs_w, hash_bits)
+        else:
+            h1 = h2 = jnp.clip(nbrs_w, 0, vpad - 1)
+        # test all R slots against the filter as of this frontier (matches
+        # the unfused round: within a frontier duplicates are each scored;
+        # across frontiers, frontier w sees frontiers < w's inserts), then
+        # union this frontier's inserts
+        ins = jnp.zeros_like(vis)
+        fresh_w = []
+        for r in range(R):
+            m1 = bit_iota == h1[:, r][:, None]
+            m2 = bit_iota == h2[:, r][:, None]
+            t = jnp.any(vis & m1, axis=1) & jnp.any(vis & m2, axis=1)
+            fr = valid[:, r] & ~t
+            ins = ins | ((m1 | m2) & fr[:, None])
+            fresh_w.append(fr)
+        vis = vis | ins
+        nbrs_cols.append(nbrs_w)
+        fresh_cols.append(jnp.stack(fresh_w, axis=1))
+    nbrs = jnp.concatenate(nbrs_cols, axis=1)             # (bt, W·R)
+    fresh = jnp.concatenate(fresh_cols, axis=1)
 
     # ---- distances via the MXU identity, one gather-matmul per slot ----
-    qn = jnp.sum(q * q, axis=1)                           # (bt,)
-    vec = vec_ref[...].astype(jnp.float32)                # (Npad, dp)
     d_cols = []
-    for r in range(R):
-        onehot_r = (row_iota == nbrs[:, r][:, None]).astype(jnp.float32)
+    for s in range(W * R):
+        onehot_r = (row_iota == nbrs[:, s][:, None]).astype(jnp.float32)
         nv = jax.lax.dot_general(onehot_r, vec, (((1,), (0,)), ((), ())),
                                  preferred_element_type=jnp.float32)
         vn = jnp.sum(nv * nv, axis=1)
         dot = jnp.sum(nv * q, axis=1)
         d_cols.append(jnp.maximum(qn + vn - 2.0 * dot, 0.0))
-    d = jnp.where(fresh, jnp.stack(d_cols, axis=1), BIG)  # (bt, R)
+    d = jnp.where(fresh, jnp.stack(d_cols, axis=1), BIG)  # (bt, W·R)
 
-    # ---- bitonic merge into the sorted beam ----
-    pad = Wsort - (ef + R)
+    # ---- stable bitonic merge into the sorted beam ----
+    pad = Wsort - (ef + W * R)
     keys = jnp.concatenate(
         [bd, d] + ([jnp.full((bt, pad), BIG, jnp.float32)] if pad else []),
         axis=1)
@@ -164,18 +184,88 @@ def _hop_kernel(q_ref, nbr_ref, vec_ref, bid_ref, bd_ref, bck_ref, vis_ref,
         [checked.astype(jnp.int32), (~fresh).astype(jnp.int32)] +
         ([jnp.ones((bt, pad), jnp.int32)] if pad else []), axis=1)
     keys, vals, flags = _bitonic_sort_stable(keys, vals, flags)
-    od_ref[...] = keys[:, :ef]
-    oid_ref[...] = vals[:, :ef]
-    ock_ref[...] = flags[:, :ef] != 0
+    return (vals[:, :ef], keys[:, :ef], flags[:, :ef] != 0, vis, fresh,
+            n_sel, has_work)
+
+
+def _hop_kernel(q_ref, nbr_ref, vec_ref, bid_ref, bd_ref, bck_ref, vis_ref,
+                oid_ref, od_ref, ock_ref, ovis_ref, ofresh_ref, *,
+                n: int, R: int, W: int, ef: int, Wsort: int, hash_bits: int,
+                visited_mode: str):
+    q = q_ref[...].astype(jnp.float32)                    # (bt, dp)
+    bt = bid_ref.shape[0]
+    Npad = nbr_ref.shape[0]
+    vpad = vis_ref.shape[1]
+    qn = jnp.sum(q * q, axis=1)
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (bt, Npad), 1)
+    bit_iota = jax.lax.broadcasted_iota(jnp.int32, (bt, vpad), 1)
+    nid, nd, nck, vis, fresh, _, _ = _round_body(
+        q, qn, nbr_ref[...].astype(jnp.float32),
+        vec_ref[...].astype(jnp.float32), row_iota, bit_iota,
+        bid_ref[...], bd_ref[...], bck_ref[...], vis_ref[...],
+        n=n, R=R, W=W, ef=ef, Wsort=Wsort, hash_bits=hash_bits,
+        visited_mode=visited_mode)
+    oid_ref[...] = nid
+    od_ref[...] = nd
+    ock_ref[...] = nck
+    ovis_ref[...] = vis
     ofresh_ref[...] = fresh
+
+
+def _persistent_kernel(q_ref, nbr_ref, vec_ref, bid_ref, bd_ref, bck_ref,
+                       vis_ref, oid_ref, od_ref, ock_ref, ovis_ref, ocnt_ref,
+                       *, n: int, R: int, W: int, ef: int, Wsort: int,
+                       hash_bits: int, visited_mode: str, rounds: int):
+    """Whole stage-① search in one kernel: hop loop, state and convergence
+    check all live in VMEM.  The loop exits as soon as the tile has no
+    unchecked candidate (or the round budget runs out); a converged round is
+    a fixed point, so per-tile early exit cannot change the result."""
+    q = q_ref[...].astype(jnp.float32)                    # (bt, dp)
+    bt = bid_ref.shape[0]
+    Npad = nbr_ref.shape[0]
+    vpad = vis_ref.shape[1]
+    qn = jnp.sum(q * q, axis=1)
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (bt, Npad), 1)
+    bit_iota = jax.lax.broadcasted_iota(jnp.int32, (bt, vpad), 1)
+    nbr_f = nbr_ref[...].astype(jnp.float32)              # hoisted operands
+    vec = vec_ref[...].astype(jnp.float32)
+
+    def cond(carry):
+        i, bid, _bd, bck, _vis, _nd, _nh, _ne = carry
+        return (i < rounds) & jnp.any(~bck & (bid < n))
+
+    def body(carry):
+        i, bid, bd, bck, vis, nd, nh, ne = carry
+        nid, nbd, nck, nvis, fresh, n_sel, has_work = _round_body(
+            q, qn, nbr_f, vec, row_iota, bit_iota, bid, bd, bck, vis,
+            n=n, R=R, W=W, ef=ef, Wsort=Wsort, hash_bits=hash_bits,
+            visited_mode=visited_mode)
+        return (i + 1, nid, nbd, nck, nvis,
+                nd + jnp.sum(fresh.astype(jnp.int32), axis=1),
+                nh + has_work.astype(jnp.int32), ne + n_sel)
+
+    z = jnp.zeros((bt,), jnp.int32)
+    carry = (jnp.int32(0), bid_ref[...], bd_ref[...], bck_ref[...],
+             vis_ref[...], z, z, z)
+    _, bid, bd, bck, vis, nd, nh, ne = lax.while_loop(cond, body, carry)
+    oid_ref[...] = bid
+    od_ref[...] = bd
+    ock_ref[...] = bck
+    ovis_ref[...] = vis
+    ocnt_ref[...] = jnp.concatenate(
+        [nd[:, None], nh[:, None], ne[:, None],
+         jnp.zeros((bt, _CNT_LANES - 3), jnp.int32)], axis=1)
+
+
+_CNT_LANES = 8  # counters output: lanes 0..2 = (n_dist, n_hops, n_exp)
 
 
 def align_tables(nbr_table: jax.Array, vec_table: jax.Array, n: int,
                  sublane: int = 8) -> Tuple[jax.Array, jax.Array]:
     """Pad table rows to the kernel's sublane multiple (sentinel id-n rows /
     zero vector rows).  Single source of truth for the alignment contract:
-    greedy_search hoists this out of the hop loop, and fused_traversal_hop
-    applies it as a no-op fallback for direct callers."""
+    greedy_search hoists this out of the hop loop, and the kernel wrappers
+    apply it as a no-op fallback for direct callers."""
     N1 = nbr_table.shape[0]
     Npad = -(-N1 // sublane) * sublane
     if Npad == N1:
@@ -184,36 +274,15 @@ def align_tables(nbr_table: jax.Array, vec_table: jax.Array, n: int,
             jnp.pad(vec_table, ((0, Npad - N1), (0, 0))))
 
 
-def fused_traversal_hop(q: jax.Array, nbr_table: jax.Array,
-                        vec_table: jax.Array, beam_id: jax.Array,
-                        beam_d: jax.Array, beam_ck: jax.Array,
-                        visited: jax.Array, n: int, *,
-                        visited_mode: str = "bloom", b_tile: int = 128,
-                        interpret: bool = False
-                        ) -> Tuple[jax.Array, jax.Array, jax.Array,
-                                   jax.Array, jax.Array]:
-    """One fused expansion round.
-
-    q (B, dp); nbr_table (n+1, R) int32 with sentinel row n; vec_table
-    (n+1, dp) with zero row at n; beam_* (B, ef) sorted beam (+inf sentinel
-    distances); visited (B, n_bits) bloom filter or (B, n+1) exact bitmap.
-
-    Returns ``(new_id, new_d, new_ck, new_visited, fresh)`` with the same
-    semantics as ``core.traversal.expansion_round`` minus the counters —
-    ``fresh`` (B, R) lets the caller account n_dist.
-    """
-    Bq, dp = q.shape
-    N1, R = nbr_table.shape
-    ef = beam_id.shape[1]
+def _pad_state(q, nbr_table, vec_table, beam_id, beam_d, beam_ck, visited,
+               n: int, b_tile: int):
+    """Shared wrapper-side padding: align table rows, pad visited lanes to a
+    128 multiple and the batch to a b_tile multiple (idle all-checked
+    sentinel beams, which also keeps padded rows out of the persistent
+    kernel's convergence check)."""
+    Bq = q.shape[0]
     vbits = visited.shape[1]
-    assert n < (1 << 24), "one-hot gather needs fp32-exact node ids"
-    assert vec_table.shape[0] == N1
-
-    # no-op for pre-aligned tables (greedy_search hoists this out of the
-    # hop loop)
     nbr_t, vec_t = align_tables(nbr_table, vec_table, n)
-    Npad = nbr_t.shape[0]
-    # visited lanes -> 128 multiple (hash modulus stays the logical width)
     vpad = -(-vbits // 128) * 128
     vis = jnp.pad(visited, ((0, 0), (0, vpad - vbits))) \
         if vpad != vbits else visited
@@ -228,16 +297,49 @@ def fused_traversal_hop(q: jax.Array, nbr_table: jax.Array,
         beam_ck = jnp.pad(beam_ck, ((0, pb), (0, 0)), constant_values=True)
         vis = jnp.pad(vis, ((0, pb), (0, 0)))
     bd = jnp.where(jnp.isfinite(beam_d), beam_d, BIG)
+    return q, nbr_t, vec_t, beam_id, bd, beam_ck, vis, Bpad, bt, vpad, vbits
+
+
+def fused_traversal_hop(q: jax.Array, nbr_table: jax.Array,
+                        vec_table: jax.Array, beam_id: jax.Array,
+                        beam_d: jax.Array, beam_ck: jax.Array,
+                        visited: jax.Array, n: int, *, width: int = 1,
+                        visited_mode: str = "bloom", b_tile: int = 128,
+                        interpret: bool = False
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                   jax.Array, jax.Array]:
+    """One fused W-wide expansion round.
+
+    q (B, dp); nbr_table (n+1, R) int32 with sentinel row n; vec_table
+    (n+1, dp) with zero row at n; beam_* (B, ef) sorted beam (+inf sentinel
+    distances); visited (B, n_bits) bloom filter or (B, n+1) exact bitmap.
+
+    Returns ``(new_id, new_d, new_ck, new_visited, fresh)`` with the same
+    semantics as ``core.traversal.expansion_round`` minus the counters —
+    ``fresh`` (B, W·R) lets the caller account n_dist.
+    """
+    Bq, dp = q.shape
+    N1, R = nbr_table.shape
+    ef = beam_id.shape[1]
+    assert n < (1 << 24), "one-hot gather needs fp32-exact node ids"
+    assert vec_table.shape[0] == N1
+    assert width >= 1
+
+    (q, nbr_t, vec_t, beam_id, bd, beam_ck, vis, Bpad, bt, vpad,
+     vbits) = _pad_state(q, nbr_table, vec_table, beam_id, beam_d, beam_ck,
+                         visited, n, b_tile)
+    Npad = nbr_t.shape[0]
 
     kern = functools.partial(
-        _hop_kernel, n=n, R=R, ef=ef, Wsort=_next_pow2(ef + R),
-        hash_bits=vbits, visited_mode=visited_mode)
+        _hop_kernel, n=n, R=R, W=width, ef=ef,
+        Wsort=_next_pow2(ef + width * R), hash_bits=vbits,
+        visited_mode=visited_mode)
     out_shapes = (
         jax.ShapeDtypeStruct((Bpad, ef), jnp.int32),
         jax.ShapeDtypeStruct((Bpad, ef), jnp.float32),
         jax.ShapeDtypeStruct((Bpad, ef), bool),
         jax.ShapeDtypeStruct((Bpad, vpad), bool),
-        jax.ShapeDtypeStruct((Bpad, R), bool),
+        jax.ShapeDtypeStruct((Bpad, width * R), bool),
     )
     oid, od, ock, ovis, ofresh = pl.pallas_call(
         kern,
@@ -256,7 +358,7 @@ def fused_traversal_hop(q: jax.Array, nbr_table: jax.Array,
             pl.BlockSpec((bt, ef), lambda i: (i, 0)),
             pl.BlockSpec((bt, ef), lambda i: (i, 0)),
             pl.BlockSpec((bt, vpad), lambda i: (i, 0)),
-            pl.BlockSpec((bt, R), lambda i: (i, 0)),
+            pl.BlockSpec((bt, width * R), lambda i: (i, 0)),
         ),
         out_shape=out_shapes,
         interpret=interpret,
@@ -264,3 +366,71 @@ def fused_traversal_hop(q: jax.Array, nbr_table: jax.Array,
 
     od = jnp.where(od >= BIG, jnp.inf, od)
     return (oid[:Bq], od[:Bq], ock[:Bq], ovis[:Bq, :vbits], ofresh[:Bq])
+
+
+def fused_pilot_search(q: jax.Array, nbr_table: jax.Array,
+                       vec_table: jax.Array, beam_id: jax.Array,
+                       beam_d: jax.Array, beam_ck: jax.Array,
+                       visited: jax.Array, n: int, *, rounds: int,
+                       width: int = 1, visited_mode: str = "bloom",
+                       b_tile: int = 128, interpret: bool = False
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                                  jax.Array, jax.Array, jax.Array]:
+    """Persistent stage-① search: run up to ``rounds`` W-wide expansion
+    rounds — with in-kernel convergence exit — inside one ``pallas_call``.
+
+    Inputs as ``fused_traversal_hop`` (the initial beam/visited state comes
+    from ``core.traversal.init_state``).  Returns
+    ``(beam_id, beam_d, beam_ck, visited, n_dist, n_hops, n_exp)`` where the
+    three counters are (B,) int32 *deltas* accumulated over the executed
+    rounds (the caller adds them to the init-state counters).
+    """
+    Bq, dp = q.shape
+    N1, R = nbr_table.shape
+    ef = beam_id.shape[1]
+    assert n < (1 << 24), "one-hot gather needs fp32-exact node ids"
+    assert vec_table.shape[0] == N1
+    assert width >= 1 and rounds >= 0
+
+    (q, nbr_t, vec_t, beam_id, bd, beam_ck, vis, Bpad, bt, vpad,
+     vbits) = _pad_state(q, nbr_table, vec_table, beam_id, beam_d, beam_ck,
+                         visited, n, b_tile)
+    Npad = nbr_t.shape[0]
+
+    kern = functools.partial(
+        _persistent_kernel, n=n, R=R, W=width, ef=ef,
+        Wsort=_next_pow2(ef + width * R), hash_bits=vbits,
+        visited_mode=visited_mode, rounds=rounds)
+    out_shapes = (
+        jax.ShapeDtypeStruct((Bpad, ef), jnp.int32),
+        jax.ShapeDtypeStruct((Bpad, ef), jnp.float32),
+        jax.ShapeDtypeStruct((Bpad, ef), bool),
+        jax.ShapeDtypeStruct((Bpad, vpad), bool),
+        jax.ShapeDtypeStruct((Bpad, _CNT_LANES), jnp.int32),
+    )
+    oid, od, ock, ovis, ocnt = pl.pallas_call(
+        kern,
+        grid=(Bpad // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, dp), lambda i: (i, 0)),
+            pl.BlockSpec((Npad, R), lambda i: (0, 0)),
+            pl.BlockSpec((Npad, dp), lambda i: (0, 0)),
+            pl.BlockSpec((bt, ef), lambda i: (i, 0)),
+            pl.BlockSpec((bt, ef), lambda i: (i, 0)),
+            pl.BlockSpec((bt, ef), lambda i: (i, 0)),
+            pl.BlockSpec((bt, vpad), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bt, ef), lambda i: (i, 0)),
+            pl.BlockSpec((bt, ef), lambda i: (i, 0)),
+            pl.BlockSpec((bt, ef), lambda i: (i, 0)),
+            pl.BlockSpec((bt, vpad), lambda i: (i, 0)),
+            pl.BlockSpec((bt, _CNT_LANES), lambda i: (i, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(q, nbr_t, vec_t, beam_id, bd, beam_ck, vis)
+
+    od = jnp.where(od >= BIG, jnp.inf, od)
+    return (oid[:Bq], od[:Bq], ock[:Bq], ovis[:Bq, :vbits],
+            ocnt[:Bq, 0], ocnt[:Bq, 1], ocnt[:Bq, 2])

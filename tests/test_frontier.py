@@ -1,0 +1,352 @@
+"""Multi-frontier expansion + persistent stage-① kernel (DESIGN.md §3).
+
+Deterministic coverage (this module always runs):
+  * frontier_width=1 is bit-identical to the pre-change single-frontier
+    traversal (a verbatim copy of the old round body is kept here as the
+    reference);
+  * the widened ``ef + W·R`` merge stays stable on exactly tied distances
+    (duplicate vectors), fused vs unfused;
+  * the persistent whole-search kernel matches the per-hop pallas_call
+    chain and the pure-jnp oracle in interpret mode;
+  * W>1 cuts rounds-to-convergence and the stats schema is unified.
+
+Property-test variants live in test_frontier_props.py (hypothesis-gated).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import SearchParams
+from repro.core import bloom as B
+from repro.core import traversal as T
+from repro.core.traversal import INF, SearchState, TraversalSpec, greedy_search
+from repro.kernels.ref import pilot_search_ref, traversal_hop_ref
+from repro.kernels.traversal_kernel import (fused_pilot_search,
+                                            fused_traversal_hop)
+
+
+def _single_frontier_round(spec, state, queries, neighbor_table,
+                           vector_table, n):
+    """Verbatim pre-change ``expansion_round`` body (single frontier): the
+    reference the W-generalized round must reproduce bit-exactly at W=1."""
+    Bq, ef = state.cand_id.shape
+
+    unchecked = ~state.checked & (state.cand_id < n)
+    has_work = jnp.any(unchecked, axis=1)
+    first = jnp.argmax(unchecked, axis=1)
+    u = jnp.where(has_work,
+                  jnp.take_along_axis(state.cand_id, first[:, None], axis=1)[:, 0],
+                  n)
+    checked = state.checked.at[jnp.arange(Bq), first].set(
+        jnp.where(has_work, True, state.checked[jnp.arange(Bq), first]))
+
+    nbrs = neighbor_table[u]
+    valid = nbrs < n
+    seen = T._visited_test(spec, state.visited, jnp.where(valid, nbrs, 0))
+    fresh = valid & ~seen
+    visited = T._visited_insert(spec, state.visited,
+                                jnp.where(valid, nbrs, 0), fresh)
+
+    nvecs = vector_table[nbrs]
+    d = jnp.where(fresh, T.sq_dists(queries, nvecs), INF)
+    n_dist = state.n_dist + jnp.sum(fresh, axis=1).astype(jnp.int32)
+
+    all_id = jnp.concatenate([state.cand_id, jnp.where(fresh, nbrs, n)], axis=1)
+    all_d = jnp.concatenate([state.cand_d, d], axis=1)
+    all_ck = jnp.concatenate([checked, ~fresh], axis=1)
+    order = jnp.argsort(all_d, axis=1)[:, :ef]
+    return SearchState(
+        cand_id=jnp.take_along_axis(all_id, order, axis=1),
+        cand_d=jnp.take_along_axis(all_d, order, axis=1),
+        checked=jnp.take_along_axis(all_ck, order, axis=1),
+        visited=visited,
+        n_dist=n_dist,
+        n_hops=state.n_hops + has_work.astype(jnp.int32),
+        n_exp=state.n_exp,  # field added by this PR; ref leaves it untouched
+    )
+
+
+def _random_index(n, R, d, seed):
+    rng = np.random.default_rng(seed)
+    nbr = np.stack([rng.choice(n, R, replace=False) for _ in range(n)])
+    nbr_t = np.concatenate([nbr, np.full((1, R), n)]).astype(np.int32)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    vec_t = np.concatenate([x, np.zeros((1, d), np.float32)])
+    return jnp.asarray(nbr_t), jnp.asarray(vec_t), x
+
+
+def _random_beam(rng, Bq, ef, n, n_sentinel=3):
+    bid = rng.integers(0, n, (Bq, ef)).astype(np.int32)
+    bd = np.sort(rng.random((Bq, ef)).astype(np.float32) * 40, axis=1)
+    bck = rng.random((Bq, ef)) > 0.6
+    bid[:, ef - n_sentinel:] = n
+    bd[:, ef - n_sentinel:] = np.inf
+    bck[:, ef - n_sentinel:] = True
+    return bid, bd, bck
+
+
+# ---------------------------------------------------------------------------
+# W=1 parity with the pre-change single-frontier path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["bloom", "exact"])
+@pytest.mark.parametrize("seed", [0, 3, 11])
+def test_w1_full_search_matches_prechange(mode, seed):
+    """Step the production W-generalized round and the verbatim pre-change
+    round to convergence (both eagerly, so XLA loop-rematerialisation float
+    noise cannot mask a real difference): every field must match *exactly*
+    (ids, dists, checked, visited, n_dist, n_hops)."""
+    n, R, d, Bq, ef = 500, 8, 16, 8, 16
+    nbr_t, vec_t, _ = _random_index(n, R, d, seed)
+    rng = np.random.default_rng(seed + 1)
+    q = jnp.asarray(rng.normal(size=(Bq, d)).astype(np.float32))
+    entries = jnp.asarray(rng.integers(0, n, (Bq, 3)).astype(np.int32))
+    spec = TraversalSpec(ef=ef, visited_mode=mode, bloom_bits=2048)
+
+    got = T.init_state(spec, q, entries, vec_t[:-1], n)
+    for _ in range(spec.max_iters):
+        if not bool(jnp.any(~got.checked & (got.cand_id < n))):
+            break
+        got = T.expansion_round(spec, got, q, nbr_t, vec_t, n)
+
+    ref = T.init_state(spec, q, entries, vec_t[:-1], n)
+    for _ in range(spec.max_iters):
+        if not bool(jnp.any(~ref.checked & (ref.cand_id < n))):
+            break
+        ref = _single_frontier_round(spec, ref, q, nbr_t, vec_t, n)
+
+    np.testing.assert_array_equal(np.asarray(got.cand_id),
+                                  np.asarray(ref.cand_id))
+    np.testing.assert_array_equal(np.asarray(got.cand_d),
+                                  np.asarray(ref.cand_d))
+    np.testing.assert_array_equal(np.asarray(got.checked),
+                                  np.asarray(ref.checked))
+    np.testing.assert_array_equal(np.asarray(got.visited),
+                                  np.asarray(ref.visited))
+    np.testing.assert_array_equal(np.asarray(got.n_dist),
+                                  np.asarray(ref.n_dist))
+    np.testing.assert_array_equal(np.asarray(got.n_hops),
+                                  np.asarray(ref.n_hops))
+    # at W=1 every working round expands exactly one candidate
+    np.testing.assert_array_equal(np.asarray(got.n_exp),
+                                  np.asarray(got.n_hops))
+
+
+# ---------------------------------------------------------------------------
+# W-wide hop kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("W", [2, 4])
+@pytest.mark.parametrize("mode", ["bloom", "exact"])
+def test_wide_fused_hop_matches_oracle(W, mode):
+    rng = np.random.default_rng(40 + W)
+    n, R, d, Bq, ef = 600, 8, 16, 12, 16
+    nbr_t, vec_t, _ = _random_index(n, R, d, seed=7)
+    q = jnp.asarray(rng.normal(size=(Bq, d)).astype(np.float32))
+    bid, bd, bck = _random_beam(rng, Bq, ef, n)
+    vis = B.bloom_init(Bq, 2048) if mode == "bloom" else B.exact_init(Bq, n)
+    ins = B.bloom_insert if mode == "bloom" else B.exact_insert
+    vis = ins(vis, jnp.asarray(np.where(bid < n, bid, 0)),
+              jnp.asarray(bid < n))
+
+    args = [jnp.asarray(a) for a in (q, nbr_t, vec_t, bid, bd, bck)]
+    got = fused_traversal_hop(*args, vis, n, width=W, visited_mode=mode,
+                              interpret=True)
+    want = traversal_hop_ref(*args, vis, n, width=W, visited_mode=mode)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]))
+    np.testing.assert_array_equal(np.asarray(got[3]), np.asarray(want[3]))
+    np.testing.assert_array_equal(np.asarray(got[4]), np.asarray(want[4]))
+    assert got[4].shape == (Bq, W * R)
+
+
+# ---------------------------------------------------------------------------
+# Widened merge on exactly tied distances (duplicate vectors)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("W", [2, 4])
+def test_widened_merge_parity_on_tied_distances(W):
+    """Duplicate vectors produce exactly tied distances; the widened
+    ``ef + W·R`` bitonic merge is stable (position payload), so fused must
+    still match the unfused stable argsort bit-for-bit."""
+    rng = np.random.default_rng(21)
+    n, R, d, Bq, ef = 512, 8, 8, 8, 16
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    x[1::2] = x[::2]                       # every node has an exact twin
+    nbr = np.stack([rng.choice(n, R, replace=False) for _ in range(n)])
+    nbr_t = jnp.asarray(np.concatenate([nbr, np.full((1, R), n)])
+                        .astype(np.int32))
+    vec_t = jnp.asarray(np.concatenate([x, np.zeros((1, d), np.float32)]))
+    q = jnp.asarray(x[rng.choice(n, Bq)] + 0.01)
+    entries = jnp.asarray(rng.integers(0, n, (Bq, 2)).astype(np.int32))
+
+    ref = greedy_search(TraversalSpec(ef=ef, visited_mode="exact",
+                                      frontier_width=W),
+                        q, nbr_t, vec_t, n, entries)
+    fused = greedy_search(TraversalSpec(ef=ef, visited_mode="exact",
+                                        frontier_width=W, use_pallas=True),
+                          q, nbr_t, vec_t, n, entries)
+    np.testing.assert_array_equal(np.asarray(ref.cand_id),
+                                  np.asarray(fused.cand_id))
+    np.testing.assert_array_equal(np.asarray(ref.n_dist),
+                                  np.asarray(fused.n_dist))
+    np.testing.assert_array_equal(np.asarray(ref.n_exp),
+                                  np.asarray(fused.n_exp))
+
+
+# ---------------------------------------------------------------------------
+# Persistent whole-search kernel parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("W", [1, 2])
+@pytest.mark.parametrize("mode", ["bloom", "exact"])
+def test_persistent_matches_per_hop_whole_search(W, mode):
+    """Acceptance: the persistent kernel (one pallas_call, in-kernel hop
+    loop + convergence) returns exactly the per-hop pallas_call chain's
+    state and counters, in interpret mode."""
+    rng = np.random.default_rng(17)
+    n, R, d, Bq, ef = 700, 8, 16, 12, 16
+    nbr_t, vec_t, _ = _random_index(n, R, d, seed=5)
+    q = jnp.asarray(rng.normal(size=(Bq, d)).astype(np.float32))
+    entries = jnp.asarray(rng.integers(0, n, (Bq, 3)).astype(np.int32))
+
+    per_hop = greedy_search(
+        TraversalSpec(ef=ef, visited_mode=mode, bloom_bits=2048,
+                      frontier_width=W, use_pallas=True),
+        q, nbr_t, vec_t, n, entries)
+    persistent = greedy_search(
+        TraversalSpec(ef=ef, visited_mode=mode, bloom_bits=2048,
+                      frontier_width=W, use_pallas=True, use_persistent=True),
+        q, nbr_t, vec_t, n, entries)
+    for a, b in zip(per_hop, persistent):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_persistent_fixed_iters_matches_per_hop():
+    """Fixed round budgets (stage-② style) agree too: a converged round is
+    a fixed point, so the in-kernel early exit cannot change the result."""
+    rng = np.random.default_rng(23)
+    n, R, d, Bq, ef = 500, 8, 16, 8, 16
+    nbr_t, vec_t, _ = _random_index(n, R, d, seed=9)
+    q = jnp.asarray(rng.normal(size=(Bq, d)).astype(np.float32))
+    entries = jnp.asarray(rng.integers(0, n, (Bq, 3)).astype(np.int32))
+    for iters in (3, 64):   # mid-search cut and past-convergence budget
+        a = greedy_search(TraversalSpec(ef=ef, visited_mode="exact",
+                                        frontier_width=2, use_pallas=True),
+                          q, nbr_t, vec_t, n, entries, iters=iters)
+        b = greedy_search(TraversalSpec(ef=ef, visited_mode="exact",
+                                        frontier_width=2, use_pallas=True,
+                                        use_persistent=True),
+                          q, nbr_t, vec_t, n, entries, iters=iters)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_persistent_kernel_matches_ref_oracle():
+    """fused_pilot_search against the pure-jnp whole-search oracle."""
+    rng = np.random.default_rng(31)
+    n, R, d, Bq, ef, W = 600, 8, 16, 10, 16, 2
+    nbr_t, vec_t, _ = _random_index(n, R, d, seed=13)
+    q = jnp.asarray(rng.normal(size=(Bq, d)).astype(np.float32))
+    bid, bd, bck = _random_beam(rng, Bq, ef, n)
+    vis = B.exact_insert(B.exact_init(Bq, n),
+                         jnp.asarray(np.where(bid < n, bid, 0)),
+                         jnp.asarray(bid < n))
+    args = [jnp.asarray(a) for a in (q, nbr_t, vec_t, bid, bd, bck)]
+    got = fused_pilot_search(*args, vis, n, rounds=64, width=W,
+                             visited_mode="exact", interpret=True)
+    want = pilot_search_ref(*args, vis, n, rounds=64, width=W,
+                            visited_mode="exact")
+    _assert_search_outputs_match(got, want)
+
+
+def _assert_search_outputs_match(got, want):
+    """(id, d, ck, vis, n_dist, n_hops, n_exp): everything exact except the
+    distances, where the kernel's one-hot-matmul arithmetic accumulates in a
+    different order than the oracle's gather+einsum (~1e-6 float noise)."""
+    for i, (g, w) in enumerate(zip(got, want)):
+        if i == 1:
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=1e-5, atol=1e-5)
+        else:
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_persistent_pads_ragged_batch():
+    """B not a tile multiple: wrapper pads with idle all-checked beams that
+    must not stall the in-kernel convergence check, then slices back."""
+    rng = np.random.default_rng(3)
+    n, R, d, Bq, ef = 500, 8, 16, 10, 16
+    nbr_t, vec_t, _ = _random_index(n, R, d, seed=2)
+    q = jnp.asarray(rng.normal(size=(Bq, d)).astype(np.float32))
+    entries = jnp.asarray(rng.integers(0, n, (Bq, 2)).astype(np.int32))
+    st = T.init_state(TraversalSpec(ef=ef, visited_mode="exact"),
+                      q, entries, vec_t[:-1], n)
+    got = fused_pilot_search(q, nbr_t, vec_t, st.cand_id, st.cand_d,
+                             st.checked, st.visited, n, rounds=64,
+                             b_tile=4, visited_mode="exact", interpret=True)
+    want = pilot_search_ref(q, nbr_t, vec_t, st.cand_id, st.cand_d,
+                            st.checked, st.visited, n, rounds=64,
+                            visited_mode="exact")
+    _assert_search_outputs_match(got, want)
+    assert got[0].shape == (Bq, ef)
+
+
+# ---------------------------------------------------------------------------
+# Behaviour: W>1 cuts serial depth; stats schema unified
+# ---------------------------------------------------------------------------
+
+def test_wider_frontier_reduces_rounds_to_convergence():
+    rng = np.random.default_rng(2)
+    n, R, d, Bq, ef = 1500, 12, 24, 16, 32
+    nbr_t, vec_t, x = _random_index(n, R, d, seed=3)
+    q = jnp.asarray(rng.normal(size=(Bq, d)).astype(np.float32))
+    entries = jnp.asarray(rng.integers(0, n, (Bq, 2)).astype(np.int32))
+    hops, dists = {}, {}
+    for W in (1, 4):
+        st = greedy_search(TraversalSpec(ef=ef, visited_mode="exact",
+                                         frontier_width=W),
+                           q, nbr_t, vec_t, n, entries)
+        hops[W] = float(np.asarray(st.n_hops).mean())
+        dists[W] = np.asarray(st.cand_d)
+    assert hops[4] < hops[1] * 0.6, hops
+    # quality does not degrade: W=4's converged beam is at least as close
+    assert float(dists[4][:, 0].mean()) <= float(dists[1][:, 0].mean()) + 1e-4
+
+
+def test_stats_schema_unified(built_index, small_dataset):
+    """baseline_search and multistage_search return the same stats keys
+    (docs/api.md glossary), including the expanded-candidates counters."""
+    params = SearchParams(k=10, ef=48, ef_pilot=48)
+    _, _, st_m = built_index.search(small_dataset.queries[:32], params)
+    _, _, st_b = built_index.search_baseline(small_dataset.queries[:32], params)
+    assert set(st_m) == set(st_b)
+    for key in ("pilot_expanded", "final_expanded", "pilot_hops"):
+        assert key in st_m and st_m[key].shape == (32,)
+    # baseline charges its coarse entry scan to fes_dist and total_cpu_dist
+    assert (st_b["fes_dist"] > 0).all()
+    assert (st_b["total_cpu_dist"] ==
+            st_b["fes_dist"] + st_b["final_dist"]).all()
+
+
+def test_multistage_wide_and_persistent_recall(built_index, small_dataset, gt=None):
+    from repro.core import brute_force_topk, recall_at_k
+    queries = small_dataset.queries[:64]
+    gt = brute_force_topk(small_dataset.vectors, queries, 10)
+    base = SearchParams(k=10, ef=48, ef_pilot=48)
+    wide = SearchParams(k=10, ef=48, ef_pilot=48, frontier_width=2,
+                        frontier_width_pilot=4)
+    pers = SearchParams(k=10, ef=48, ef_pilot=48, frontier_width_pilot=4,
+                        use_persistent_traversal=True)
+    ids0, _, st0 = built_index.search(queries, base)
+    ids1, _, st1 = built_index.search(queries, wide)
+    ids2, _, st2 = built_index.search(queries, pers)
+    r0 = recall_at_k(ids0, gt, 10)
+    assert recall_at_k(ids1, gt, 10) >= r0 - 0.02
+    assert recall_at_k(ids2, gt, 10) >= r0 - 0.02
+    # serial depth drops at W=4
+    assert st1["pilot_hops"].mean() < st0["pilot_hops"].mean() * 0.5

@@ -1,0 +1,75 @@
+"""Hypothesis properties for multi-frontier expansion (skips cleanly when
+hypothesis is absent; deterministic variants live in test_frontier.py)."""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import traversal as T
+from repro.core.traversal import TraversalSpec, expansion_round, greedy_search
+from tests.test_frontier import (_random_beam, _random_index,
+                                 _single_frontier_round)
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(0, 10_000), st.sampled_from([8, 16, 24]),
+       st.sampled_from(["bloom", "exact"]))
+def test_w1_round_matches_prechange_single_frontier(seed, ef, mode):
+    """Property: one W=1 multi-frontier round == the pre-change
+    single-frontier round on arbitrary beam states — every field (ids,
+    dists, checked, visited, counters) bit-equal."""
+    rng = np.random.default_rng(seed)
+    n, R, d, Bq = 400, 8, 12, 6
+    nbr_t, vec_t, _ = _random_index(n, R, d, seed=seed % 97)
+    q = jnp.asarray(rng.normal(size=(Bq, d)).astype(np.float32))
+    entries = jnp.asarray(rng.integers(0, n, (Bq, 3)).astype(np.int32))
+    spec = TraversalSpec(ef=ef, visited_mode=mode, bloom_bits=1024)
+
+    state = T.init_state(spec, q, entries, vec_t[:-1], n)
+    # advance a few rounds so the beam is in a generic mid-search state
+    for _ in range(seed % 4):
+        state = expansion_round(spec, state, q, nbr_t, vec_t, n)
+
+    got = expansion_round(spec, state, q, nbr_t, vec_t, n)
+    want = _single_frontier_round(spec, state, q, nbr_t, vec_t, n)
+    np.testing.assert_array_equal(np.asarray(got.cand_id),
+                                  np.asarray(want.cand_id))
+    np.testing.assert_array_equal(np.asarray(got.cand_d),
+                                  np.asarray(want.cand_d))
+    np.testing.assert_array_equal(np.asarray(got.checked),
+                                  np.asarray(want.checked))
+    np.testing.assert_array_equal(np.asarray(got.visited),
+                                  np.asarray(want.visited))
+    np.testing.assert_array_equal(np.asarray(got.n_dist),
+                                  np.asarray(want.n_dist))
+    np.testing.assert_array_equal(np.asarray(got.n_hops),
+                                  np.asarray(want.n_hops))
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 10_000), st.sampled_from([1, 2, 4]))
+def test_beam_stays_sorted_and_deduped_at_any_width(seed, W):
+    """Property: at any frontier width the converged beam is sorted and
+    (exact visited mode) free of duplicate ids — the sequential-per-frontier
+    visited filter prevents cross-frontier double insertion."""
+    rng = np.random.default_rng(seed)
+    n, R, d, Bq, ef = 400, 8, 12, 6, 24
+    nbr_t, vec_t, _ = _random_index(n, R, d, seed=seed % 89)
+    q = jnp.asarray(rng.normal(size=(Bq, d)).astype(np.float32))
+    entries = jnp.asarray(rng.integers(0, n, (Bq, 2)).astype(np.int32))
+    st_ = greedy_search(TraversalSpec(ef=ef, visited_mode="exact",
+                                      frontier_width=W),
+                        q, nbr_t, vec_t, n, entries)
+    ids = np.asarray(st_.cand_id)
+    ds = np.asarray(st_.cand_d)
+    assert (np.diff(ds, axis=1) >= -1e-6).all()
+    for row in ids:
+        real = row[row < n]
+        assert len(set(real.tolist())) == len(real), "duplicate in beam"
+    # counters: every round expands between 1 and W candidates
+    nh, ne = np.asarray(st_.n_hops), np.asarray(st_.n_exp)
+    assert (ne >= nh).all() and (ne <= nh * W).all()
