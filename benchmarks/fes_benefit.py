@@ -34,34 +34,35 @@ def run(L: int = 16, verbose: bool = True):
     qp = rot_q[:, :dp]
     a = index.arrays
     Bq = rot_q.shape[0]
-    n_pilot = a["rot_vecs"].shape[0] - 1
+    n_pilot = index.n_pilot
+    ptf = np.asarray(a["pilot_to_full"])   # compact pilot id -> full id
 
     fes_fn = jax.jit(lambda q: fes_select_ref(
         q, a["fes_centroids"], a["fes_entries"], a["fes_entry_ids"],
-        a["fes_valid"], L))
+        a["fes_valid"], L, entries_scale=a.get("fes_entries_scale")))
     t_fes, (ids_fes, _) = timed(
         lambda: jax.block_until_ready(fes_fn(qp)), iters=5)
-    q_fes = _entry_recall(ids_fes, gt)
+    q_fes = _entry_recall(ptf[np.asarray(ids_fes)], gt)
 
     rows = [("fes_benefit/fes_kqps", Bq / t_fes / 1e3,
              f"entry_recall={q_fes:.3f};L={L}")]
 
-    # traversal baseline: grow rounds until quality matches FES.  NB: the
-    # entry must be a subgraph member (zero-out-degree CSR: non-members have
-    # no edges) — use the medoid of the kept set.
-    rot_keep = np.asarray(a["primary"])[index.keep_ids]
-    med = index.keep_ids[int(np.argmin(
-        ((rot_keep - rot_keep.mean(0)) ** 2).sum(-1)))]
-    entry = jnp.full((Bq, 1), int(med), jnp.int32)
+    # traversal baseline: grow rounds until quality matches FES.  The pilot
+    # tables live in the compact id space (every row is a subgraph member)
+    # and may be quantized — pass the scale to the search.  Enter at the
+    # engine's precomputed pilot medoid.
+    scale = a.get("primary_scale")
+    med = int(np.asarray(a["pilot_default_entry"])[0])
+    entry = jnp.full((Bq, 1), med, jnp.int32)
     matched = None
     for iters in (2, 4, 8, 16, 32, 64, 128):
         spec = TraversalSpec(ef=max(L, 32), visited_mode="bloom")
         hop_fn = jax.jit(lambda q, it=iters: greedy_search(
             spec, q, a["sub_neighbors"], a["primary"], n_pilot, entry,
-            iters=it))
+            iters=it, vec_scale=scale))
         t_hop, st = timed(lambda: jax.block_until_ready(hop_fn(qp)), iters=3)
         ids_hop, _ = topk_from_state(st, L)
-        q_hop = _entry_recall(ids_hop, gt)
+        q_hop = _entry_recall(ptf[np.asarray(ids_hop)], gt)
         rows.append((f"fes_benefit/traversal_{iters}rounds_kqps",
                      Bq / t_hop / 1e3, f"entry_recall={q_hop:.3f}"))
         if q_hop >= q_fes - 0.02:

@@ -1,10 +1,20 @@
 """Fig. 7 + Table 3: pilot-index memory budget vs achievable saving.
 
 Paper: with 19.4 GB (dataset 14.9x larger) LAION keeps a 4.8x speedup; at
-9.7 GB (29.7x) still 2.6x.  Here we sweep (sample_ratio, svd_ratio) — the two
-knobs that size the accelerator-resident pilot index — and report the pilot
-bytes, the full/pilot ratio, and the CPU-side distance-calc reduction at
-matched recall (the hardware-independent core of the speedup)."""
+9.7 GB (29.7x) still 2.6x.  Two sweeps over the knobs that size the
+accelerator-resident pilot index:
+
+* geometry — (sample_ratio, svd_ratio) at fp32, reporting pilot bytes, the
+  full/pilot ratio and the CPU-side distance-calc reduction at matched
+  recall (the hardware-independent core of the speedup);
+* encoding — pilot_dtype ∈ {float32, bfloat16, int8} at one geometry via
+  ``PilotANNIndex.set_pilot_dtype`` (no rebuild), reporting the byte
+  reduction and the recall delta vs the fp32 pilot at equal ef
+  (DESIGN.md §4: stage ② re-scores exactly, so the delta should be ~0).
+
+Emits ``name,value,derived`` CSV; ``benchmarks.run --json`` wraps it into a
+``BENCH_memory_scaling.json`` record (schema: docs/benchmarks.md).
+"""
 
 from __future__ import annotations
 
@@ -17,11 +27,12 @@ from repro.core import IndexConfig, PilotANNIndex, SearchParams
 def run(n: int = 8000, d: int = 64, nq: int = 128, target: float = 0.9,
         verbose: bool = True):
     ds = get_dataset(n, d, nq)
-    from repro.core import brute_force_topk
+    from repro.core import brute_force_topk, recall_at_k
     gt = brute_force_topk(ds.vectors, ds.queries, 10)
 
     rows = []
     settings = [(0.5, 0.75), (0.33, 0.5), (0.25, 0.5), (0.25, 0.25), (0.15, 0.25)]
+    last_idx = None
     for sample, svd in settings:
         idx = PilotANNIndex(
             IndexConfig(R=16, sample_ratio=sample, svd_ratio=svd,
@@ -30,6 +41,7 @@ def run(n: int = 8000, d: int = 64, nq: int = 128, target: float = 0.9,
         base = sweep_to_recall(lambda p: idx.search_baseline(ds.queries, p),
                                gt, target)
         multi = sweep_to_recall(lambda p: idx.search(ds.queries, p), gt, target)
+        last_idx = idx
         if not (base and multi):
             continue
         red = base["stats"]["total_cpu_dist"].mean() / \
@@ -38,13 +50,40 @@ def run(n: int = 8000, d: int = 64, nq: int = 128, target: float = 0.9,
                      rep["pilot_bytes"] / 1e6,
                      f"full_over_pilot={rep['ratio']:.1f}x;"
                      f"cpu_calc_reduction={red:.2f}x;recall={multi['recall']:.3f}"))
+
+    # ---- pilot_dtype sweep (DESIGN.md §4): requantize the last geometry —
+    # set_pilot_dtype re-encodes the stage-① payloads without a rebuild ----
+    if last_idx is not None:
+        params = SearchParams(k=10, ef=64, ef_pilot=64)
+        base_bytes = last_idx.memory_report()["pilot_bytes"]   # fp32 build
+        ids0, _, _ = last_idx.search(ds.queries, params)
+        r0 = recall_at_k(ids0, gt, 10)
+        rows.append(("memory_scaling/dtype_float32", base_bytes / 1e6,
+                     f"MB_pilot;bytes_reduction=1.00x;recall={r0:.3f};"
+                     f"recall_delta_vs_fp32=+0.0000"))
+        for dt in ("bfloat16", "int8"):
+            last_idx.set_pilot_dtype(dt)
+            rep = last_idx.memory_report()
+            ids, _, _ = last_idx.search(ds.queries, params)
+            rec = recall_at_k(ids, gt, 10)
+            rows.append((f"memory_scaling/dtype_{dt}",
+                         rep["pilot_bytes"] / 1e6,
+                         f"MB_pilot;bytes_reduction="
+                         f"{base_bytes / max(rep['pilot_bytes'], 1):.2f}x;"
+                         f"recall={rec:.3f};recall_delta_vs_fp32={rec - r0:+.4f}"))
+        last_idx.set_pilot_dtype("float32")
+
     # analytic 100M-scale geometry (the paper's Table 3 regime): pilot bytes
-    # for the pod engine's knobs vs full index
+    # for the pod engine's knobs vs full index, across pilot encodings
     from repro.core.distributed import PodIndexSpec
-    for label, dd, dp_, npi in (("deep100m", 96, 48, 25_000_000),
-                                ("laion100m", 768, 160, 25_000_000),
-                                ("laion100m_tight", 768, 160, 6_000_000)):
-        s = PodIndexSpec(n=100_000_000, d=dd, d_primary=dp_, n_pilot=npi)
+    for label, dd, dp_, npi, pdt in (
+            ("deep100m", 96, 48, 25_000_000, "float32"),
+            ("laion100m", 768, 160, 25_000_000, "float32"),
+            ("laion100m_bf16", 768, 160, 25_000_000, "bfloat16"),
+            ("laion100m_int8", 768, 160, 25_000_000, "int8"),
+            ("laion100m_tight", 768, 160, 6_000_000, "int8")):
+        s = PodIndexSpec(n=100_000_000, d=dd, d_primary=dp_, n_pilot=npi,
+                         pilot_dtype=pdt)
         rows.append((f"memory_scaling/analytic_{label}",
                      s.pilot_bytes() / 2**30,
                      f"GiB_pilot;full_over_pilot="

@@ -36,11 +36,12 @@ def _stage1_fn(spec: T.TraversalSpec, n: int):
 
 def run(n: int = None, B: int = 64, ef: int = 64):
     index, vectors, queries = get_index(n=n)
-    n_nodes = index.n
+    # stage ① runs in the compact pilot id space (DESIGN.md §4)
+    n_nodes = index.n_pilot
     rng = np.random.default_rng(0)
     q = index.rotate_queries(queries[:B])[:, :index.reducer.d_primary]
     entries = jnp.asarray(
-        rng.choice(index.keep_ids, size=(B, 4)).astype(np.int32))
+        rng.integers(0, n_nodes, size=(B, 4)).astype(np.int32))
     sub = index.arrays["sub_neighbors"]
     prim = index.arrays["primary"]
 

@@ -1,0 +1,147 @@
+#!/usr/bin/env python
+"""Docs consistency check (CI: scripts/smoke.sh section 5).
+
+Three classes of rot this catches:
+
+1. **Markdown links** — every relative ``[text](path)`` /
+   ``[text](path#anchor)`` link in README.md, DESIGN.md, ROADMAP.md and
+   docs/*.md must point at an existing file, and the ``#anchor`` must match
+   a heading in the target (GitHub slug rules).
+2. **In-code DESIGN.md § references** — ``DESIGN.md §N`` / ``DESIGN.md
+   §Name`` strings in src/, tests/, benchmarks/, scripts/ and examples/
+   must resolve to a ``## §...`` heading in DESIGN.md (these have broken
+   silently before).
+3. **API doc coverage** — every field of ``SearchParams`` and
+   ``IndexConfig`` must be documented (appear in backticks) in docs/api.md,
+   and every key of ``memory_report()`` must appear there too.
+
+Exit code 0 = clean; 1 = problems (each printed as ``check_docs: ...``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+DOC_FILES = ["README.md", "DESIGN.md", "ROADMAP.md", "PAPER.md",
+             "CHANGES.md"] + [
+    os.path.join("docs", f) for f in sorted(os.listdir(os.path.join(ROOT, "docs")))
+    if f.endswith(".md")]
+
+CODE_DIRS = ["src", "tests", "benchmarks", "scripts", "examples"]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+DESIGN_REF_RE = re.compile(r"DESIGN\.md\s+§([0-9]+|[A-Za-z][A-Za-z-]*)")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, strip punctuation, spaces->hyphens."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s, flags=re.UNICODE)
+    return s.replace(" ", "-")
+
+
+def read(path: str) -> str:
+    with open(os.path.join(ROOT, path), encoding="utf-8") as f:
+        return f.read()
+
+
+def check_markdown_links(problems: list) -> None:
+    slugs = {}  # path -> set of heading slugs
+
+    def slugs_for(path):
+        if path not in slugs:
+            slugs[path] = {github_slug(h) for h in
+                           HEADING_RE.findall(read(path))}
+        return slugs[path]
+
+    for doc in DOC_FILES:
+        if not os.path.exists(os.path.join(ROOT, doc)):
+            continue
+        base = os.path.dirname(doc)
+        for target in LINK_RE.findall(read(doc)):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path, _, anchor = target.partition("#")
+            if path:
+                rel = os.path.normpath(os.path.join(base, path))
+                if not os.path.exists(os.path.join(ROOT, rel)):
+                    problems.append(f"{doc}: broken link -> {target}")
+                    continue
+            else:
+                rel = doc                      # same-file #anchor
+            if anchor and rel.endswith(".md"):
+                if anchor not in slugs_for(rel):
+                    problems.append(f"{doc}: broken anchor -> {target}")
+
+
+def _ref_files():
+    """Files whose ``DESIGN.md §`` references are checked: code trees plus
+    the top-level / docs markdown."""
+    for d in CODE_DIRS:
+        for dirpath, _, files in os.walk(os.path.join(ROOT, d)):
+            for fn in files:
+                if fn == "check_docs.py":      # its own docstring examples
+                    continue
+                if fn.endswith((".py", ".sh", ".md")):
+                    yield os.path.relpath(os.path.join(dirpath, fn), ROOT)
+    for doc in DOC_FILES:
+        if doc != "DESIGN.md" and os.path.exists(os.path.join(ROOT, doc)):
+            yield doc
+
+
+def check_design_refs(problems: list) -> None:
+    design = read("DESIGN.md")
+    names = re.findall(r"^##\s+§(.+)$", design, re.M)
+    numbers = {n.split(".")[0] for n in names if n[0].isdigit()}
+    words = {n.split()[0].rstrip(".") for n in names}  # "Perf", "Arch-applicability"
+
+    for rel in _ref_files():
+        try:
+            text = read(rel)
+        except (UnicodeDecodeError, FileNotFoundError):
+            continue
+        for tok in DESIGN_REF_RE.findall(text):
+            ok = (tok in numbers or tok in words
+                  or any(n.startswith(tok) for n in names))
+            if not ok:
+                problems.append(f"{rel}: dangling reference DESIGN.md §{tok}")
+
+
+def check_api_coverage(problems: list) -> None:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.core import IndexConfig, SearchParams   # noqa: E402
+    api = read(os.path.join("docs", "api.md"))
+    documented = set(re.findall(r"`([A-Za-z_][A-Za-z0-9_]*)`", api))
+    for cls in (SearchParams, IndexConfig):
+        for f in dataclasses.fields(cls):
+            if f.name not in documented:
+                problems.append(
+                    f"docs/api.md: undocumented {cls.__name__}.{f.name}")
+    for key in ("pilot_bytes", "full_bytes", "ratio", "pilot_dtype",
+                "pilot_id_dtype", "pilot_graph_bytes", "pilot_vec_bytes",
+                "pilot_fes_bytes", "pilot_nodes", "d_primary"):
+        if key not in documented:
+            problems.append(f"docs/api.md: undocumented memory_report "
+                            f"field {key}")
+
+
+def main() -> int:
+    problems: list = []
+    check_markdown_links(problems)
+    check_design_refs(problems)
+    check_api_coverage(problems)
+    for p in problems:
+        print(f"check_docs: {p}")
+    print(f"check_docs: {'OK' if not problems else 'FAILED'} "
+          f"({len(problems)} problem(s))")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

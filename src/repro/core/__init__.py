@@ -1,6 +1,8 @@
-from repro.core.engine import (IndexConfig, PilotANNIndex, brute_force_topk,
+from repro.core.engine import (IndexConfig, PilotANNIndex, ResidencyPlan,
+                               ResidencyPlanner, brute_force_topk,
                                recall_at_k)
 from repro.core.multistage import SearchParams
 
-__all__ = ["IndexConfig", "PilotANNIndex", "SearchParams", "brute_force_topk",
+__all__ = ["IndexConfig", "PilotANNIndex", "ResidencyPlan",
+           "ResidencyPlanner", "SearchParams", "brute_force_topk",
            "recall_at_k"]

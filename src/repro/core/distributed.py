@@ -56,11 +56,20 @@ class PodIndexSpec:
     frontier_width_pilot: int = 1  # stage-① multi-frontier width
     vec_dtype: str = "float32"   # corpus vector storage (bf16 halves memory
                                  # and naive-gather wire bytes; fp32 accum)
+    pilot_dtype: str = "float32"  # replicated pilot/FES vector encoding
+                                  # (float32|bfloat16|int8; DESIGN.md §4 —
+                                  # int8 adds one fp32 scale row per table)
 
     def pilot_bytes(self) -> int:
-        return (self.n_pilot * self.d_primary * 4
+        """Per-chip replicated pilot payload, dtype-aware (the per-chip HBM
+        budget the ResidencyPlanner solves against at pod scale)."""
+        from repro.core import quant
+        vb = quant.VEC_ITEMSIZE[self.pilot_dtype]
+        scale = self.d_primary * 4 * 2 if self.pilot_dtype == "int8" else 0
+        return (self.n_pilot * self.d_primary * vb
                 + self.n_pilot * self.R * 4
-                + self.fes_r * self.fes_capacity * self.d_primary * 4)
+                + self.fes_r * self.fes_capacity * self.d_primary * vb
+                + scale)
 
     def full_bytes(self) -> int:
         return self.n * self.d * 4 + self.n * self.R * 4
@@ -71,14 +80,18 @@ def pod_array_specs(spec: PodIndexSpec, mesh) -> Dict[str, jax.ShapeDtypeStruct]
     n_dev = int(np.prod(mesh.devices.shape))
     Np = _round_to(spec.n + 1, n_dev)
     npl = _round_to(spec.n_pilot + 1, 1)
+    pdt = getattr(jnp, spec.pilot_dtype)
     return {
-        # replicated pilot index
+        # replicated pilot index (vector tables in spec.pilot_dtype; the
+        # fp32 scale rows are all-ones unless pilot_dtype == "int8")
         "pilot_neighbors": jax.ShapeDtypeStruct((npl, spec.R), jnp.int32),
-        "pilot_vecs": jax.ShapeDtypeStruct((npl, spec.d_primary), jnp.float32),
+        "pilot_vecs": jax.ShapeDtypeStruct((npl, spec.d_primary), pdt),
+        "pilot_scale": jax.ShapeDtypeStruct((spec.d_primary,), jnp.float32),
         "pilot_to_full": jax.ShapeDtypeStruct((npl,), jnp.int32),
         "fes_centroids": jax.ShapeDtypeStruct((spec.fes_r, spec.d_primary), jnp.float32),
         "fes_entries": jax.ShapeDtypeStruct((spec.fes_r, spec.fes_capacity,
-                                             spec.d_primary), jnp.float32),
+                                             spec.d_primary), pdt),
+        "fes_scale": jax.ShapeDtypeStruct((spec.d_primary,), jnp.float32),
         "fes_entry_ids": jax.ShapeDtypeStruct((spec.fes_r, spec.fes_capacity), jnp.int32),
         "fes_valid": jax.ShapeDtypeStruct((spec.fes_r, spec.fes_capacity), bool),
         # sharded full index
@@ -104,9 +117,11 @@ def pod_shardings(spec: PodIndexSpec, mesh, *, corpus_axes=None,
     return {
         "pilot_neighbors": rep,
         "pilot_vecs": rep,
+        "pilot_scale": rep,
         "pilot_to_full": rep,
         "fes_centroids": rep,
         "fes_entries": rep,
+        "fes_scale": rep,
         "fes_entry_ids": rep,
         "fes_valid": rep,
         "full_neighbors": NS(corpus_axes),
@@ -129,15 +144,20 @@ def make_pod_search_step(spec: PodIndexSpec, params: Optional[SearchParams] = No
                                     frontier_width=spec.frontier_width,
                                     frontier_width_pilot=spec.frontier_width_pilot)
 
-    def search_step(pilot_neighbors, pilot_vecs, pilot_to_full,
-                    fes_centroids, fes_entries, fes_entry_ids, fes_valid,
-                    full_neighbors, full_vecs, queries):
+    def search_step(pilot_neighbors, pilot_vecs, pilot_scale, pilot_to_full,
+                    fes_centroids, fes_entries, fes_scale, fes_entry_ids,
+                    fes_valid, full_neighbors, full_vecs, queries):
         Bq = queries.shape[0]
         n_pilot = pilot_vecs.shape[0] - 1
         Np = full_vecs.shape[0]
         n = Np - 1
         dp = pilot_vecs.shape[1]
         qp = queries[:, :dp]
+        # dequant scales only engage for int8 pilots (the rows are all-ones
+        # otherwise; skipping them statically keeps the fp32 HLO unchanged)
+        quantized = spec.pilot_dtype == "int8"
+        vsc = pilot_scale if quantized else None
+        esc = fes_scale if quantized else None
 
         nbr_fn = dist_fn = None
         if gather_mode == "shardwise":
@@ -155,7 +175,7 @@ def make_pod_search_step(spec: PodIndexSpec, params: Optional[SearchParams] = No
         # ---- stage 0: FES (replicated data; local) ----
         entry_local, _ = F.fes_select_ref(qp, fes_centroids, fes_entries,
                                           fes_entry_ids, fes_valid,
-                                          params.fes_L)
+                                          params.fes_L, entries_scale=esc)
 
         # ---- stage ①: pilot traversal (replicated data; local) ----
         spec1 = T.TraversalSpec(
@@ -166,7 +186,8 @@ def make_pod_search_step(spec: PodIndexSpec, params: Optional[SearchParams] = No
             state_spec=(P(tuple(mesh.axis_names), None)
                         if gather_mode == "shardwise" else None))
         st1 = T.greedy_search(spec1, qp, pilot_neighbors, pilot_vecs, n_pilot,
-                              entry_local, iters=spec.pilot_iters, unroll=unroll)
+                              entry_local, iters=spec.pilot_iters,
+                              unroll=unroll, vec_scale=vsc)
         # map pilot-compact ids to full-corpus ids
         cand_full = pilot_to_full[jnp.where(st1.cand_id < n_pilot,
                                             st1.cand_id, n_pilot)]

@@ -2,6 +2,13 @@
 
 Build (offline, numpy): SVD rotation → full graph → sampled subgraph rebuilt
 with the same construction algorithm (paper §4.1/§4.3) → FES clusters.
+The stage-① ("pilot") payloads live in a *compact* id space — rows exist
+only for sampled nodes, ids are stored at the narrowest sufficient integer
+width, and the vector tables are optionally quantized to bf16/int8
+(``IndexConfig.pilot_dtype``, core/quant.py) — so the accelerator-resident
+bytes actually scale with ``sample_ratio``/``svd_ratio``/dtype, which is
+what ``ResidencyPlanner`` solves over (DESIGN.md §4).
+
 Search (online, JAX): multistage_search / baseline_search jit'd per
 (batch, params) signature.  The distributed pod engine (core/distributed.py)
 consumes the same index artifacts.
@@ -18,8 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import csr, fes, graph_build, multistage, svd
-from repro.core.multistage import SearchParams
+from repro.core import csr, fes, graph_build, multistage, quant, svd
+from repro.core.multistage import SearchParams, StatsDict
 
 
 @dataclass
@@ -33,12 +40,26 @@ class IndexConfig:
     coarse_ratio: float = 1.0 / 64  # entry-layer size (HNSW-hierarchy analogue)
     build_method: str = "auto"
     seed: int = 0
+    # stage-① payload encoding (DESIGN.md §4): float32 | bfloat16 | int8.
+    # int8 stores one fp32 per-dim scale row per table; stage ② then
+    # re-scores the primary term exactly (multistage.py).
+    pilot_dtype: str = "float32"
+    # pilot-graph id width: auto (int16 when the compact id space fits,
+    # else int32) | int16 | int32
+    pilot_id_dtype: str = "auto"
+    # optional hard budget for the stage-① resident bytes: the build raises
+    # if memory_report()["pilot_bytes"] exceeds it (use ResidencyPlanner to
+    # solve for knobs that fit)
+    pilot_budget_bytes: Optional[int] = None
 
 
 class PilotANNIndex:
     """Holds numpy artifacts + device arrays for the search stages."""
 
     def __init__(self, cfg: IndexConfig, vectors: np.ndarray):
+        if cfg.pilot_dtype not in quant.PILOT_DTYPES:
+            raise ValueError(f"pilot_dtype must be one of "
+                             f"{quant.PILOT_DTYPES}, got {cfg.pilot_dtype!r}")
         self.cfg = cfg
         self.n, self.d = vectors.shape
         n, d = self.n, self.d
@@ -56,7 +77,8 @@ class PilotANNIndex:
         keep = csr.subgraph_sample(self.full_graph, cfg.sample_ratio,
                                    seed=cfg.seed)
         keep_ids = np.flatnonzero(keep)
-        if len(keep_ids) > 2:
+        nk = len(keep_ids)
+        if nk > 2:
             sub_compact = graph_build.build_graph(
                 rot[keep_ids], cfg.R, method=cfg.build_method, seed=cfg.seed + 1)
             # remap compacted ids -> original ids; zero-out-degree CSR (§4.3)
@@ -70,11 +92,33 @@ class PilotANNIndex:
             self.sub_graph = csr.zero_outdegree_subgraph(self.full_graph, keep)
         self.keep = keep
         self.keep_ids = keep_ids
+        self.n_pilot = nk
 
-        # --- FES (entries sampled from subgraph members; primary dims) ---
-        self.fes_index = fes.build_fes(rot[:, :dp], keep_ids,
-                                       r=cfg.fes_clusters,
-                                       n_entry=cfg.n_entry, seed=cfg.seed)
+        # --- compact pilot id space (DESIGN.md §4): full id -> pilot id
+        # (dropped nodes and the full sentinel map to the pilot sentinel nk)
+        full_to_pilot = np.full(n + 1, nk, np.int32)
+        full_to_pilot[keep_ids] = np.arange(nk, dtype=np.int32)
+        self._full_to_pilot = full_to_pilot
+        id_dt = self._resolve_id_dtype(cfg.pilot_id_dtype, nk)
+        pilot_nb = full_to_pilot[self.sub_graph.padded_table()[keep_ids]]
+        pilot_nb = np.concatenate(
+            [pilot_nb, np.full((1, cfg.R), nk, np.int32)], axis=0)
+
+        # fp32 primary rows for the kept nodes (+ zero sentinel row); kept on
+        # the host so set_pilot_dtype can requantize without a rebuild
+        self._pilot_primary = np.concatenate(
+            [rot[keep_ids][:, :dp], np.zeros((1, dp), np.float32)], axis=0)
+
+        # --- FES (entries sampled from subgraph members; primary dims).
+        # fes_index keeps *full*-corpus entry ids (build artifact); the
+        # device table carries compact pilot ids for stage ①.  Capacity is
+        # capped with the same formula ResidencyPlanner uses, so the
+        # planner's FES byte estimate upper-bounds the realized table ---
+        ne = min(cfg.n_entry, nk)
+        self.fes_index = fes.build_fes(
+            rot[:, :dp], keep_ids, r=cfg.fes_clusters, n_entry=cfg.n_entry,
+            seed=cfg.seed,
+            max_capacity=fes.fes_capacity_cap(ne, cfg.fes_clusters))
 
         # --- coarse entry layer (HNSW-hierarchy analogue for the baseline
         #     and the "- FES" ablation: greedy descent over a small sampled
@@ -92,24 +136,95 @@ class PilotANNIndex:
         zrow = lambda a: np.concatenate([a, np.zeros((1, a.shape[1]), a.dtype)], 0)
         self.arrays: Dict[str, jax.Array] = {
             "full_neighbors": jnp.asarray(self.full_graph.padded_table()),
-            "sub_neighbors": jnp.asarray(self.sub_graph.padded_table()),
+            "sub_neighbors": jnp.asarray(pilot_nb.astype(id_dt)),
+            "pilot_to_full": jnp.asarray(
+                np.concatenate([keep_ids, [n]]).astype(np.int32)),
             "rot_vecs": jnp.asarray(zrow(rot)),
-            "primary": jnp.asarray(zrow(rot[:, :dp])),
             "residual": jnp.asarray(zrow(rot[:, dp:])),
             "fes_centroids": jnp.asarray(self.fes_index.centroids),
-            "fes_entries": jnp.asarray(self.fes_index.entries),
-            "fes_entry_ids": jnp.asarray(self.fes_index.entry_ids),
+            "fes_entry_ids": jnp.asarray(
+                full_to_pilot[self.fes_index.entry_ids]),
             "fes_valid": jnp.asarray(self.fes_index.valid),
             "default_entries": jnp.asarray(
                 np.array([graph_build.medoid(rot)], np.int32)),
+            "pilot_default_entry": jnp.asarray(
+                np.array([graph_build.medoid(rot[keep_ids])], np.int32)),
             "coarse_neighbors": jnp.asarray(coarse_graph.padded_table()),
             "coarse_vecs": jnp.asarray(zrow(rot[coarse_ids])),
             "coarse_ids": jnp.asarray(
                 np.concatenate([coarse_ids, [n]]).astype(np.int32)),
+            "coarse_pilot_ids": jnp.asarray(
+                full_to_pilot[np.concatenate([coarse_ids, [n]])]),
             "coarse_entry": jnp.asarray(
                 np.array([graph_build.medoid(rot[coarse_ids])], np.int32)),
         }
+        self.arrays.update(self._quantized_pilot_arrays(cfg.pilot_dtype))
         self._search_fns: Dict = {}
+
+        if cfg.pilot_budget_bytes is not None:
+            got = self.memory_report()["pilot_bytes"]
+            if got > cfg.pilot_budget_bytes:
+                raise ValueError(
+                    f"pilot payload is {got} B, over the "
+                    f"pilot_budget_bytes={cfg.pilot_budget_bytes} budget; "
+                    f"shrink it via ResidencyPlanner(n, d, R={cfg.R}, "
+                    f"n_entry={cfg.n_entry}).plan(budget).to_config(), or "
+                    f"reduce n_entry / raise fes_clusters (FES buckets), "
+                    f"or lower sample_ratio/svd_ratio/pilot_dtype directly")
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _resolve_id_dtype(pilot_id_dtype: str, nk: int):
+        i16_max = np.iinfo(np.int16).max
+        if pilot_id_dtype == "int32":
+            return np.int32
+        if pilot_id_dtype == "int16":
+            if nk + 1 > i16_max:
+                raise ValueError(f"pilot id space {nk + 1} overflows int16")
+            return np.int16
+        if pilot_id_dtype == "auto":
+            return np.int16 if nk + 1 <= i16_max else np.int32
+        raise ValueError(f"pilot_id_dtype must be auto|int16|int32, "
+                         f"got {pilot_id_dtype!r}")
+
+    def _quantized_pilot_arrays(self, pilot_dtype: str) -> Dict[str, jax.Array]:
+        """Encode the stage-① vector tables (primary rows + FES buckets)."""
+        pdata, pscale = quant.quantize(self._pilot_primary, pilot_dtype)
+        fdata, fscale = quant.quantize(self.fes_index.entries, pilot_dtype)
+        out = {"primary": jnp.asarray(pdata),
+               "fes_entries": jnp.asarray(fdata)}
+        if pscale is not None:
+            out["primary_scale"] = jnp.asarray(pscale)
+            out["fes_entries_scale"] = jnp.asarray(fscale)
+        return out
+
+    def set_pilot_dtype(self, pilot_dtype: str) -> "PilotANNIndex":
+        """Re-encode the stage-① payloads in place (no graph/SVD rebuild) —
+        the cheap dtype leg of a residency sweep.  Re-checks
+        ``pilot_budget_bytes`` (the constructor's budget invariant must
+        survive mutation): on violation the previous encoding is restored
+        and ValueError raised.  Returns self."""
+        if pilot_dtype not in quant.PILOT_DTYPES:
+            raise ValueError(f"pilot_dtype must be one of "
+                             f"{quant.PILOT_DTYPES}, got {pilot_dtype!r}")
+        prev = self.cfg.pilot_dtype
+        self._apply_pilot_dtype(pilot_dtype)
+        budget = self.cfg.pilot_budget_bytes
+        if budget is not None:
+            got = self.memory_report()["pilot_bytes"]
+            if got > budget:
+                self._apply_pilot_dtype(prev)
+                raise ValueError(
+                    f"set_pilot_dtype({pilot_dtype!r}) would grow the pilot "
+                    f"payload to {got} B, over pilot_budget_bytes={budget}; "
+                    f"encoding left at {prev!r}")
+        return self
+
+    def _apply_pilot_dtype(self, pilot_dtype: str) -> None:
+        self.cfg = dataclasses.replace(self.cfg, pilot_dtype=pilot_dtype)
+        self.arrays.pop("primary_scale", None)
+        self.arrays.pop("fes_entries_scale", None)
+        self.arrays.update(self._quantized_pilot_arrays(pilot_dtype))
 
     # ------------------------------------------------------------------
     def rotate_queries(self, queries: np.ndarray) -> jax.Array:
@@ -122,49 +237,163 @@ class PilotANNIndex:
             self._search_fns[key] = jax.jit(partial(fn, params=params))
         return self._search_fns[key]
 
-    @staticmethod
-    def _pad_batch(q: jax.Array, params: SearchParams,
-                   align: int = 8) -> Tuple[jax.Array, int]:
-        """Pallas path (per-hop or persistent): pad the query batch to a
-        sublane-aligned size so the fused kernels tile cleanly (DESIGN.md
-        §3); results are sliced back to the caller's batch.  Also caps
-        jit-signature churn for ragged client batches.  The jit cache key is
-        ``dataclasses.astuple(params)``, so frontier widths and the
-        persistent-kernel switch each compile (and cache) their own search
-        function."""
-        B = q.shape[0]
-        use_pallas = params.use_pallas_traversal or params.use_persistent_traversal
-        if not use_pallas or B % align == 0:
-            return q, B
-        return jnp.pad(q, ((0, align - B % align), (0, 0))), B
-
     def search(self, queries: np.ndarray, params: SearchParams,
-               *, rotated: bool = False) -> Tuple[np.ndarray, np.ndarray, Dict]:
+               *, rotated: bool = False
+               ) -> Tuple[np.ndarray, np.ndarray, StatsDict]:
         q = jnp.asarray(queries) if rotated else self.rotate_queries(queries)
-        q, B = self._pad_batch(q, params)
+        # Pallas stage-① paths need sublane-aligned batches; the shared
+        # helper (multistage.pad_for_pallas, also used by pipeline.py) pads
+        # here — outside jit, which additionally caps jit-signature churn
+        # for ragged client batches — and results are sliced back.
+        q, B = multistage.pad_for_pallas(q, params)
         ids, dists, stats = self._get_fn(params, False)(self.arrays, queries=q)
         return (np.asarray(ids[:B]), np.asarray(dists[:B]),
                 jax.tree.map(lambda a: np.asarray(a)[:B], stats))
 
     def search_baseline(self, queries: np.ndarray, params: SearchParams,
                         *, rotated: bool = False
-                        ) -> Tuple[np.ndarray, np.ndarray, Dict]:
+                        ) -> Tuple[np.ndarray, np.ndarray, StatsDict]:
         q = jnp.asarray(queries) if rotated else self.rotate_queries(queries)
         ids, dists, stats = self._get_fn(params, True)(self.arrays, queries=q)
         return np.asarray(ids), np.asarray(dists), jax.tree.map(np.asarray, stats)
 
     # ------------------------------------------------------------------
-    def memory_report(self) -> Dict[str, int]:
-        """Bytes by residence class — the paper's Table 3 accounting."""
-        dp = self.reducer.d_primary
-        pilot = (self.arrays["sub_neighbors"].size * 4 +
-                 self.arrays["primary"].size * 4 +
-                 self.arrays["fes_entries"].size * 4)
-        full = (self.arrays["full_neighbors"].size * 4 +
-                self.arrays["rot_vecs"].size * 4 +
-                self.arrays["residual"].size * 4)
-        return {"pilot_bytes": int(pilot), "full_bytes": int(full),
-                "ratio": float(full / max(pilot, 1))}
+    def memory_report(self) -> Dict:
+        """Dtype-aware bytes by residence class (paper Table 3 accounting;
+        field glossary in docs/api.md).  ``pilot_bytes`` is the stage-①
+        accelerator-resident payload: compact subgraph ids + (possibly
+        quantized) primary vectors + FES entry buckets, including int8
+        scale rows."""
+        A = self.arrays
+        nbytes = lambda k: (int(A[k].size * A[k].dtype.itemsize)
+                            if k in A else 0)
+        pilot_graph = nbytes("sub_neighbors")
+        pilot_vec = nbytes("primary") + nbytes("primary_scale")
+        pilot_fes = nbytes("fes_entries") + nbytes("fes_entries_scale")
+        pilot = pilot_graph + pilot_vec + pilot_fes
+        full = (nbytes("full_neighbors") + nbytes("rot_vecs") +
+                nbytes("residual"))
+        return {"pilot_bytes": pilot, "full_bytes": full,
+                "ratio": float(full / max(pilot, 1)),
+                "pilot_dtype": self.cfg.pilot_dtype,
+                "pilot_id_dtype": str(A["sub_neighbors"].dtype),
+                "pilot_graph_bytes": pilot_graph,
+                "pilot_vec_bytes": pilot_vec,
+                "pilot_fes_bytes": pilot_fes,
+                "pilot_nodes": self.n_pilot,
+                "d_primary": self.reducer.d_primary}
+
+
+# ---------------------------------------------------------------------------
+# Residency planning (DESIGN.md §4): solve the pilot knobs for a byte budget
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ResidencyPlan:
+    """One solved operating point; ``to_config()`` turns it into an
+    ``IndexConfig`` (geometry fields carried over from the planner)."""
+    sample_ratio: float
+    svd_ratio: float
+    pilot_dtype: str
+    est_pilot_bytes: int
+    budget_bytes: int
+    R: int
+    n_entry: int
+    fes_clusters: int
+    pilot_id_dtype: str = "auto"
+
+    @property
+    def fits(self) -> bool:
+        return self.est_pilot_bytes <= self.budget_bytes
+
+    def to_config(self, base: Optional[IndexConfig] = None,
+                  **overrides) -> IndexConfig:
+        """``base`` supplies the fields the plan does not model (seed,
+        build_method, coarse_ratio, ...); every byte-relevant field —
+        geometry (R, n_entry, fes_clusters, id width) and the solved knobs
+        — comes from the plan, so the build-time budget check matches the
+        estimate.  ``overrides`` win last (overriding geometry voids the
+        fits guarantee)."""
+        cfg = base or IndexConfig()
+        return dataclasses.replace(
+            cfg, R=self.R, n_entry=self.n_entry,
+            fes_clusters=self.fes_clusters,
+            sample_ratio=self.sample_ratio, svd_ratio=self.svd_ratio,
+            pilot_dtype=self.pilot_dtype,
+            pilot_id_dtype=self.pilot_id_dtype,
+            pilot_budget_bytes=self.budget_bytes, **overrides)
+
+
+class ResidencyPlanner:
+    """Solve ``(sample_ratio, svd_ratio, pilot_dtype)`` for a stage-①
+    byte budget (DESIGN.md §4).
+
+    The preference ladder sacrifices *encoding fidelity first* (fp32 → bf16
+    → int8 costs the least recall per byte saved — stage ② re-scores
+    exactly either way), then SVD-primary dims, then subgraph coverage:
+    among feasible grid points the planner picks the lexicographic max of
+    ``(sample_ratio, svd_ratio, dtype fidelity)``.  If nothing fits, the
+    smallest plan is returned with ``fits == False``.
+
+    ``estimate()`` mirrors ``PilotANNIndex.memory_report()``: graph and
+    vector bytes are exact, and the FES term is an *upper bound* — the
+    build caps the padded bucket capacity with the same formula
+    (``fes.fes_capacity_cap``), so a plan with ``fits=True`` cannot fail
+    the build-time budget check on FES padding.
+    """
+
+    SAMPLE_GRID = (0.5, 0.4, 0.33, 0.25, 0.2, 0.15, 0.1)
+    SVD_GRID = (0.75, 0.5, 0.33, 0.25)
+
+    def __init__(self, n: int, d: int, *, R: int = 32, n_entry: int = 8192,
+                 fes_clusters: int = 32, pilot_id_dtype: str = "auto"):
+        self.n, self.d = n, d
+        self.R, self.n_entry, self.fes_clusters = R, n_entry, fes_clusters
+        self.pilot_id_dtype = pilot_id_dtype
+
+    def estimate(self, sample_ratio: float, svd_ratio: float,
+                 pilot_dtype: str) -> Dict[str, int]:
+        """Estimated pilot bytes, broken down like ``memory_report()``."""
+        nk = max(1, int(round(sample_ratio * self.n)))
+        dp = max(1, min(self.d, int(round(svd_ratio * self.d))))
+        id_dt = PilotANNIndex._resolve_id_dtype(self.pilot_id_dtype, nk)
+        idb = np.dtype(id_dt).itemsize
+        vb = quant.VEC_ITEMSIZE[pilot_dtype]
+        scale = dp * 4 if pilot_dtype == "int8" else 0
+        graph = (nk + 1) * self.R * idb
+        vec = (nk + 1) * dp * vb + scale
+        ne = min(self.n_entry, nk)
+        cap = fes.fes_capacity_cap(ne, self.fes_clusters)
+        fes_b = self.fes_clusters * cap * dp * vb + scale
+        return {"graph": graph, "vec": vec, "fes": fes_b,
+                "total": graph + vec + fes_b}
+
+    def plan(self, pilot_budget_bytes: int, *,
+             sample_grid: Tuple[float, ...] = None,
+             svd_grid: Tuple[float, ...] = None,
+             dtypes: Tuple[str, ...] = quant.PILOT_DTYPES) -> ResidencyPlan:
+        samples = sample_grid or self.SAMPLE_GRID
+        svds = svd_grid or self.SVD_GRID
+        best_key, best = None, None
+        fallback_plan, fallback_est = None, None
+        for sr in samples:
+            for vr in svds:
+                for dt in dtypes:
+                    est = self.estimate(sr, vr, dt)["total"]
+                    plan = ResidencyPlan(
+                        sample_ratio=sr, svd_ratio=vr, pilot_dtype=dt,
+                        est_pilot_bytes=est,
+                        budget_bytes=pilot_budget_bytes,
+                        R=self.R, n_entry=self.n_entry,
+                        fes_clusters=self.fes_clusters,
+                        pilot_id_dtype=self.pilot_id_dtype)
+                    if est <= pilot_budget_bytes:
+                        key = (sr, vr, quant.FIDELITY[dt])
+                        if best_key is None or key > best_key:
+                            best_key, best = key, plan
+                    elif fallback_est is None or est < fallback_est:
+                        fallback_plan, fallback_est = plan, est
+        return best if best is not None else fallback_plan
 
 
 def recall_at_k(ids: np.ndarray, gt: np.ndarray, k: int) -> float:

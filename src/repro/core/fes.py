@@ -40,10 +40,23 @@ class FESIndex:
         return self.entries.shape[1]
 
 
+def fes_capacity_cap(n_entry: int, r: int, align: int = 128) -> int:
+    """Upper bound on the padded per-cluster capacity: 2× the mean bucket
+    size, align-rounded.  ``build_fes`` enforces it (overflow entries from
+    skewed kmeans buckets are dropped — the pool is a random sample, so
+    this only thins over-dense regions) and ``engine.ResidencyPlanner``
+    uses the same formula, which makes the planner's FES byte estimate a
+    true upper bound on the realized table (DESIGN.md §4)."""
+    return max(align, -(-max(1, (2 * n_entry) // r) // align) * align)
+
+
 def build_fes(vectors: np.ndarray, candidate_ids: np.ndarray, *, r: int = 32,
-              n_entry: int = 8192, seed: int = 0, align: int = 128) -> FESIndex:
+              n_entry: int = 8192, seed: int = 0, align: int = 128,
+              max_capacity: int = None) -> FESIndex:
     """Sample ``n_entry`` entry vectors from candidate_ids, cluster into r
-    coarse buckets, pad buckets to a common 128-aligned capacity."""
+    coarse buckets, pad buckets to a common 128-aligned capacity (bounded
+    by ``max_capacity`` when given; entries past it in an over-full bucket
+    are dropped)."""
     rng = np.random.default_rng(seed)
     n = vectors.shape[0]
     n_entry = min(n_entry, len(candidate_ids))
@@ -53,11 +66,13 @@ def build_fes(vectors: np.ndarray, candidate_ids: np.ndarray, *, r: int = 32,
     assign = np.argmin(pairwise_sq_dists(ev, cent), axis=1)
     counts = np.bincount(assign, minlength=r)
     C = int(max(1, -(-counts.max() // align) * align))
+    if max_capacity is not None:
+        C = min(C, max(align, max_capacity))
     buckets = np.zeros((r, C, vectors.shape[1]), np.float32)
     bucket_ids = np.full((r, C), n, np.int32)
     valid = np.zeros((r, C), bool)
     for c in range(r):
-        members = np.flatnonzero(assign == c)
+        members = np.flatnonzero(assign == c)[:C]
         buckets[c, :len(members)] = ev[members]
         bucket_ids[c, :len(members)] = ids[members]
         valid[c, :len(members)] = True
@@ -66,18 +81,24 @@ def build_fes(vectors: np.ndarray, candidate_ids: np.ndarray, *, r: int = 32,
 
 
 def fes_select_ref(queries: jax.Array, centroids: jax.Array, entries: jax.Array,
-                   entry_ids: jax.Array, valid: jax.Array, L: int
+                   entry_ids: jax.Array, valid: jax.Array, L: int,
+                   entries_scale: jax.Array = None
                    ) -> Tuple[jax.Array, jax.Array]:
     """Pure-jnp reference: route each query to its nearest centroid, score
     only that cluster's entries, return top-L (ids, sq-dists).
 
     queries (B, d); centroids (r, d); entries (r, C, d); -> (B, L) ids/dists.
+    ``entries`` may be stored bf16 or int8 (core/quant.py) — pass the
+    per-dim ``entries_scale`` for int8; centroids stay fp32 (they are tiny
+    and routing quality is budget-irrelevant).
     """
     q = queries.astype(jnp.float32)
     # route
     qc = _xdist(q, centroids)                         # (B, r)
     route = jnp.argmin(qc, axis=1)                    # (B,)
-    ev = entries[route]                               # (B, C, d)   gather
+    ev = entries[route].astype(jnp.float32)           # (B, C, d)   gather
+    if entries_scale is not None:
+        ev = ev * entries_scale.astype(jnp.float32)
     iv = entry_ids[route]                             # (B, C)
     mv = valid[route]
     d = _rowdist(q, ev)                               # (B, C)
@@ -87,11 +108,14 @@ def fes_select_ref(queries: jax.Array, centroids: jax.Array, entries: jax.Array,
 
 
 def fes_select_bruteforce(queries: jax.Array, entries: jax.Array,
-                          entry_ids: jax.Array, valid: jax.Array, L: int
+                          entry_ids: jax.Array, valid: jax.Array, L: int,
+                          entries_scale: jax.Array = None
                           ) -> Tuple[jax.Array, jax.Array]:
     """1-block degenerate case of Table 2: score ALL entries (no routing)."""
     r, C, d_ = entries.shape
-    ev = entries.reshape(r * C, d_)
+    ev = entries.reshape(r * C, d_).astype(jnp.float32)
+    if entries_scale is not None:
+        ev = ev * entries_scale.astype(jnp.float32)
     d = _xdist(queries.astype(jnp.float32), ev)
     d = jnp.where(valid.reshape(-1)[None, :], d, jnp.inf)
     neg_d, idx = jax.lax.top_k(-d, L)

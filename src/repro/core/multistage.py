@@ -1,28 +1,47 @@
 """Multi-stage ANNS processing (PilotANN §4): the paper's core contribution.
 
-  ① pilot traversal   — subgraph + SVD-primary vectors (accelerator-resident)
-  ② residual refine   — exact full distances via the SVD identity
-                        ‖x−q‖² = ‖xp−qp‖² + ‖xr−qr‖², then a bounded
-                        (2-round) traversal on the subgraph with full vectors
-  ③ final traversal   — full graph + full vectors, seeded with ②'s beam and
-                        visited table
+  ① pilot traversal   — compact subgraph + SVD-primary vectors
+                        (accelerator-resident; optionally quantized to
+                        bf16/int8, DESIGN.md §4)
+  ② residual refine   — exact full distances for the pilot beam, then a
+                        bounded (2-round) traversal on the subgraph with
+                        full vectors.  With an exact (fp32) pilot the
+                        primary term is reused via the SVD identity
+                        ‖x−q‖² = ‖xp−qp‖² + ‖xr−qr‖²; with a *quantized*
+                        pilot the beam distances are approximate, so the
+                        full distance is re-scored exactly from ``rot_vecs``
+                        instead (adding an exact residual to an inexact
+                        primary would bake the quantization error into the
+                        "exact" stage).
+  ③ final traversal   — full graph + full vectors, seeded with ②'s beam
 
 "Staged data-ready processing": each stage only touches data that is already
-resident for it; the only inter-stage traffic is the candidate beam + visited
-filter (≈1 KB/query in the paper).  Graceful degradation: with stages
-disabled this reduces to plain greedy search (the ablation of Table 5).
+resident for it; the inter-stage traffic is the candidate beam plus — for
+①→② only — the visited filter (≈1 KB/query in the paper).  Stages ① and ②
+share a *compact* pilot id space (rows exist only for sampled nodes — that
+is what makes the pilot index scale with ``sample_ratio``), so stage ②
+inherits ①'s visited filter directly; stage ③ lives in the full id space,
+where the filter cannot follow the ``pilot_to_full`` mapping, so it rebuilds
+its filter from the handed-over beam (DESIGN.md §4).  Graceful degradation:
+with stages disabled this reduces to plain greedy search (the ablation of
+Table 5).
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import fes as F
 from repro.core import traversal as T
+
+# Per-stage stats: every value is a (B,) int32 array of per-query
+# distance-computation counts (docs/api.md glossary).  Both search entry
+# points return exactly the same key set.
+StatsDict = Dict[str, jax.Array]
 
 
 @dataclass(frozen=True)
@@ -58,8 +77,20 @@ class SearchParams:
     use_persistent_traversal: bool = False
 
 
-class Stats(dict):
-    """Per-stage distance-computation counts (B,) arrays."""
+def pad_for_pallas(queries: jax.Array, params: SearchParams,
+                   align: int = 8) -> Tuple[jax.Array, int]:
+    """Shared ragged-batch padding for the Pallas stage-① paths (per-hop or
+    persistent): pad the query batch to a sublane-aligned size so the fused
+    kernels tile cleanly (DESIGN.md §3); callers slice results back to the
+    returned original batch size.  Used by ``engine.PilotANNIndex`` (outside
+    jit — also caps jit-signature churn for ragged client batches) and by
+    ``pipeline.split_stages`` (inside jit — pad widths are static per
+    trace).  A no-op for non-Pallas params or aligned batches."""
+    B = queries.shape[0]
+    use_pallas = params.use_pallas_traversal or params.use_persistent_traversal
+    if not use_pallas or B % align == 0:
+        return queries, B
+    return jnp.pad(queries, ((0, align - B % align), (0, 0))), B
 
 
 def hierarchical_entries(arrays: Dict[str, jax.Array], queries: jax.Array,
@@ -67,50 +98,119 @@ def hierarchical_entries(arrays: Dict[str, jax.Array], queries: jax.Array,
                          ) -> Tuple[jax.Array, jax.Array]:
     """HNSW-hierarchy analogue: score the coarse sampled layer exactly and
     take the top entries (at least as strong as an HNSW upper-layer descent;
-    every scored coarse node is charged to the baseline's budget)."""
+    every scored coarse node is charged to the baseline's budget).
+
+    Returns (coarse slot indices (B, n_out), per-query cost).  Callers map
+    slots through ``arrays["coarse_ids"]`` (full ids) or
+    ``arrays["coarse_pilot_ids"]`` (compact pilot ids, sentinel for coarse
+    nodes outside the subgraph)."""
     Bq = queries.shape[0]
     cv = arrays["coarse_vecs"][:-1]                # (m, d), drop sentinel row
     m = cv.shape[0]
     d2 = T.sq_dists(queries, cv)                   # (B, m)
     idx = jax.lax.top_k(-d2, n_out)[1]
     cost = jnp.full((Bq,), m, jnp.int32)
-    return arrays["coarse_ids"][idx], cost
+    return idx, cost
+
+
+def refine_stage(arrays: Dict[str, jax.Array], params: SearchParams,
+                 queries: jax.Array, cand_id: jax.Array, cand_dp: jax.Array,
+                 visited: jax.Array = None
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Stage ② (shared by ``multistage_search`` and
+    ``pipeline.split_stages``): exact re-rank of the pilot beam, then a
+    bounded traversal on the compact subgraph with FULL vectors.
+
+    ``cand_id``/``cand_dp``: stage-①'s beam (compact pilot ids + stage-①
+    distances); ``visited``: stage-①'s filter (same compact id space, so it
+    carries over directly).  The re-rank is exact either way: for fp32
+    pilots the SVD identity reuses the primary term; for quantized pilots
+    (``primary`` stored bf16/int8) the beam distances carry quantization
+    error, so the FULL distance is re-scored from ``rot_vecs`` instead
+    (DESIGN.md §4).  Neighbours come from the compact table, distances from
+    ``rot_vecs`` via ``pilot_to_full`` (no duplicated full-d subgraph
+    table).
+
+    Returns ``(seed_id, seed_d, refine_dist)``: the refined beam mapped
+    back to FULL ids + its exact distances (stage ③'s seed), and the
+    per-query distance-computation count."""
+    nk = arrays["pilot_to_full"].shape[0] - 1
+    dp = arrays["primary"].shape[1]
+    ptf = arrays["pilot_to_full"]
+    Bq = queries.shape[0]
+    cand_full = ptf[cand_id]
+    valid = cand_id < nk
+    if arrays["primary"].dtype != jnp.float32:    # quantized: exact re-score
+        d_full = jnp.where(valid,
+                           T.sq_dists(queries, arrays["rot_vecs"][cand_full]),
+                           jnp.inf)
+    else:                                         # exact: SVD identity
+        qr = queries[:, dp:]
+        d_res = T.sq_dists(qr, arrays["residual"][cand_full])
+        d_full = jnp.where(valid, cand_dp + d_res, jnp.inf)
+    n_rerank = jnp.sum(valid, axis=1).astype(jnp.int32)
+
+    def dist2(qs, ids, fresh):
+        return T.sq_dists(qs, arrays["rot_vecs"][ptf[ids]])
+    spec2 = T.TraversalSpec(ef=params.ef, visited_mode=params.visited_mode,
+                            bloom_bits=params.bloom_bits,
+                            frontier_width=params.frontier_width)
+    st2 = T.greedy_search(spec2, queries, arrays["sub_neighbors"],
+                          arrays["rot_vecs"], nk,
+                          entry_ids=jnp.full((Bq, 1), nk, jnp.int32),
+                          iters=params.refine_iters, visited=visited,
+                          extra_id=cand_id, extra_d=d_full, dist_fn=dist2)
+    return ptf[st2.cand_id], st2.cand_d, n_rerank + st2.n_dist
 
 
 def multistage_search(arrays: Dict[str, jax.Array], params: SearchParams,
-                      queries: jax.Array) -> Tuple[jax.Array, jax.Array, Dict]:
+                      queries: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array, StatsDict]:
     """arrays: device arrays built by engine.PilotANNIndex —
-      full_neighbors (n+1, R), sub_neighbors (n+1, R),
-      rot_vecs (n+1, d), primary (n+1, dp), residual (n+1, dr),
-      fes_centroids (r, d), fes_entries (r, C, dp), fes_entry_ids (r, C),
-      fes_valid (r, C), default_entries (E0,)
+      full_neighbors (n+1, R), rot_vecs (n+1, d), residual (n+1, dr);
+      compact pilot tables sub_neighbors (nk+1, R) int16/int32,
+      primary (nk+1, dp) fp32/bf16/int8 [+ primary_scale (dp,)],
+      pilot_to_full (nk+1,); fes_centroids (r, d), fes_entries (r, C, dp)
+      [+ fes_entries_scale (dp,)], fes_entry_ids (r, C) *pilot* ids,
+      fes_valid (r, C); coarse layer + pilot_default_entry.
     Queries must already be SVD-rotated (engine handles it).
     Returns (ids (B, k), dists (B, k), stats).
     """
     n = arrays["rot_vecs"].shape[0] - 1
+    nk = arrays["pilot_to_full"].shape[0] - 1      # compact pilot id space
     dp = arrays["primary"].shape[1]
     Bq = queries.shape[0]
-    stats: Dict[str, jax.Array] = {}
+    stats: StatsDict = {}
     q_primary = queries[:, :dp]
+    ptf = arrays["pilot_to_full"]
+    pilot_scale = arrays.get("primary_scale")
 
     # ---- stage 0: entry selection --------------------------------------
+    entry_full = None          # full-id entries (pilot disabled paths)
     if params.use_fes:
-        entry_ids, _ = F.fes_select_ref(q_primary, arrays["fes_centroids"],
-                                        arrays["fes_entries"],
-                                        arrays["fes_entry_ids"],
-                                        arrays["fes_valid"], params.fes_L)
+        entry_pilot, _ = F.fes_select_ref(
+            q_primary, arrays["fes_centroids"], arrays["fes_entries"],
+            arrays["fes_entry_ids"], arrays["fes_valid"], params.fes_L,
+            entries_scale=arrays.get("fes_entries_scale"))
+        if not params.use_pilot:
+            entry_full = ptf[entry_pilot]
         # FES cost: one centroid pass + one cluster pass (counted per query)
         stats["fes_dist"] = jnp.full((Bq,), arrays["fes_centroids"].shape[0] +
                                      arrays["fes_entries"].shape[1], jnp.int32)
     else:
         # coarse layer holds full-d vectors; select entries with full queries
-        entry_ids, entry_cost = hierarchical_entries(arrays, queries, params)
+        slots, entry_cost = hierarchical_entries(arrays, queries, params)
+        entry_full = arrays["coarse_ids"][slots]
+        # pilot entries: coarse nodes mapped into the compact subgraph
+        # (sentinel when sampled out) + the guaranteed pilot medoid so the
+        # stage-① beam is never empty
+        entry_pilot = jnp.concatenate(
+            [arrays["coarse_pilot_ids"][slots],
+             jnp.broadcast_to(arrays["pilot_default_entry"], (Bq, 1))],
+            axis=1)
         stats["fes_dist"] = entry_cost
 
-    visited = None
-    extra_id = extra_d = None
-
-    # ---- stage ①: pilot traversal (subgraph, primary dims) -------------
+    # ---- stage ①: pilot traversal (compact subgraph, primary dims) -----
     if params.use_pilot:
         spec1 = T.TraversalSpec(ef=params.ef_pilot, visited_mode=params.visited_mode,
                                 bloom_bits=params.bloom_bits,
@@ -120,40 +220,26 @@ def multistage_search(arrays: Dict[str, jax.Array], params: SearchParams,
                                             params.use_persistent_traversal),
                                 pallas_interpret=params.pallas_interpret,
                                 use_persistent=params.use_persistent_traversal)
-        padded_primary = arrays["primary"]
         st1 = T.greedy_search(spec1, q_primary, arrays["sub_neighbors"],
-                              padded_primary, n, entry_ids)
+                              arrays["primary"], nk, entry_pilot,
+                              vec_scale=pilot_scale)
         stats["pilot_dist"] = st1.n_dist
         stats["pilot_hops"] = st1.n_hops
         stats["pilot_expanded"] = st1.n_exp
-        cand_id, cand_dp = st1.cand_id, st1.cand_d
-        visited = st1.visited
+        cand_id, cand_dp = st1.cand_id, st1.cand_d       # compact pilot ids
+        cand_full = ptf[cand_id]                         # (B, ef1) full ids
+        pilot_visited = st1.visited
     else:
-        cand_id, cand_dp = None, None
+        cand_id = cand_dp = cand_full = None
         stats["pilot_dist"] = jnp.zeros((Bq,), jnp.int32)
         stats["pilot_hops"] = jnp.zeros((Bq,), jnp.int32)
         stats["pilot_expanded"] = jnp.zeros((Bq,), jnp.int32)
 
-    # ---- stage ②: residual refinement ----------------------------------
+    # ---- stage ②: residual refinement (shared helper; inherits ①'s
+    # visited filter — same compact id space) ----------------------------
     if params.use_refine and params.use_pilot:
-        qr = queries[:, dp:]
-        res_table = arrays["residual"]
-        rvecs = res_table[cand_id]                            # (B, ef1, dr)
-        d_res = T.sq_dists(qr, rvecs)
-        d_full = jnp.where(cand_id < n, cand_dp + d_res, jnp.inf)
-        stats["refine_dist"] = jnp.sum(cand_id < n, axis=1).astype(jnp.int32)
-        # re-rank, then bounded traversal on subgraph with FULL vectors
-        spec2 = T.TraversalSpec(ef=params.ef, visited_mode=params.visited_mode,
-                                bloom_bits=params.bloom_bits,
-                                frontier_width=params.frontier_width)
-        st2 = T.greedy_search(spec2, queries, arrays["sub_neighbors"],
-                              arrays["rot_vecs"], n,
-                              entry_ids=jnp.full((Bq, 1), n, jnp.int32),
-                              iters=params.refine_iters, visited=visited,
-                              extra_id=cand_id, extra_d=d_full)
-        stats["refine_dist"] = stats["refine_dist"] + st2.n_dist
-        seed_id, seed_d = st2.cand_id, st2.cand_d
-        visited = st2.visited
+        seed_id, seed_d, stats["refine_dist"] = refine_stage(
+            arrays, params, queries, cand_id, cand_dp, visited=pilot_visited)
     elif params.use_pilot:
         # degraded: hand pilot results (primary-only dists are NOT exact) to ③
         # by re-scoring them with full vectors there (extra entries)
@@ -164,6 +250,9 @@ def multistage_search(arrays: Dict[str, jax.Array], params: SearchParams,
         stats["refine_dist"] = jnp.zeros((Bq,), jnp.int32)
 
     # ---- stage ③: final traversal (full graph + vectors) ---------------
+    # the compact→full handover is the beam alone: stage ③ rebuilds its
+    # visited filter from the seed beam (init_state inserts it), since the
+    # stage-①/② filters live in the compact pilot id space (DESIGN.md §4)
     spec3 = T.TraversalSpec(ef=params.ef, visited_mode=params.visited_mode,
                             bloom_bits=params.bloom_bits,
                             max_iters=params.max_iters,
@@ -172,14 +261,13 @@ def multistage_search(arrays: Dict[str, jax.Array], params: SearchParams,
         st3 = T.greedy_search(spec3, queries, arrays["full_neighbors"],
                               arrays["rot_vecs"], n,
                               entry_ids=jnp.full((Bq, 1), n, jnp.int32),
-                              visited=visited, extra_id=seed_id, extra_d=seed_d)
+                              extra_id=seed_id, extra_d=seed_d)
     elif params.use_pilot:  # pilot w/o refine: re-score pilot beam fully
         st3 = T.greedy_search(spec3, queries, arrays["full_neighbors"],
-                              arrays["rot_vecs"], n, entry_ids=cand_id,
-                              visited=visited)
+                              arrays["rot_vecs"], n, entry_ids=cand_full)
     else:
         st3 = T.greedy_search(spec3, queries, arrays["full_neighbors"],
-                              arrays["rot_vecs"], n, entry_ids=entry_ids)
+                              arrays["rot_vecs"], n, entry_ids=entry_full)
     stats["final_dist"] = st3.n_dist
     stats["final_hops"] = st3.n_hops
     stats["final_expanded"] = st3.n_exp
@@ -190,7 +278,8 @@ def multistage_search(arrays: Dict[str, jax.Array], params: SearchParams,
 
 
 def baseline_search(arrays: Dict[str, jax.Array], params: SearchParams,
-                    queries: jax.Array) -> Tuple[jax.Array, jax.Array, Dict]:
+                    queries: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array, StatsDict]:
     """Single-stage greedy search on the full index (the HNSW-CPU baseline).
 
     Returns the same unified ``stats`` schema as ``multistage_search``
@@ -204,7 +293,8 @@ def baseline_search(arrays: Dict[str, jax.Array], params: SearchParams,
                            bloom_bits=params.bloom_bits,
                            max_iters=params.max_iters,
                            frontier_width=params.frontier_width)
-    entries, entry_cost = hierarchical_entries(arrays, queries, params)
+    slots, entry_cost = hierarchical_entries(arrays, queries, params)
+    entries = arrays["coarse_ids"][slots]
     st = T.greedy_search(spec, queries, arrays["full_neighbors"],
                          arrays["rot_vecs"], n, entries)
     ids, dists = T.topk_from_state(st, params.k)

@@ -7,6 +7,18 @@ of the next batch is dispatched before the CPU-side stages of the current
 batch are consumed, so the runtime overlaps them whenever the backends can.
 On a TPU pod the same structure overlaps the replicated-pilot program with
 the sharded-traversal program (two executables in flight).
+
+The stage boundary carries the pilot beam (compact pilot ids + stage-①
+distances) and the visited filter (stages ① and ② share the compact id
+space); the shared ``multistage.refine_stage`` helper then re-scores
+exactly (from ``rot_vecs`` when the pilot is quantized, via the SVD
+residual identity when it is fp32 — DESIGN.md §4) and hands stage ③ the
+beam alone, exactly as ``multistage.multistage_search`` does.
+
+Ragged batches: the Pallas stage-① paths need sublane-aligned batch sizes;
+``pilot_stage`` pads with the shared ``multistage.pad_for_pallas`` helper
+(inside jit — pad widths are static per trace) and slices its outputs back,
+so ``cpu_stages`` and callers always see the caller's batch size.
 """
 
 from __future__ import annotations
@@ -22,22 +34,26 @@ import numpy as np
 
 from repro.core import traversal as T
 from repro.core import fes as F
-from repro.core.multistage import SearchParams
+from repro.core.multistage import SearchParams, pad_for_pallas, refine_stage
 
 
 def split_stages(arrays: Dict[str, jax.Array], params: SearchParams):
     """jit the pilot stage (①+FES) and the CPU stages (②③) separately so
     they can be dispatched independently (the pipelining boundary)."""
     n = arrays["rot_vecs"].shape[0] - 1
+    nk = arrays["pilot_to_full"].shape[0] - 1
     dp = arrays["primary"].shape[1]
+    pilot_scale = arrays.get("primary_scale")
 
     @jax.jit
     def pilot_stage(queries):
-        qp = queries[:, :dp]
-        entry_ids, _ = F.fes_select_ref(qp, arrays["fes_centroids"],
-                                        arrays["fes_entries"],
-                                        arrays["fes_entry_ids"],
-                                        arrays["fes_valid"], params.fes_L)
+        B0 = queries.shape[0]
+        qpad, _ = pad_for_pallas(queries, params)
+        qp = qpad[:, :dp]
+        entry_ids, _ = F.fes_select_ref(
+            qp, arrays["fes_centroids"], arrays["fes_entries"],
+            arrays["fes_entry_ids"], arrays["fes_valid"], params.fes_L,
+            entries_scale=arrays.get("fes_entries_scale"))
         spec1 = T.TraversalSpec(ef=params.ef_pilot, visited_mode=params.visited_mode,
                                 bloom_bits=params.bloom_bits,
                                 max_iters=params.max_iters,
@@ -47,23 +63,15 @@ def split_stages(arrays: Dict[str, jax.Array], params: SearchParams):
                                 pallas_interpret=params.pallas_interpret,
                                 use_persistent=params.use_persistent_traversal)
         st1 = T.greedy_search(spec1, qp, arrays["sub_neighbors"],
-                              arrays["primary"], n, entry_ids)
-        return st1.cand_id, st1.cand_d, st1.visited
+                              arrays["primary"], nk, entry_ids,
+                              vec_scale=pilot_scale)
+        return st1.cand_id[:B0], st1.cand_d[:B0], st1.visited[:B0]
 
     @jax.jit
     def cpu_stages(queries, cand_id, cand_dp, visited):
-        qr = queries[:, dp:]
-        rvecs = arrays["residual"][cand_id]
-        d_full = jnp.where(cand_id < n, cand_dp + T.sq_dists(qr, rvecs), jnp.inf)
         Bq = queries.shape[0]
-        spec2 = T.TraversalSpec(ef=params.ef, visited_mode=params.visited_mode,
-                                bloom_bits=params.bloom_bits,
-                                frontier_width=params.frontier_width)
-        st2 = T.greedy_search(spec2, queries, arrays["sub_neighbors"],
-                              arrays["rot_vecs"], n,
-                              entry_ids=jnp.full((Bq, 1), n, jnp.int32),
-                              iters=params.refine_iters, visited=visited,
-                              extra_id=cand_id, extra_d=d_full)
+        seed_id, seed_d, _ = refine_stage(arrays, params, queries,
+                                          cand_id, cand_dp, visited=visited)
         spec3 = T.TraversalSpec(ef=params.ef, visited_mode=params.visited_mode,
                                 bloom_bits=params.bloom_bits,
                                 max_iters=params.max_iters,
@@ -71,8 +79,7 @@ def split_stages(arrays: Dict[str, jax.Array], params: SearchParams):
         st3 = T.greedy_search(spec3, queries, arrays["full_neighbors"],
                               arrays["rot_vecs"], n,
                               entry_ids=jnp.full((Bq, 1), n, jnp.int32),
-                              visited=st2.visited, extra_id=st2.cand_id,
-                              extra_d=st2.cand_d)
+                              extra_id=seed_id, extra_d=seed_d)
         return T.topk_from_state(st3, params.k)
 
     return pilot_stage, cpu_stages

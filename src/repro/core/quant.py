@@ -1,0 +1,105 @@
+"""Quantized pilot payloads (DESIGN.md §4).
+
+PilotANN's scale headline — serving datasets far larger than accelerator
+memory — rests on shrinking the *stage-① resident set*: the pilot subgraph
+CSR, the SVD-primary vectors and the FES entry buckets.  BANG and FusionANNS
+(PAPERS.md) both compress the GPU-resident vectors; here the same lever is
+applied to the SVD-primary split.  Three encodings for the stage-① vector
+tables (``IndexConfig.pilot_dtype``):
+
+  * ``float32``  — identity (4 B/dim), the exact baseline.
+  * ``bfloat16`` — truncation (2 B/dim), no side data.  bf16→f32 widening is
+    exact, so the quantization error is purely the build-time rounding.
+  * ``int8``     — symmetric per-dimension scale (1 B/dim + one fp32 scale
+    row per table): ``data = round(x / scale)`` with
+    ``scale[j] = max_i |x[i, j]| / 127``.  Dequantization is
+    ``x̂ = data · scale`` and the per-element error is bounded by
+    ``scale[j] / 2``.
+
+Quantization is *only* applied to stage-① payloads.  Because the pilot beam
+distances become approximate, stage ② must re-score candidates **exactly**
+from the full-precision ``rot_vecs`` instead of reusing the residual
+identity ``‖x−q‖² = ‖xp−qp‖² + ‖xr−qr‖²`` (which would add an exact residual
+term to an inexact primary term) — see ``core/multistage.py`` and
+DESIGN.md §4.
+
+This module is numpy (build-time) + pure-jnp (reference math).  The in-kernel
+dequantized distance paths live in ``kernels/traversal_kernel.py`` and
+``kernels/fes_kernel.py`` and are parity-tested against ``dequant_sq_dists``
+/ the ``kernels/ref.py`` oracles.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Encodings accepted by IndexConfig.pilot_dtype / PodIndexSpec.pilot_dtype.
+PILOT_DTYPES = ("float32", "bfloat16", "int8")
+
+# Bytes per vector dimension for each encoding.
+VEC_ITEMSIZE = {"float32": 4, "bfloat16": 2, "int8": 1}
+
+# Fidelity rank used by the ResidencyPlanner's preference ladder (higher is
+# more exact; the planner sacrifices fidelity before svd/sample ratios).
+FIDELITY = {"float32": 2, "bfloat16": 1, "int8": 0}
+
+
+def quantize(x: np.ndarray, dtype: str
+             ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    """Encode a float32 table ``x`` (..., d) as ``(data, scale)``.
+
+    ``scale`` is a per-dimension float32 ``(d,)`` row for ``int8`` and
+    ``None`` otherwise.  Zero rows (sentinels / padding) stay exactly zero
+    under every encoding.
+    """
+    if dtype not in PILOT_DTYPES:
+        raise ValueError(f"pilot_dtype must be one of {PILOT_DTYPES}, "
+                         f"got {dtype!r}")
+    x = np.asarray(x, np.float32)
+    if dtype == "float32":
+        return x, None
+    if dtype == "bfloat16":
+        return x.astype(jnp.bfloat16), None
+    amax = np.abs(x.reshape(-1, x.shape[-1])).max(axis=0)
+    scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+    data = np.clip(np.round(x / scale), -127, 127).astype(np.int8)
+    return data, scale
+
+
+def dequantize(data, scale: Optional[np.ndarray] = None):
+    """Decode back to float32 (numpy in, numpy out; jnp in, jnp out)."""
+    xp = jnp if isinstance(data, jax.Array) else np
+    x = xp.asarray(data).astype(xp.float32)
+    return x if scale is None else x * xp.asarray(scale, xp.float32)
+
+
+def roundtrip_error_bound(x: np.ndarray, dtype: str) -> np.ndarray:
+    """Per-dimension bound on ``|x - dequantize(quantize(x))|``."""
+    x = np.asarray(x, np.float32)
+    amax = np.abs(x.reshape(-1, x.shape[-1])).max(axis=0)
+    if dtype == "float32":
+        return np.zeros_like(amax)
+    if dtype == "bfloat16":
+        # bf16 keeps 8 significand bits: relative error <= 2**-8 of |x|.
+        return amax * 2.0 ** -8
+    scale = np.where(amax > 0, amax / 127.0, 1.0)
+    return scale * 0.5 + 1e-7
+
+
+def dequant_sq_dists(q: jax.Array, table: jax.Array,
+                     scale: Optional[jax.Array] = None) -> jax.Array:
+    """Pure-jnp reference dequant-distance: squared euclidean between fp32
+    queries ``(B, d)`` and a quantized table ``(m, d)`` -> ``(B, m)``.
+
+    This is the oracle the in-kernel dequantized paths are parity-tested
+    against: dequantize the whole table, then the standard norms-minus-2dot
+    identity (``core.traversal.sq_dists``)."""
+    from repro.core.traversal import sq_dists
+    t = table.astype(jnp.float32)
+    if scale is not None:
+        t = t * scale.astype(jnp.float32)
+    return sq_dists(q, t)

@@ -111,14 +111,18 @@ def init_state(spec: TraversalSpec, queries: jax.Array, entry_ids: jax.Array,
                vectors: jax.Array, n: int,
                visited: Optional[jax.Array] = None,
                extra_id: Optional[jax.Array] = None,
-               extra_d: Optional[jax.Array] = None) -> SearchState:
+               extra_d: Optional[jax.Array] = None,
+               vec_scale: Optional[jax.Array] = None) -> SearchState:
     """Build the initial beam from entry points (+ optionally pre-scored
-    candidates handed over from an earlier stage)."""
+    candidates handed over from an earlier stage).  ``vec_scale``: per-dim
+    dequantization scale for int8 vector tables (core/quant.py)."""
     Bq, E = entry_ids.shape
     valid = entry_ids < n
     table = jnp.concatenate([vectors, jnp.zeros((1, vectors.shape[1]),
                                                 vectors.dtype)], axis=0)
     evecs = table[entry_ids]                                  # (B, E, d)
+    if vec_scale is not None:
+        evecs = evecs.astype(jnp.float32) * vec_scale
     d = jnp.where(valid, sq_dists(queries, evecs), INF)
     n_dist = jnp.sum(valid, axis=1).astype(jnp.int32)
     if extra_id is not None:
@@ -158,7 +162,8 @@ def init_state(spec: TraversalSpec, queries: jax.Array, entry_ids: jax.Array,
 
 def expansion_round(spec: TraversalSpec, state: SearchState, queries: jax.Array,
                     neighbor_table: jax.Array, vector_table: jax.Array,
-                    n: int, nbr_fn=None, dist_fn=None) -> SearchState:
+                    n: int, nbr_fn=None, dist_fn=None,
+                    vec_scale: Optional[jax.Array] = None) -> SearchState:
     """One synchronous W-wide neighbour-expansion round for the whole batch.
 
     The top ``W = spec.frontier_width`` unchecked beam entries are expanded
@@ -174,14 +179,16 @@ def expansion_round(spec: TraversalSpec, state: SearchState, queries: jax.Array,
     ``nbr_fn(u) -> (B, R)`` (called once per frontier) and
     ``dist_fn(queries, ids, fresh) -> ids.shape`` override the table lookups —
     the distributed engine injects shard_map versions that fetch/score corpus
-    rows shard-side (perf: 'shardwise')."""
+    rows shard-side (perf: 'shardwise').  ``vec_scale``: per-dim int8
+    dequantization scale for quantized vector tables (core/quant.py);
+    bfloat16 tables need no scale (sq_dists widens exactly)."""
     Bq, ef = state.cand_id.shape
     R = neighbor_table.shape[1]
     W = spec.frontier_width
 
     if spec.use_pallas and nbr_fn is None and dist_fn is None:
         return _pallas_round(spec, state, queries, neighbor_table,
-                             vector_table, n)
+                             vector_table, n, vec_scale=vec_scale)
 
     # top-W unchecked candidates per query: the beam is distance-sorted, so
     # the first W unchecked slots are the W best (rows with none stay idle)
@@ -211,6 +218,8 @@ def expansion_round(spec: TraversalSpec, state: SearchState, queries: jax.Array,
 
     if dist_fn is None:
         nvecs = vector_table[nbrs]                            # (B, W·R, d)
+        if vec_scale is not None:
+            nvecs = nvecs.astype(jnp.float32) * vec_scale
         d = jnp.where(fresh, sq_dists(queries, nvecs), INF)
     else:
         d = jnp.where(fresh, dist_fn(queries, nbrs, fresh), INF)
@@ -242,7 +251,7 @@ def expansion_round(spec: TraversalSpec, state: SearchState, queries: jax.Array,
 
 def _pallas_round(spec: TraversalSpec, state: SearchState, queries: jax.Array,
                   neighbor_table: jax.Array, vector_table: jax.Array,
-                  n: int) -> SearchState:
+                  n: int, vec_scale: Optional[jax.Array] = None) -> SearchState:
     """Fused expansion round: the whole W-wide hop body runs as one Pallas
     kernel (frontier selection + gather + visited filter + MXU distances +
     bitonic beam merge); only the counters are maintained here (cheap
@@ -257,7 +266,8 @@ def _pallas_round(spec: TraversalSpec, state: SearchState, queries: jax.Array,
     new_id, new_d, new_ck, visited, fresh = fused_traversal_hop(
         queries, neighbor_table, vector_table, state.cand_id, state.cand_d,
         state.checked, state.visited, n, width=spec.frontier_width,
-        visited_mode=spec.visited_mode, interpret=spec.pallas_interpret)
+        visited_mode=spec.visited_mode, interpret=spec.pallas_interpret,
+        vec_scale=vec_scale)
     return SearchState(
         cand_id=new_id,
         cand_d=new_d,
@@ -277,12 +287,15 @@ def greedy_search(spec: TraversalSpec, queries: jax.Array,
                   visited: Optional[jax.Array] = None,
                   extra_id: Optional[jax.Array] = None,
                   extra_d: Optional[jax.Array] = None,
-                  nbr_fn=None, dist_fn=None) -> SearchState:
+                  nbr_fn=None, dist_fn=None,
+                  vec_scale: Optional[jax.Array] = None) -> SearchState:
     """Greedy best-first search (Algorithm 1), batched, W-wide per round
     (spec.frontier_width).
 
     neighbor_table: (n+1, R) padded adjacency (row n = sentinel row).
-    vector_table:   (n+1, d) vectors with zero row at n.
+    vector_table:   (n+1, d) vectors with zero row at n.  May be stored
+    bfloat16 or int8 (core/quant.py); for int8 pass the per-dim ``vec_scale``
+    so distances dequantize (the fused kernels dequantize in VMEM).
     iters: if given, runs a fixed number of rounds (stage-② refinement and
     the distributed serving step use this); otherwise runs to convergence
     (no unchecked candidate anywhere) with spec.max_iters as a safety bound.
@@ -294,7 +307,8 @@ def greedy_search(spec: TraversalSpec, queries: jax.Array,
     are identical either way.
     """
     state = init_state(spec, queries, entry_ids, vector_table[:-1], n,
-                       visited=visited, extra_id=extra_id, extra_d=extra_d)
+                       visited=visited, extra_id=extra_id, extra_d=extra_d,
+                       vec_scale=vec_scale)
 
     if spec.use_pallas and nbr_fn is None and dist_fn is None:
         # hoist the kernel's row-alignment padding out of the hop loop: with
@@ -317,7 +331,7 @@ def greedy_search(spec: TraversalSpec, queries: jax.Array,
                 state.cand_d, state.checked, state.visited, n,
                 rounds=rounds, width=spec.frontier_width,
                 visited_mode=spec.visited_mode,
-                interpret=spec.pallas_interpret)
+                interpret=spec.pallas_interpret, vec_scale=vec_scale)
             return SearchState(cand_id=nid, cand_d=nd, checked=nck,
                                visited=nvis, n_dist=state.n_dist + d_dist,
                                n_hops=state.n_hops + d_hops,
@@ -326,7 +340,7 @@ def greedy_search(spec: TraversalSpec, queries: jax.Array,
     round_fn = partial(expansion_round, spec, queries=queries,
                        neighbor_table=neighbor_table,
                        vector_table=vector_table, n=n,
-                       nbr_fn=nbr_fn, dist_fn=dist_fn)
+                       nbr_fn=nbr_fn, dist_fn=dist_fn, vec_scale=vec_scale)
 
     if iters is not None and unroll:
         for _ in range(iters):

@@ -25,11 +25,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _fes_tile_kernel(q_ref, ev_ref, o_ref):
-    """One (cluster, C-tile, d-tile) step: accumulate partial sq-distances."""
+def _fes_tile_kernel(q_ref, ev_ref, s_ref, o_ref):
+    """One (cluster, C-tile, d-tile) step: accumulate partial sq-distances.
+    ``s_ref`` (1, dt): per-dim dequantization scale for this d-tile —
+    all-ones for exact entry tables (bit-exact), the int8 scale row for
+    quantized ones (DESIGN.md §4)."""
     kd = pl.program_id(2)
     q = q_ref[0].astype(jnp.float32)          # (QC, dt)
-    e = ev_ref[0].astype(jnp.float32)         # (Ct, dt)
+    e = ev_ref[0].astype(jnp.float32) * s_ref[0]   # (Ct, dt), dequantized
     qn = jnp.sum(q * q, axis=-1, keepdims=True)            # (QC, 1)
     en = jnp.sum(e * e, axis=-1, keepdims=True)            # (Ct, 1)
     dot = jax.lax.dot_general(q, e, (((1,), (1,)), ((), ())),
@@ -46,11 +49,14 @@ def _fes_tile_kernel(q_ref, ev_ref, o_ref):
 
 
 def fes_distances(q_grouped: jax.Array, entries: jax.Array, *,
+                  scale: jax.Array = None,
                   c_tile: int = 128, d_tile: int = 128,
                   interpret: bool = False) -> jax.Array:
     """q_grouped: (r, QC, d) cluster-grouped (padded) queries;
-    entries: (r, C, d) cluster-bucketed entry vectors.
-    Returns squared distances (r, QC, C), fp32.
+    entries: (r, C, d) cluster-bucketed entry vectors — stored fp32, bf16
+    or int8 (pass the per-dim ``scale`` (d,) for int8; core/quant.py).
+    Returns squared distances (r, QC, C), fp32 — dequantization happens
+    in-kernel, per d-tile.
 
     C and d must be multiples of the tile sizes (ops.py pads)."""
     r, QC, d = q_grouped.shape
@@ -60,6 +66,8 @@ def fes_distances(q_grouped: jax.Array, entries: jax.Array, *,
     dt = min(d_tile, d)
     assert C % ct == 0 and d % dt == 0, (C, ct, d, dt)
     grid = (r, C // ct, d // dt)
+    s = (jnp.ones((d,), jnp.float32) if scale is None
+         else scale.astype(jnp.float32))
 
     return pl.pallas_call(
         _fes_tile_kernel,
@@ -67,8 +75,9 @@ def fes_distances(q_grouped: jax.Array, entries: jax.Array, *,
         in_specs=[
             pl.BlockSpec((1, QC, dt), lambda i, j, k: (i, 0, k)),
             pl.BlockSpec((1, ct, dt), lambda i, j, k: (i, j, k)),
+            pl.BlockSpec((1, dt), lambda i, j, k: (0, k)),
         ],
         out_specs=pl.BlockSpec((1, QC, ct), lambda i, j, k: (i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((r, QC, C), jnp.float32),
         interpret=interpret,
-    )(q_grouped, entries)
+    )(q_grouped, entries, s[None, :])

@@ -31,9 +31,12 @@ def _pad_to(x: jax.Array, axis: int, size: int, value=0):
 @functools.partial(jax.jit, static_argnames=("L", "qc", "interpret"))
 def fes_select(queries: jax.Array, centroids: jax.Array, entries: jax.Array,
                entry_ids: jax.Array, valid: jax.Array, *, L: int,
-               qc: Optional[int] = None, interpret: bool = True
+               qc: Optional[int] = None, interpret: bool = True,
+               entries_scale: Optional[jax.Array] = None
                ) -> Tuple[jax.Array, jax.Array]:
-    """queries (B, d); centroids (r, d); entries (r, C, d).
+    """queries (B, d); centroids (r, d); entries (r, C, d) — stored fp32,
+    bf16 or int8 with per-dim ``entries_scale`` (core/quant.py; the kernel
+    dequantizes in VMEM).
     Returns (ids (B, L), sq-dists (B, L)) — top-L entries of each query's
     routed cluster.  ``qc``: per-cluster query capacity (defaults to B —
     always-safe; production tune: ~4B/r)."""
@@ -62,12 +65,16 @@ def fes_select(queries: jax.Array, centroids: jax.Array, entries: jax.Array,
     qpad = jnp.concatenate([q, jnp.zeros((1, d), q.dtype)], axis=0)
     q_grouped = qpad[q_at_slot].reshape(r, qc, d)
 
-    # ---- dense tiled kernel ----
+    # ---- dense tiled kernel (entries stay in their stored encoding;
+    # dequantization happens in-kernel) ----
     dpad = -(-d // 128) * 128 if d > 128 else d
     cpad = -(-C // 128) * 128
     qg = _pad_to(q_grouped, 2, dpad)
-    ev = _pad_to(_pad_to(entries.astype(jnp.float32), 2, dpad), 1, cpad)
-    dist = fes_distances(qg, ev, interpret=interpret)       # (r, qc, cpad)
+    ev = _pad_to(_pad_to(entries, 2, dpad), 1, cpad)
+    scale = None
+    if entries_scale is not None:
+        scale = _pad_to(entries_scale.astype(jnp.float32), 0, dpad, value=1.0)
+    dist = fes_distances(qg, ev, scale=scale, interpret=interpret)
 
     # ---- mask padding, top-L, scatter back ----
     vmask = _pad_to(valid, 1, cpad, value=False)            # (r, cpad)

@@ -8,10 +8,14 @@ import jax.numpy as jnp
 BIG = jnp.float32(3.0e38)
 
 
-def fes_distances_ref(q_grouped: jax.Array, entries: jax.Array) -> jax.Array:
-    """(r, QC, d) x (r, C, d) -> (r, QC, C) squared euclidean, fp32."""
+def fes_distances_ref(q_grouped: jax.Array, entries: jax.Array,
+                      scale: jax.Array = None) -> jax.Array:
+    """(r, QC, d) x (r, C, d) -> (r, QC, C) squared euclidean, fp32.
+    ``scale`` (d,): per-dim dequantization for int8 entry tables."""
     q = q_grouped.astype(jnp.float32)
     e = entries.astype(jnp.float32)
+    if scale is not None:
+        e = e * scale.astype(jnp.float32)
     qn = jnp.sum(q * q, axis=-1)[..., :, None]
     en = jnp.sum(e * e, axis=-1)[..., None, :]
     dot = jnp.einsum("rqd,rcd->rqc", q, e)
@@ -20,10 +24,12 @@ def fes_distances_ref(q_grouped: jax.Array, entries: jax.Array) -> jax.Array:
 
 def traversal_hop_ref(q, nbr_table, vec_table, beam_id, beam_d, beam_ck,
                       visited, n: int, *, width: int = 1,
-                      visited_mode: str = "bloom"):
+                      visited_mode: str = "bloom", vec_scale=None):
     """Oracle for fused_traversal_hop: one full W-wide expansion round in
     pure jnp (top-W frontier select, gather, sequential-per-frontier visited
-    filter, distances, stable beam merge).
+    filter, distances, stable beam merge).  ``vec_scale`` (d,): per-dim
+    dequantization for int8 vector tables (bf16 needs none — the fp32 cast
+    below widens it exactly).
     Returns (new_id, new_d, new_ck, new_visited, fresh) with fresh (B, W·R)."""
     from repro.core import bloom as B
 
@@ -51,6 +57,8 @@ def traversal_hop_ref(q, nbr_table, vec_table, beam_id, beam_d, beam_ck,
     fresh = jnp.concatenate(fresh_w, axis=1)
 
     nv = vec_table[nbrs].astype(jnp.float32)              # (B, W·R, d)
+    if vec_scale is not None:
+        nv = nv * vec_scale.astype(jnp.float32)
     qf = q.astype(jnp.float32)
     qn = jnp.sum(qf * qf, axis=-1)[:, None]
     vn = jnp.sum(nv * nv, axis=-1)
@@ -70,7 +78,7 @@ def traversal_hop_ref(q, nbr_table, vec_table, beam_id, beam_d, beam_ck,
 
 def pilot_search_ref(q, nbr_table, vec_table, beam_id, beam_d, beam_ck,
                      visited, n: int, *, rounds: int, width: int = 1,
-                     visited_mode: str = "bloom"):
+                     visited_mode: str = "bloom", vec_scale=None):
     """Oracle for fused_pilot_search: run up to ``rounds`` W-wide expansion
     rounds (stopping at convergence) by iterating traversal_hop_ref.
     Returns (beam_id, beam_d, beam_ck, visited, n_dist, n_hops, n_exp) with
@@ -86,7 +94,7 @@ def pilot_search_ref(q, nbr_table, vec_table, beam_id, beam_d, beam_ck,
         n_sel = jnp.sum((unchecked & (cum <= width)).astype(jnp.int32), axis=1)
         beam_id, beam_d, beam_ck, visited, fresh = traversal_hop_ref(
             q, nbr_table, vec_table, beam_id, beam_d, beam_ck, visited, n,
-            width=width, visited_mode=visited_mode)
+            width=width, visited_mode=visited_mode, vec_scale=vec_scale)
         nd = nd + jnp.sum(fresh.astype(jnp.int32), axis=1)
         nh = nh + has_work.astype(jnp.int32)
         ne = ne + n_sel

@@ -39,6 +39,14 @@ TPU adaptation notes (DESIGN.md §3 spells out the full contract):
 Both host wrappers are jit-safe: they pad the query batch to the tile size,
 table rows to the sublane multiple (sentinel rows, id = n), and the visited
 lanes to 128, then slice everything back.
+
+Quantized pilot payloads (DESIGN.md §4): the vector table may be stored
+bfloat16 or int8 (``core/quant.py``).  Both kernels take a per-dimension
+fp32 scale operand and dequantize the table *in VMEM* once per invocation
+(``vec = vec.astype(f32) * scale``); the operand is all-ones for exact
+tables, which is bit-exact, so one kernel serves every encoding.  Neighbour
+tables may be int16 (compact pilot id space) — the one-hot gather converts
+ids to fp32 either way.
 """
 
 from __future__ import annotations
@@ -188,8 +196,8 @@ def _round_body(q, qn, nbr_f, vec, row_iota, bit_iota, bid, bd, bck, vis, *,
             n_sel, has_work)
 
 
-def _hop_kernel(q_ref, nbr_ref, vec_ref, bid_ref, bd_ref, bck_ref, vis_ref,
-                oid_ref, od_ref, ock_ref, ovis_ref, ofresh_ref, *,
+def _hop_kernel(q_ref, nbr_ref, vec_ref, scl_ref, bid_ref, bd_ref, bck_ref,
+                vis_ref, oid_ref, od_ref, ock_ref, ovis_ref, ofresh_ref, *,
                 n: int, R: int, W: int, ef: int, Wsort: int, hash_bits: int,
                 visited_mode: str):
     q = q_ref[...].astype(jnp.float32)                    # (bt, dp)
@@ -199,9 +207,13 @@ def _hop_kernel(q_ref, nbr_ref, vec_ref, bid_ref, bd_ref, bck_ref, vis_ref,
     qn = jnp.sum(q * q, axis=1)
     row_iota = jax.lax.broadcasted_iota(jnp.int32, (bt, Npad), 1)
     bit_iota = jax.lax.broadcasted_iota(jnp.int32, (bt, vpad), 1)
+    # in-VMEM dequantization (DESIGN.md §4): int8/bf16 tables widen to fp32
+    # once per kernel invocation; the scale row is all-ones for exact tables
+    # (multiplying by 1.0f is bit-exact, so the fp32 parity contract holds).
+    vec = vec_ref[...].astype(jnp.float32) * scl_ref[0, :]
     nid, nd, nck, vis, fresh, _, _ = _round_body(
         q, qn, nbr_ref[...].astype(jnp.float32),
-        vec_ref[...].astype(jnp.float32), row_iota, bit_iota,
+        vec, row_iota, bit_iota,
         bid_ref[...], bd_ref[...], bck_ref[...], vis_ref[...],
         n=n, R=R, W=W, ef=ef, Wsort=Wsort, hash_bits=hash_bits,
         visited_mode=visited_mode)
@@ -212,8 +224,9 @@ def _hop_kernel(q_ref, nbr_ref, vec_ref, bid_ref, bd_ref, bck_ref, vis_ref,
     ofresh_ref[...] = fresh
 
 
-def _persistent_kernel(q_ref, nbr_ref, vec_ref, bid_ref, bd_ref, bck_ref,
-                       vis_ref, oid_ref, od_ref, ock_ref, ovis_ref, ocnt_ref,
+def _persistent_kernel(q_ref, nbr_ref, vec_ref, scl_ref, bid_ref, bd_ref,
+                       bck_ref, vis_ref, oid_ref, od_ref, ock_ref, ovis_ref,
+                       ocnt_ref,
                        *, n: int, R: int, W: int, ef: int, Wsort: int,
                        hash_bits: int, visited_mode: str, rounds: int):
     """Whole stage-① search in one kernel: hop loop, state and convergence
@@ -228,7 +241,7 @@ def _persistent_kernel(q_ref, nbr_ref, vec_ref, bid_ref, bd_ref, bck_ref,
     row_iota = jax.lax.broadcasted_iota(jnp.int32, (bt, Npad), 1)
     bit_iota = jax.lax.broadcasted_iota(jnp.int32, (bt, vpad), 1)
     nbr_f = nbr_ref[...].astype(jnp.float32)              # hoisted operands
-    vec = vec_ref[...].astype(jnp.float32)
+    vec = vec_ref[...].astype(jnp.float32) * scl_ref[0, :]  # in-VMEM dequant
 
     def cond(carry):
         i, bid, _bd, bck, _vis, _nd, _nh, _ne = carry
@@ -300,19 +313,32 @@ def _pad_state(q, nbr_table, vec_table, beam_id, beam_d, beam_ck, visited,
     return q, nbr_t, vec_t, beam_id, bd, beam_ck, vis, Bpad, bt, vpad, vbits
 
 
+def _scale_operand(vec_scale, dp: int) -> jax.Array:
+    """(8, dp) fp32 dequant-scale block (sublane-tiled); all-ones when the
+    table is exact — multiplying by 1.0f is bit-exact, so passing the
+    operand unconditionally keeps the kernel signature static without
+    perturbing fp32/bf16 parity."""
+    s = (jnp.ones((dp,), jnp.float32) if vec_scale is None
+         else vec_scale.astype(jnp.float32))
+    return jnp.broadcast_to(s[None, :], (8, dp))
+
+
 def fused_traversal_hop(q: jax.Array, nbr_table: jax.Array,
                         vec_table: jax.Array, beam_id: jax.Array,
                         beam_d: jax.Array, beam_ck: jax.Array,
                         visited: jax.Array, n: int, *, width: int = 1,
                         visited_mode: str = "bloom", b_tile: int = 128,
-                        interpret: bool = False
+                        interpret: bool = False,
+                        vec_scale: jax.Array = None
                         ) -> Tuple[jax.Array, jax.Array, jax.Array,
                                    jax.Array, jax.Array]:
     """One fused W-wide expansion round.
 
-    q (B, dp); nbr_table (n+1, R) int32 with sentinel row n; vec_table
-    (n+1, dp) with zero row at n; beam_* (B, ef) sorted beam (+inf sentinel
-    distances); visited (B, n_bits) bloom filter or (B, n+1) exact bitmap.
+    q (B, dp); nbr_table (n+1, R) integer table with sentinel row n;
+    vec_table (n+1, dp) with zero row at n — stored fp32, bf16 or int8
+    (pass ``vec_scale`` (dp,) for int8; DESIGN.md §4); beam_* (B, ef) sorted
+    beam (+inf sentinel distances); visited (B, n_bits) bloom filter or
+    (B, n+1) exact bitmap.
 
     Returns ``(new_id, new_d, new_ck, new_visited, fresh)`` with the same
     semantics as ``core.traversal.expansion_round`` minus the counters —
@@ -329,6 +355,7 @@ def fused_traversal_hop(q: jax.Array, nbr_table: jax.Array,
      vbits) = _pad_state(q, nbr_table, vec_table, beam_id, beam_d, beam_ck,
                          visited, n, b_tile)
     Npad = nbr_t.shape[0]
+    scl = _scale_operand(vec_scale, dp)
 
     kern = functools.partial(
         _hop_kernel, n=n, R=R, W=width, ef=ef,
@@ -348,6 +375,7 @@ def fused_traversal_hop(q: jax.Array, nbr_table: jax.Array,
             pl.BlockSpec((bt, dp), lambda i: (i, 0)),
             pl.BlockSpec((Npad, R), lambda i: (0, 0)),
             pl.BlockSpec((Npad, dp), lambda i: (0, 0)),
+            pl.BlockSpec((8, dp), lambda i: (0, 0)),
             pl.BlockSpec((bt, ef), lambda i: (i, 0)),
             pl.BlockSpec((bt, ef), lambda i: (i, 0)),
             pl.BlockSpec((bt, ef), lambda i: (i, 0)),
@@ -362,7 +390,7 @@ def fused_traversal_hop(q: jax.Array, nbr_table: jax.Array,
         ),
         out_shape=out_shapes,
         interpret=interpret,
-    )(q, nbr_t, vec_t, beam_id, bd, beam_ck, vis)
+    )(q, nbr_t, vec_t, scl, beam_id, bd, beam_ck, vis)
 
     od = jnp.where(od >= BIG, jnp.inf, od)
     return (oid[:Bq], od[:Bq], ock[:Bq], ovis[:Bq, :vbits], ofresh[:Bq])
@@ -373,17 +401,18 @@ def fused_pilot_search(q: jax.Array, nbr_table: jax.Array,
                        beam_d: jax.Array, beam_ck: jax.Array,
                        visited: jax.Array, n: int, *, rounds: int,
                        width: int = 1, visited_mode: str = "bloom",
-                       b_tile: int = 128, interpret: bool = False
+                       b_tile: int = 128, interpret: bool = False,
+                       vec_scale: jax.Array = None
                        ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
                                   jax.Array, jax.Array, jax.Array]:
     """Persistent stage-① search: run up to ``rounds`` W-wide expansion
     rounds — with in-kernel convergence exit — inside one ``pallas_call``.
 
     Inputs as ``fused_traversal_hop`` (the initial beam/visited state comes
-    from ``core.traversal.init_state``).  Returns
-    ``(beam_id, beam_d, beam_ck, visited, n_dist, n_hops, n_exp)`` where the
-    three counters are (B,) int32 *deltas* accumulated over the executed
-    rounds (the caller adds them to the init-state counters).
+    from ``core.traversal.init_state``; quantized tables pass ``vec_scale``).
+    Returns ``(beam_id, beam_d, beam_ck, visited, n_dist, n_hops, n_exp)``
+    where the three counters are (B,) int32 *deltas* accumulated over the
+    executed rounds (the caller adds them to the init-state counters).
     """
     Bq, dp = q.shape
     N1, R = nbr_table.shape
@@ -396,6 +425,7 @@ def fused_pilot_search(q: jax.Array, nbr_table: jax.Array,
      vbits) = _pad_state(q, nbr_table, vec_table, beam_id, beam_d, beam_ck,
                          visited, n, b_tile)
     Npad = nbr_t.shape[0]
+    scl = _scale_operand(vec_scale, dp)
 
     kern = functools.partial(
         _persistent_kernel, n=n, R=R, W=width, ef=ef,
@@ -415,6 +445,7 @@ def fused_pilot_search(q: jax.Array, nbr_table: jax.Array,
             pl.BlockSpec((bt, dp), lambda i: (i, 0)),
             pl.BlockSpec((Npad, R), lambda i: (0, 0)),
             pl.BlockSpec((Npad, dp), lambda i: (0, 0)),
+            pl.BlockSpec((8, dp), lambda i: (0, 0)),
             pl.BlockSpec((bt, ef), lambda i: (i, 0)),
             pl.BlockSpec((bt, ef), lambda i: (i, 0)),
             pl.BlockSpec((bt, ef), lambda i: (i, 0)),
@@ -429,7 +460,7 @@ def fused_pilot_search(q: jax.Array, nbr_table: jax.Array,
         ),
         out_shape=out_shapes,
         interpret=interpret,
-    )(q, nbr_t, vec_t, beam_id, bd, beam_ck, vis)
+    )(q, nbr_t, vec_t, scl, beam_id, bd, beam_ck, vis)
 
     od = jnp.where(od >= BIG, jnp.inf, od)
     return (oid[:Bq], od[:Bq], ock[:Bq], ovis[:Bq, :vbits],

@@ -79,8 +79,10 @@ queries = np.asarray(idx.rotate_queries(ds.queries))
 
 arrays = dict(
     pilot_neighbors=pilot_nb, pilot_vecs=pilot_vecs,
+    pilot_scale=np.ones(dp, np.float32),
     pilot_to_full=pilot_to_full,
     fes_centroids=fes.centroids, fes_entries=fes.entries[..., :dp] if fes.entries.shape[-1] != dp else fes.entries,
+    fes_scale=np.ones(dp, np.float32),
     fes_entry_ids=ent_ids, fes_valid=fes.valid,
     full_neighbors=full_nb, full_vecs=full_vecs, queries=queries)
 

@@ -1,0 +1,418 @@
+"""Quantized pilot payloads + residency planning (DESIGN.md §4).
+
+Covers: int8/bf16 round-trip bounds, the dequantized distance oracle, the
+in-kernel dequant paths (per-hop AND persistent traversal kernels, FES
+kernel) against the pure-jnp oracles, the stage-② exact-rescore contract
+(fp32 vs int8 pilots reach identical final ids at equal ef on a 4k index),
+dtype-aware memory accounting (schema + the >=3.5x int8 reduction), the
+ResidencyPlanner ladder, and the shared ragged-batch padding helper used by
+both the engine and the pipeline.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (IndexConfig, PilotANNIndex, ResidencyPlan,
+                        ResidencyPlanner, SearchParams, brute_force_topk,
+                        recall_at_k)
+from repro.core import bloom as B
+from repro.core import quant
+from repro.core.traversal import TraversalSpec, greedy_search
+from repro.kernels.ref import (fes_distances_ref, pilot_search_ref,
+                               traversal_hop_ref)
+from repro.kernels.fes_kernel import fes_distances
+from repro.kernels.traversal_kernel import (fused_pilot_search,
+                                            fused_traversal_hop)
+
+
+# ---------------------------------------------------------------------------
+# Encoding round-trips
+# ---------------------------------------------------------------------------
+
+def test_int8_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    x = (rng.normal(size=(512, 24)) * rng.uniform(0.1, 5.0, 24)).astype(np.float32)
+    data, scale = quant.quantize(x, "int8")
+    assert data.dtype == np.int8 and scale.shape == (24,)
+    err = np.abs(quant.dequantize(data, scale) - x)
+    bound = quant.roundtrip_error_bound(x, "int8")
+    assert (err <= bound[None, :]).all(), (err.max(0), bound)
+
+
+def test_bf16_roundtrip_error_bound():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(256, 16)).astype(np.float32)
+    data, scale = quant.quantize(x, "bfloat16")
+    assert scale is None and data.dtype == jnp.bfloat16
+    err = np.abs(np.asarray(quant.dequantize(data)) - x)
+    bound = quant.roundtrip_error_bound(x, "bfloat16")
+    assert (err <= bound[None, :] + 1e-7).all()
+
+
+def test_quantize_preserves_zero_rows():
+    """Sentinel/padding rows must stay exactly zero (beam-merge contract)."""
+    x = np.zeros((4, 8), np.float32)
+    x[:2] = np.random.default_rng(2).normal(size=(2, 8))
+    for dt in quant.PILOT_DTYPES:
+        data, scale = quant.quantize(x, dt)
+        deq = np.asarray(quant.dequantize(data, scale))
+        np.testing.assert_array_equal(deq[2:], 0.0)
+
+
+def test_dequant_sq_dists_close_to_exact():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(200, 32)).astype(np.float32)
+    q = rng.normal(size=(8, 32)).astype(np.float32)
+    d_exact = np.asarray(quant.dequant_sq_dists(jnp.asarray(q), jnp.asarray(x)))
+    data, scale = quant.quantize(x, "int8")
+    d_q = np.asarray(quant.dequant_sq_dists(
+        jnp.asarray(q), jnp.asarray(data), jnp.asarray(scale)))
+    # relative distance error stays small (int8 with per-dim scale)
+    rel = np.abs(d_q - d_exact) / np.maximum(d_exact, 1.0)
+    assert rel.max() < 0.05, rel.max()
+
+
+# ---------------------------------------------------------------------------
+# In-kernel dequant parity (per-hop, persistent, FES)
+# ---------------------------------------------------------------------------
+
+def _random_quant_index(n, R, d, seed, dtype):
+    rng = np.random.default_rng(seed)
+    nbr = np.stack([rng.choice(n, R, replace=False) for _ in range(n)])
+    nbr_t = np.concatenate([nbr, np.full((1, R), n)]).astype(np.int32)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    vec = np.concatenate([x, np.zeros((1, d), np.float32)])
+    data, scale = quant.quantize(vec, dtype)
+    return (jnp.asarray(nbr_t), jnp.asarray(data),
+            None if scale is None else jnp.asarray(scale))
+
+
+def _random_beam(rng, Bq, ef, n, n_sentinel=3):
+    bid = rng.integers(0, n, (Bq, ef)).astype(np.int32)
+    bd = np.sort(rng.random((Bq, ef)).astype(np.float32) * 40, axis=1)
+    bck = rng.random((Bq, ef)) > 0.6
+    bid[:, ef - n_sentinel:] = n
+    bd[:, ef - n_sentinel:] = np.inf
+    bck[:, ef - n_sentinel:] = True
+    return bid, bd, bck
+
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "int8"])
+@pytest.mark.parametrize("W", [1, 2])
+def test_fused_hop_dequant_matches_oracle(dtype, W):
+    rng = np.random.default_rng(7 + W)
+    n, R, d, Bq, ef = 600, 8, 16, 12, 16
+    nbr_t, vec_q, scale = _random_quant_index(n, R, d, 5, dtype)
+    q = jnp.asarray(rng.normal(size=(Bq, d)).astype(np.float32))
+    bid, bd, bck = _random_beam(rng, Bq, ef, n)
+    vis = B.exact_insert(B.exact_init(Bq, n),
+                         jnp.asarray(np.where(bid < n, bid, 0)),
+                         jnp.asarray(bid < n))
+    args = [jnp.asarray(a) for a in (q, nbr_t, vec_q, bid, bd, bck)]
+    got = fused_traversal_hop(*args, vis, n, width=W, visited_mode="exact",
+                              interpret=True, vec_scale=scale)
+    want = traversal_hop_ref(*args, vis, n, width=W, visited_mode="exact",
+                             vec_scale=scale)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                               rtol=1e-5, atol=1e-5)
+    for i in (2, 3, 4):
+        np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(want[i]))
+
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "int8"])
+def test_persistent_dequant_matches_oracle(dtype):
+    rng = np.random.default_rng(11)
+    n, R, d, Bq, ef = 500, 8, 16, 8, 16
+    nbr_t, vec_q, scale = _random_quant_index(n, R, d, 9, dtype)
+    q = jnp.asarray(rng.normal(size=(Bq, d)).astype(np.float32))
+    bid, bd, bck = _random_beam(rng, Bq, ef, n)
+    vis = B.exact_insert(B.exact_init(Bq, n),
+                         jnp.asarray(np.where(bid < n, bid, 0)),
+                         jnp.asarray(bid < n))
+    args = [jnp.asarray(a) for a in (q, nbr_t, vec_q, bid, bd, bck)]
+    got = fused_pilot_search(*args, vis, n, rounds=64, visited_mode="exact",
+                             interpret=True, vec_scale=scale)
+    want = pilot_search_ref(*args, vis, n, rounds=64, visited_mode="exact",
+                            vec_scale=scale)
+    for i, (g, w) in enumerate(zip(got, want)):
+        if i == 1:
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=1e-5, atol=1e-5)
+        else:
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "int8"])
+def test_quantized_greedy_search_paths_agree(dtype):
+    """unfused == per-hop kernel == persistent kernel on a quantized table
+    (ids and counters exact; distances within float noise)."""
+    rng = np.random.default_rng(13)
+    n, R, d, Bq, ef = 700, 8, 16, 8, 16
+    nbr_t, vec_q, scale = _random_quant_index(n, R, d, 13, dtype)
+    q = jnp.asarray(rng.normal(size=(Bq, d)).astype(np.float32))
+    entries = jnp.asarray(rng.integers(0, n, (Bq, 3)).astype(np.int32))
+    outs = []
+    for extra in (dict(), dict(use_pallas=True),
+                  dict(use_pallas=True, use_persistent=True)):
+        st = greedy_search(TraversalSpec(ef=ef, visited_mode="exact", **extra),
+                           q, nbr_t, vec_q, n, entries, vec_scale=scale)
+        outs.append(st)
+    for st in outs[1:]:
+        np.testing.assert_array_equal(np.asarray(outs[0].cand_id),
+                                      np.asarray(st.cand_id))
+        np.testing.assert_allclose(np.asarray(outs[0].cand_d),
+                                   np.asarray(st.cand_d), rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(outs[0].n_dist),
+                                      np.asarray(st.n_dist))
+
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "int8"])
+def test_fes_kernel_dequant_matches_oracle(dtype):
+    rng = np.random.default_rng(17)
+    r, QC, C, d = 4, 8, 128, 128
+    q = rng.normal(size=(r, QC, d)).astype(np.float32)
+    ev = rng.normal(size=(r, C, d)).astype(np.float32)
+    data, scale = quant.quantize(ev, dtype)
+    sj = None if scale is None else jnp.asarray(scale)
+    got = fes_distances(jnp.asarray(q), jnp.asarray(data), scale=sj,
+                        interpret=True)
+    want = fes_distances_ref(jnp.asarray(q), jnp.asarray(data), scale=sj)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Engine: stage-② exact rescore, recall, memory accounting (acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def quant_dataset():
+    from repro.data import synthetic_vectors
+    return synthetic_vectors(4096, 64, n_queries=64, seed=3)
+
+
+@pytest.fixture(scope="module")
+def quant_index(quant_dataset):
+    return PilotANNIndex(
+        IndexConfig(R=8, sample_ratio=0.5, svd_ratio=0.75, n_entry=2048,
+                    build_method="exact"), quant_dataset.vectors)
+
+
+def test_int8_pilot_identical_final_ids_and_recall(quant_index, quant_dataset):
+    """Acceptance: at equal ef the int8 pilot reaches recall within 0.01 of
+    the fp32 pilot on the 4k synthetic index — and because stage ② re-scores
+    exactly from rot_vecs and stage ③ runs to convergence, the *final ids*
+    are identical."""
+    gt = brute_force_topk(quant_dataset.vectors, quant_dataset.queries, 10)
+    params = SearchParams(k=10, ef=96, ef_pilot=96)
+    quant_index.set_pilot_dtype("float32")
+    ids_f, d_f, _ = quant_index.search(quant_dataset.queries, params)
+    quant_index.set_pilot_dtype("int8")
+    ids_q, d_q, _ = quant_index.search(quant_dataset.queries, params)
+    quant_index.set_pilot_dtype("float32")
+    r_f = recall_at_k(ids_f, gt, 10)
+    r_q = recall_at_k(ids_q, gt, 10)
+    assert r_f >= 0.9, r_f
+    assert abs(r_f - r_q) <= 0.01, (r_f, r_q)
+    np.testing.assert_array_equal(ids_f, ids_q)
+    # distances agree to float-assembly noise: the fp32 pilot reaches d via
+    # the SVD identity (primary + residual partial sums), the int8 pilot via
+    # a direct full-vector re-score — same value, different rounding
+    np.testing.assert_allclose(d_f, d_q, rtol=1e-2, atol=1e-3)
+
+
+def test_int8_pilot_bytes_reduction(quant_index):
+    """Acceptance: int8 shrinks memory_report()["pilot_bytes"] >= 3.5x."""
+    quant_index.set_pilot_dtype("float32")
+    fp32 = quant_index.memory_report()
+    quant_index.set_pilot_dtype("int8")
+    i8 = quant_index.memory_report()
+    quant_index.set_pilot_dtype("float32")
+    assert fp32["pilot_bytes"] / i8["pilot_bytes"] >= 3.5, (fp32, i8)
+
+
+def test_memory_report_schema(quant_index):
+    rep = quant_index.memory_report()
+    for key, typ in (("pilot_bytes", int), ("full_bytes", int),
+                     ("ratio", float), ("pilot_dtype", str),
+                     ("pilot_id_dtype", str), ("pilot_graph_bytes", int),
+                     ("pilot_vec_bytes", int), ("pilot_fes_bytes", int),
+                     ("pilot_nodes", int), ("d_primary", int)):
+        assert key in rep and isinstance(rep[key], typ), (key, rep)
+    assert rep["pilot_bytes"] == (rep["pilot_graph_bytes"] +
+                                  rep["pilot_vec_bytes"] +
+                                  rep["pilot_fes_bytes"])
+    assert rep["pilot_id_dtype"] == "int16"      # 2049-wide id space
+
+
+def test_bf16_pilot_recall(quant_index, quant_dataset):
+    gt = brute_force_topk(quant_dataset.vectors, quant_dataset.queries, 10)
+    params = SearchParams(k=10, ef=96, ef_pilot=96)
+    quant_index.set_pilot_dtype("bfloat16")
+    ids, _, _ = quant_index.search(quant_dataset.queries, params)
+    quant_index.set_pilot_dtype("float32")
+    assert recall_at_k(ids, gt, 10) >= 0.9
+
+
+def test_quantized_pilot_kernel_paths(quant_index, quant_dataset):
+    """int8 pilot + fused/persistent kernels through the full engine path
+    (ragged batch): identical results to the unfused int8 path."""
+    quant_index.set_pilot_dtype("int8")
+    queries = quant_dataset.queries[:27]          # ragged
+    base = SearchParams(k=10, ef=48, ef_pilot=48)
+    ids0, _, st0 = quant_index.search(queries, base)
+    for extra in (dict(use_pallas_traversal=True),
+                  dict(use_persistent_traversal=True)):
+        p = dataclasses.replace(base, **extra)
+        ids1, _, st1 = quant_index.search(queries, p)
+        np.testing.assert_array_equal(ids0, ids1)
+        np.testing.assert_array_equal(st0["pilot_dist"], st1["pilot_dist"])
+    quant_index.set_pilot_dtype("float32")
+
+
+def test_set_pilot_dtype_roundtrip(quant_index):
+    quant_index.set_pilot_dtype("float32")
+    before = np.asarray(quant_index.arrays["primary"])
+    quant_index.set_pilot_dtype("int8")
+    assert quant_index.arrays["primary"].dtype == jnp.int8
+    assert "primary_scale" in quant_index.arrays
+    quant_index.set_pilot_dtype("float32")
+    assert "primary_scale" not in quant_index.arrays
+    np.testing.assert_array_equal(before,
+                                  np.asarray(quant_index.arrays["primary"]))
+
+
+# ---------------------------------------------------------------------------
+# ResidencyPlanner
+# ---------------------------------------------------------------------------
+
+def test_planner_estimate_matches_memory_report(quant_index):
+    cfg = quant_index.cfg
+    pl = ResidencyPlanner(quant_index.n, quant_index.d, R=cfg.R,
+                          n_entry=cfg.n_entry, fes_clusters=cfg.fes_clusters)
+    for dt in quant.PILOT_DTYPES:
+        quant_index.set_pilot_dtype(dt)
+        rep = quant_index.memory_report()
+        est = pl.estimate(cfg.sample_ratio, cfg.svd_ratio, dt)
+        # graph + vector terms are exact; FES only approximates the kmeans
+        # bucket padding
+        assert est["graph"] == rep["pilot_graph_bytes"], (est, rep)
+        assert est["vec"] == rep["pilot_vec_bytes"], (est, rep)
+        assert est["total"] <= 2.5 * rep["pilot_bytes"]
+        assert rep["pilot_bytes"] <= 2.5 * est["total"]
+    quant_index.set_pilot_dtype("float32")
+
+
+def test_planner_preference_ladder():
+    pl = ResidencyPlanner(1_000_000, 128, R=32, n_entry=8192)
+    # roomy budget: full-fidelity plan
+    big = pl.plan(10 ** 10)
+    assert big.fits and big.pilot_dtype == "float32"
+    assert big.sample_ratio == pl.SAMPLE_GRID[0]
+    assert big.svd_ratio == pl.SVD_GRID[0]
+    # medium budget: dtype is sacrificed before coverage
+    est_fp32 = pl.estimate(0.5, 0.75, "float32")["total"]
+    mid = pl.plan(int(est_fp32 * 0.4))
+    assert mid.fits
+    assert mid.pilot_dtype != "float32"
+    assert (mid.sample_ratio, mid.svd_ratio) >= (0.25, 0.25)
+    # hopeless budget: smallest plan, flagged
+    tiny = pl.plan(16)
+    assert not tiny.fits
+    # plans become configs, budget carried along
+    cfg = mid.to_config()
+    assert cfg.pilot_dtype == mid.pilot_dtype
+    assert cfg.sample_ratio == mid.sample_ratio
+    assert cfg.pilot_budget_bytes == mid.budget_bytes
+
+
+def test_budget_enforced_at_build(quant_dataset):
+    with pytest.raises(ValueError, match="ResidencyPlanner"):
+        PilotANNIndex(
+            IndexConfig(R=8, sample_ratio=0.5, svd_ratio=0.75, n_entry=512,
+                        build_method="exact", pilot_budget_bytes=1024),
+            quant_dataset.vectors)
+
+
+def test_budget_enforced_on_set_pilot_dtype(quant_dataset):
+    """Mutating the encoding must not silently break the budget invariant:
+    widening past the budget raises and leaves the previous encoding."""
+    pl = ResidencyPlanner(4096, 64, R=8, n_entry=512)
+    budget = pl.estimate(0.25, 0.5, "int8")["total"] + 4096
+    cfg = dataclasses.replace(
+        ResidencyPlan(0.25, 0.5, "int8", 0, budget, 8, 512, 32).to_config(),
+        build_method="exact")
+    idx = PilotANNIndex(cfg, quant_dataset.vectors)
+    with pytest.raises(ValueError, match="pilot_budget_bytes"):
+        idx.set_pilot_dtype("float32")
+    assert idx.cfg.pilot_dtype == "int8"
+    assert idx.arrays["primary"].dtype == jnp.int8
+    assert idx.memory_report()["pilot_bytes"] <= budget
+
+
+def test_to_config_carries_planner_geometry():
+    """to_config(base=...) must keep the plan's byte-relevant geometry —
+    a base with a different R cannot silently void the fits guarantee."""
+    pl = ResidencyPlanner(100_000, 96, R=16, n_entry=2048, fes_clusters=16)
+    plan = pl.plan(10 ** 9)
+    cfg = plan.to_config(base=IndexConfig(R=64, n_entry=9999, seed=5))
+    assert cfg.R == 16 and cfg.n_entry == 2048 and cfg.fes_clusters == 16
+    assert cfg.seed == 5                      # non-geometry base field kept
+
+
+def test_planner_fits_holds_on_skewed_data():
+    """A plan with fits=True must BUILD under budget even when kmeans
+    buckets are skewed: build_fes caps the padded capacity with the same
+    formula the planner's FES estimate uses (fes.fes_capacity_cap)."""
+    rng = np.random.default_rng(5)
+    n, d = 4000, 32
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    x[: int(n * 0.9)] *= 0.01           # 90% of points in one tight blob
+    pl = ResidencyPlanner(n, d, R=8, n_entry=1024)
+    plan = pl.plan(200_000)
+    assert plan.fits
+    idx = PilotANNIndex(plan.to_config(build_method="exact"), x)
+    assert idx.memory_report()["pilot_bytes"] <= plan.budget_bytes
+
+
+def test_planner_monotone_in_dtype():
+    pl = ResidencyPlanner(100_000, 96)
+    szs = [pl.estimate(0.25, 0.5, dt)["total"] for dt in quant.PILOT_DTYPES]
+    assert szs[0] > szs[1] > szs[2], szs
+
+
+# ---------------------------------------------------------------------------
+# Pipeline: shared ragged-batch padding (satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("flags", [dict(use_pallas_traversal=True),
+                                   dict(use_persistent_traversal=True)])
+def test_pipeline_ragged_batch_matches_engine(built_index, small_dataset,
+                                              flags):
+    """split_stages now pads ragged batches with the same helper as the
+    engine (multistage.pad_for_pallas); a non-aligned batch through the
+    Pallas paths must match PilotANNIndex.search exactly."""
+    from repro.core.pipeline import pipelined_search
+    queries = small_dataset.queries[:21]          # 21 % 8 != 0
+    params = SearchParams(k=10, ef=48, ef_pilot=48, **flags)
+    rot = built_index.rotate_queries(queries)
+    results, _ = pipelined_search(built_index.arrays, params, [rot])
+    ids_p, d_p = results[0]
+    ids_e, d_e, _ = built_index.search(queries, params)
+    assert ids_p.shape == (21, 10)
+    np.testing.assert_array_equal(ids_p, ids_e)
+    np.testing.assert_allclose(d_p, d_e, rtol=1e-5, atol=1e-5)
+
+
+def test_pad_for_pallas_helper():
+    from repro.core.multistage import pad_for_pallas
+    q = jnp.zeros((10, 4))
+    out, B = pad_for_pallas(q, SearchParams(use_pallas_traversal=True))
+    assert B == 10 and out.shape == (16, 4)
+    out, B = pad_for_pallas(q, SearchParams())       # non-pallas: no-op
+    assert B == 10 and out.shape == (10, 4)
