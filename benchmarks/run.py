@@ -21,7 +21,7 @@ import time
 
 ALL = ["density", "stage_breakdown", "accel_threshold", "recall_qps",
        "ablation", "memory_scaling", "fes_benefit", "graph_sensitivity",
-       "pilot_kernel", "frontier_sweep"]
+       "pilot_kernel", "frontier_sweep", "serving_qps"]
 
 
 class _Tee(io.TextIOBase):
@@ -61,6 +61,33 @@ def _parse_records(lines):
     return records
 
 
+def _load_prior(path):
+    """name -> numeric value from an existing BENCH_<name>.json (the
+    previous PR's record, kept in the repo root), or {} when absent."""
+    if not os.path.exists(path):
+        return {}
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return {}
+    return {r["name"]: r["value"] for r in data.get("records", [])
+            if isinstance(r.get("value"), (int, float))}
+
+
+def _print_deltas(prior, records):
+    """Per-record regression-visibility lines against the prior BENCH json
+    (# delta <name>: old -> new (±pct%)); new/non-numeric rows are skipped."""
+    for rec in records:
+        old = prior.get(rec["name"])
+        new = rec["value"]
+        if old is None or not isinstance(new, (int, float)):
+            continue
+        pct = 100.0 * (new - old) / old if old else float("inf")
+        print(f"# delta {rec['name']}: {old:.6g} -> {new:.6g} ({pct:+.1f}%)",
+              flush=True)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None, choices=ALL)
@@ -93,11 +120,13 @@ def main(argv=None) -> int:
                 sys.stdout = tee.base
                 tee.lines.append(tee._buf)
                 path = os.path.join(args.json, f"BENCH_{name}.json")
+                prior = _load_prior(path)      # read before overwriting
+                records = _parse_records(tee.lines)
                 with open(path, "w") as f:
                     json.dump({"benchmark": name,
-                               "records": _parse_records(tee.lines)}, f,
-                              indent=1)
+                               "records": records}, f, indent=1)
                 print(f"# wrote {path}", flush=True)
+                _print_deltas(prior, records)
         print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
     return 1 if failures else 0
 

@@ -11,9 +11,10 @@ Three classes of rot this catches:
    §Name`` strings in src/, tests/, benchmarks/, scripts/ and examples/
    must resolve to a ``## §...`` heading in DESIGN.md (these have broken
    silently before).
-3. **API doc coverage** — every field of ``SearchParams`` and
-   ``IndexConfig`` must be documented (appear in backticks) in docs/api.md,
-   and every key of ``memory_report()`` must appear there too.
+3. **API doc coverage** — every field of ``SearchParams``, ``IndexConfig``
+   and the serving runtime's ``ServeParams`` must be documented (appear in
+   backticks) in docs/api.md, and every key of ``memory_report()`` must
+   appear there too.
 
 Exit code 0 = clean; 1 = problems (each printed as ``check_docs: ...``).
 """
@@ -116,9 +117,10 @@ def check_design_refs(problems: list) -> None:
 def check_api_coverage(problems: list) -> None:
     sys.path.insert(0, os.path.join(ROOT, "src"))
     from repro.core import IndexConfig, SearchParams   # noqa: E402
+    from repro.serving import ServeParams              # noqa: E402
     api = read(os.path.join("docs", "api.md"))
     documented = set(re.findall(r"`([A-Za-z_][A-Za-z0-9_]*)`", api))
-    for cls in (SearchParams, IndexConfig):
+    for cls in (SearchParams, IndexConfig, ServeParams):
         for f in dataclasses.fields(cls):
             if f.name not in documented:
                 problems.append(

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Pre-PR smoke check (see README.md); also what CI runs
-# (.github/workflows/ci.yml). Runs all six sections even if an earlier one
+# (.github/workflows/ci.yml). Runs all seven sections even if an earlier one
 # fails, then summarizes:
 #   1. tier-1 verify (ROADMAP.md), minus the tests known-red on this
 #      container's jax version (flash-attention pallas internals, qwen2-vl,
@@ -13,6 +13,9 @@
 #   5. docs consistency: markdown link/anchor check, in-code DESIGN.md §
 #      references, docs/api.md field coverage (scripts/check_docs.py)
 #   6. memory_scaling benchmark smoke (pilot_dtype sweep + BENCH json)
+#   7. serving_qps smoke (DESIGN.md §5): tiny index, depth-2 pipelining,
+#      200 Poisson requests — naive-per-shape-jit vs bucketed serving,
+#      BENCH_serving_qps.json for the QPS trajectory
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -27,33 +30,38 @@ KNOWN_RED=(
 
 declare -A status
 
-echo "== [1/6] tier-1 verify (minus known-red, minus slow) =="
+echo "== [1/7] tier-1 verify (minus known-red, minus slow) =="
 python -m pytest -x -q -m "not slow" "${KNOWN_RED[@]}"
 status[tier1]=$?
 
-echo "== [2/6] fused traversal kernel parity (interpret mode) =="
+echo "== [2/7] fused traversal kernel parity (interpret mode) =="
 python -m pytest -q "tests/test_traversal_kernel.py::test_pallas_greedy_search_parity_4k[bloom]"
 status[kernel_parity]=$?
 
-echo "== [3/6] quickstart =="
+echo "== [3/7] quickstart =="
 python examples/quickstart.py
 status[quickstart]=$?
 
-echo "== [4/6] benchmark smoke (frontier_sweep, interpret mode) =="
+echo "== [4/7] benchmark smoke (frontier_sweep, interpret mode) =="
 python -m benchmarks.run --only frontier_sweep --json .
 status[bench_smoke]=$?
 
-echo "== [5/6] docs consistency (links, DESIGN.md § refs, api coverage) =="
+echo "== [5/7] docs consistency (links, DESIGN.md § refs, api coverage) =="
 python scripts/check_docs.py
 status[docs_check]=$?
 
-echo "== [6/6] memory_scaling benchmark smoke (pilot_dtype sweep) =="
+echo "== [6/7] memory_scaling benchmark smoke (pilot_dtype sweep) =="
 python -m benchmarks.run --only memory_scaling --json .
 status[memory_smoke]=$?
 
+echo "== [7/7] serving_qps smoke (bucketed vs naive, D=2, 200 requests) =="
+SERVING_QPS_N=4000 SERVING_QPS_REQUESTS=200 SERVING_QPS_DEPTH=2 \
+    python -m benchmarks.run --only serving_qps --json .
+status[serving_smoke]=$?
+
 echo
 rc=0
-for k in tier1 kernel_parity quickstart bench_smoke docs_check memory_smoke; do
+for k in tier1 kernel_parity quickstart bench_smoke docs_check memory_smoke serving_smoke; do
     if [ "${status[$k]}" -eq 0 ]; then
         echo "smoke: $k OK"
     else

@@ -26,7 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import csr, fes, graph_build, multistage, quant, svd
-from repro.core.multistage import SearchParams, StatsDict
+from repro.core.multistage import (BATCH_BUCKETS, SearchParams, StatsDict,
+                                   pad_to_bucket)
 
 
 @dataclass
@@ -159,6 +160,11 @@ class PilotANNIndex:
                 np.array([graph_build.medoid(rot[coarse_ids])], np.int32)),
         }
         self.arrays.update(self._quantized_pilot_arrays(cfg.pilot_dtype))
+        # jit cache keyed on (bucket, params, baseline): client batches are
+        # padded to a small fixed ladder of sizes (multistage.pad_to_bucket),
+        # so ragged traffic compiles at most len(buckets) executables per
+        # params key instead of one per distinct batch size (DESIGN.md §5)
+        self.batch_buckets: Tuple[int, ...] = BATCH_BUCKETS
         self._search_fns: Dict = {}
 
         if cfg.pilot_budget_bytes is not None:
@@ -230,32 +236,61 @@ class PilotANNIndex:
     def rotate_queries(self, queries: np.ndarray) -> jax.Array:
         return jnp.asarray(self.reducer.rotate(queries))
 
-    def _get_fn(self, params: SearchParams, baseline: bool):
-        key = (dataclasses.astuple(params), baseline)
+    def _get_fn(self, params: SearchParams, baseline: bool, bucket: int):
+        key = (bucket, dataclasses.astuple(params), baseline)
         if key not in self._search_fns:
             fn = multistage.baseline_search if baseline else multistage.multistage_search
             self._search_fns[key] = jax.jit(partial(fn, params=params))
         return self._search_fns[key]
 
+    def compile_count(self, params: Optional[SearchParams] = None,
+                      baseline: Optional[bool] = None) -> int:
+        """Number of cached search executables, optionally filtered by
+        params / baseline-ness — the bounded-retracing observable the
+        bucket ladder exists to cap (DESIGN.md §5)."""
+        pk = None if params is None else dataclasses.astuple(params)
+        return sum(1 for (_, p, b) in self._search_fns
+                   if (pk is None or p == pk)
+                   and (baseline is None or b == baseline))
+
+    def warmup(self, params: SearchParams, *, baseline: bool = False,
+               buckets: Optional[Tuple[int, ...]] = None) -> int:
+        """Precompile one executable per bucket (outside any latency-
+        sensitive serving window); returns the number of buckets warmed."""
+        buckets = buckets or self.batch_buckets
+        for b in buckets:
+            q = jnp.zeros((b, self.d), jnp.float32)
+            fn = self._get_fn(params, baseline, b)
+            jax.block_until_ready(fn(self.arrays, queries=q))
+        return len(buckets)
+
+    def _run_bucketed(self, q: jax.Array, params: SearchParams,
+                      baseline: bool
+                      ) -> Tuple[np.ndarray, np.ndarray, StatsDict]:
+        # Pad ragged client batches to the shared bucket ladder — outside
+        # jit, so the executable cache is keyed on a small fixed set of
+        # shapes (bounded retracing, DESIGN.md §5).  Every rung is a
+        # sublane multiple, so this also satisfies the Pallas alignment
+        # contract (DESIGN.md §3; pad_for_pallas stays a no-op safety net
+        # for caller-supplied non-aligned ladders).  Results slice back.
+        q, B = pad_to_bucket(q, self.batch_buckets)
+        q, _ = multistage.pad_for_pallas(q, params)
+        fn = self._get_fn(params, baseline, q.shape[0])
+        ids, dists, stats = fn(self.arrays, queries=q)
+        return (np.asarray(ids[:B]), np.asarray(dists[:B]),
+                jax.tree.map(lambda a: np.asarray(a)[:B], stats))
+
     def search(self, queries: np.ndarray, params: SearchParams,
                *, rotated: bool = False
                ) -> Tuple[np.ndarray, np.ndarray, StatsDict]:
         q = jnp.asarray(queries) if rotated else self.rotate_queries(queries)
-        # Pallas stage-① paths need sublane-aligned batches; the shared
-        # helper (multistage.pad_for_pallas, also used by pipeline.py) pads
-        # here — outside jit, which additionally caps jit-signature churn
-        # for ragged client batches — and results are sliced back.
-        q, B = multistage.pad_for_pallas(q, params)
-        ids, dists, stats = self._get_fn(params, False)(self.arrays, queries=q)
-        return (np.asarray(ids[:B]), np.asarray(dists[:B]),
-                jax.tree.map(lambda a: np.asarray(a)[:B], stats))
+        return self._run_bucketed(q, params, False)
 
     def search_baseline(self, queries: np.ndarray, params: SearchParams,
                         *, rotated: bool = False
                         ) -> Tuple[np.ndarray, np.ndarray, StatsDict]:
         q = jnp.asarray(queries) if rotated else self.rotate_queries(queries)
-        ids, dists, stats = self._get_fn(params, True)(self.arrays, queries=q)
-        return np.asarray(ids), np.asarray(dists), jax.tree.map(np.asarray, stats)
+        return self._run_bucketed(q, params, True)
 
     # ------------------------------------------------------------------
     def memory_report(self) -> Dict:

@@ -77,6 +77,43 @@ class SearchParams:
     use_persistent_traversal: bool = False
 
 
+# Shape-bucketed batching (DESIGN.md §5): the default ladder of padded batch
+# sizes the engine and the serving runtime compile for.  Every rung is a
+# sublane (8) multiple so bucket-padded batches also satisfy the Pallas
+# alignment contract of DESIGN.md §3; batches beyond the top rung round up to
+# a multiple of it, so the executable count stays bounded for any bounded
+# client batch size.
+BATCH_BUCKETS: Tuple[int, ...] = (8, 16, 32, 64, 128)
+
+
+def bucket_size(B: int, buckets: Tuple[int, ...] = BATCH_BUCKETS) -> int:
+    """Padded size for a batch of ``B`` queries: the smallest ladder rung
+    ``>= B``, or the next multiple of the top rung above the ladder."""
+    for b in buckets:
+        if B <= b:
+            return b
+    top = buckets[-1]
+    return -(-B // top) * top
+
+
+def pad_to_bucket(queries: jax.Array,
+                  buckets: Tuple[int, ...] = BATCH_BUCKETS
+                  ) -> Tuple[jax.Array, int]:
+    """Pad a query batch to its ladder bucket (zero rows); returns
+    ``(padded, original_B)``.  Callers slice results back to ``original_B``.
+    Padded rows are independent under the batched traversal (every per-query
+    op is row-local and a converged row is a fixed point), so real rows are
+    unchanged — the same argument the Pallas alignment padding relies on
+    (DESIGN.md §3).  Shared by ``engine.PilotANNIndex`` and the serving
+    runtime (`serving/server.py`) so the jit cache is keyed on a small fixed
+    set of shapes instead of every client batch size (DESIGN.md §5)."""
+    B = queries.shape[0]
+    nb = bucket_size(B, buckets)
+    if nb == B:
+        return queries, B
+    return jnp.pad(queries, ((0, nb - B), (0, 0))), B
+
+
 def pad_for_pallas(queries: jax.Array, params: SearchParams,
                    align: int = 8) -> Tuple[jax.Array, int]:
     """Shared ragged-batch padding for the Pallas stage-① paths (per-hop or

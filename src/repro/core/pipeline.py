@@ -1,12 +1,13 @@
 """Stage-level software pipelining of query batches (paper: "CPU–GPU
-pipelining", Table 5 first ablation row).
+pipelining", Table 5 first ablation row; serving runtime in DESIGN.md §5).
 
 On the GPU system, stage ① of batch i+1 overlaps stages ②③ of batch i across
-the PCIe boundary.  The JAX analogue exploits async dispatch: the pilot stage
-of the next batch is dispatched before the CPU-side stages of the current
-batch are consumed, so the runtime overlaps them whenever the backends can.
-On a TPU pod the same structure overlaps the replicated-pilot program with
-the sharded-traversal program (two executables in flight).
+the PCIe boundary.  The JAX analogue exploits async dispatch: the pilot
+stages of up to ``depth`` batches are dispatched before the CPU-side stages
+of the oldest batch are consumed, so the runtime overlaps them whenever the
+backends can.  On a TPU pod the same structure overlaps the replicated-pilot
+program with the sharded-traversal program (``depth`` executables in
+flight).
 
 The stage boundary carries the pilot beam (compact pilot ids + stage-①
 distances) and the visited filter (stages ① and ② share the compact id
@@ -15,15 +16,31 @@ exactly (from ``rot_vecs`` when the pilot is quantized, via the SVD
 residual identity when it is fp32 — DESIGN.md §4) and hands stage ③ the
 beam alone, exactly as ``multistage.multistage_search`` does.
 
+**Donation contract** (``donate=True``, DESIGN.md §5): the stage-boundary
+buffers are use-once, so they are donated via ``jax.jit(...,
+donate_argnums=...)`` and their storage is *recycled* instead of
+reallocated per batch.  ``cpu_stages`` donates beam ids, beam distances
+and the visited filter (consuming them invalidates the caller's arrays —
+accidental reuse raises) and returns their storage aliased; the visited
+filter — by far the largest boundary buffer, ``(B, bloom_bits)`` per batch
+— cycles through a per-shape pool back into ``pilot_stage``, which takes
+it as a donated scratch argument, clears it in-place and runs the
+traversal in it.  Steady state allocates no new visited storage at all;
+results are bit-identical to the undonated path.
+
 Ragged batches: the Pallas stage-① paths need sublane-aligned batch sizes;
 ``pilot_stage`` pads with the shared ``multistage.pad_for_pallas`` helper
 (inside jit — pad widths are static per trace) and slices its outputs back,
-so ``cpu_stages`` and callers always see the caller's batch size.
+so ``cpu_stages`` and callers always see the caller's batch size.  The
+*donated* path requires the caller's batches to be aligned already (XLA
+aliases whole buffers only, so the scratch filter must equal the output
+shape) — bucket-padded batches (``multistage.pad_to_bucket``) always are.
 """
 
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass
 from functools import partial
 from typing import Dict, Iterator, List, Optional, Tuple
@@ -32,14 +49,124 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bloom as BL
 from repro.core import traversal as T
 from repro.core import fes as F
 from repro.core.multistage import SearchParams, pad_for_pallas, refine_stage
 
 
-def split_stages(arrays: Dict[str, jax.Array], params: SearchParams):
+def visited_buffer(params: SearchParams, batch: int, nk: int) -> jax.Array:
+    """A cleared stage-① visited filter of the shape ``pilot_stage``
+    produces: ``(batch, bloom_bits)`` bool for bloom mode, ``(batch, nk+1)``
+    for the exact bitmap.  The donated path's scratch/pool buffers come from
+    here (DESIGN.md §5)."""
+    if params.visited_mode == "bloom":
+        return BL.bloom_init(batch, params.bloom_bits)
+    return BL.exact_init(batch, nk)
+
+
+def _pilot_spec(params: SearchParams) -> T.TraversalSpec:
+    return T.TraversalSpec(ef=params.ef_pilot, visited_mode=params.visited_mode,
+                           bloom_bits=params.bloom_bits,
+                           max_iters=params.max_iters,
+                           frontier_width=params.frontier_width_pilot,
+                           use_pallas=(params.use_pallas_traversal or
+                                       params.use_persistent_traversal),
+                           pallas_interpret=params.pallas_interpret,
+                           use_persistent=params.use_persistent_traversal)
+
+
+class _DonatedStages:
+    """The donated variant of the stage pair, presenting the same
+    ``pilot(queries)`` / ``cpu(queries, cand_id, cand_d, visited)``
+    interface as the plain jitted functions while cycling the visited
+    filter's storage through a per-shape pool (module docstring)."""
+
+    def __init__(self, arrays: Dict[str, jax.Array], params: SearchParams):
+        self.params = params
+        self.nk = arrays["pilot_to_full"].shape[0] - 1
+        n = arrays["rot_vecs"].shape[0] - 1
+        dp = arrays["primary"].shape[1]
+        pilot_scale = arrays.get("primary_scale")
+        self._pool: Dict[int, List[jax.Array]] = {}
+        self._pallas = (params.use_pallas_traversal or
+                        params.use_persistent_traversal)
+
+        @partial(jax.jit, donate_argnums=(1,))
+        def pilot_fn(queries, visited_scratch):
+            # clear the recycled filter in place (donated: output aliases it)
+            cleared = visited_scratch ^ visited_scratch
+            qp = queries[:, :dp]
+            entry_ids, _ = F.fes_select_ref(
+                qp, arrays["fes_centroids"], arrays["fes_entries"],
+                arrays["fes_entry_ids"], arrays["fes_valid"], params.fes_L,
+                entries_scale=arrays.get("fes_entries_scale"))
+            st1 = T.greedy_search(_pilot_spec(params), qp,
+                                  arrays["sub_neighbors"], arrays["primary"],
+                                  self.nk, entry_ids, visited=cleared,
+                                  vec_scale=pilot_scale)
+            return st1.cand_id, st1.cand_d, st1.visited
+
+        @partial(jax.jit, donate_argnums=(1, 2, 3))
+        def cpu_fn(queries, cand_id, cand_dp, visited):
+            Bq = queries.shape[0]
+            seed_id, seed_d, _ = refine_stage(arrays, params, queries,
+                                              cand_id, cand_dp,
+                                              visited=visited)
+            spec3 = T.TraversalSpec(ef=params.ef,
+                                    visited_mode=params.visited_mode,
+                                    bloom_bits=params.bloom_bits,
+                                    max_iters=params.max_iters,
+                                    frontier_width=params.frontier_width)
+            st3 = T.greedy_search(spec3, queries, arrays["full_neighbors"],
+                                  arrays["rot_vecs"], n,
+                                  entry_ids=jnp.full((Bq, 1), n, jnp.int32),
+                                  extra_id=seed_id, extra_d=seed_d)
+            ids, dists = T.topk_from_state(st3, params.k)
+            # hand the boundary buffers back so their (donated) storage is
+            # aliased into outputs instead of freed-and-reallocated; the
+            # wrapper pools the visited filter and drops the beams
+            return ids, dists, cand_id, cand_dp, visited
+
+        self._pilot_fn, self._cpu_fn = pilot_fn, cpu_fn
+
+    def pilot(self, queries: jax.Array):
+        Bq = queries.shape[0]
+        if self._pallas and Bq % 8 != 0:
+            raise ValueError(
+                f"donated split_stages needs sublane-aligned batches with "
+                f"the Pallas stage-① paths (got B={Bq}); pad with "
+                f"multistage.pad_to_bucket first")
+        pool = self._pool.get(Bq)
+        scratch = pool.pop() if pool else visited_buffer(self.params, Bq,
+                                                         self.nk)
+        return self._pilot_fn(queries, scratch)
+
+    def cpu(self, queries: jax.Array, cand_id, cand_dp, visited):
+        ids, dists, _cid, _cd, vis_r = self._cpu_fn(queries, cand_id,
+                                                    cand_dp, visited)
+        self._pool.setdefault(queries.shape[0], []).append(vis_r)
+        return ids, dists
+
+
+def split_stages(arrays: Dict[str, jax.Array], params: SearchParams,
+                 *, donate: bool = False):
     """jit the pilot stage (①+FES) and the CPU stages (②③) separately so
-    they can be dispatched independently (the pipelining boundary)."""
+    they can be dispatched independently (the pipelining boundary).
+    Returns ``(pilot_stage, cpu_stages)`` with
+    ``pilot_stage(queries) -> (cand_id, cand_d, visited)`` and
+    ``cpu_stages(queries, cand_id, cand_d, visited) -> (ids, dists)``.
+
+    donate=True swaps in the donated variant (module docstring): the
+    boundary buffers are donated via ``donate_argnums`` — consuming them in
+    ``cpu_stages`` invalidates the caller's arrays — and the visited
+    filter's storage is recycled through ``pilot_stage``'s donated scratch
+    argument, so the steady-state serving loop stops allocating it.  The
+    interface and the results are identical either way."""
+    if donate:
+        stages = _DonatedStages(arrays, params)
+        return stages.pilot, stages.cpu
+
     n = arrays["rot_vecs"].shape[0] - 1
     nk = arrays["pilot_to_full"].shape[0] - 1
     dp = arrays["primary"].shape[1]
@@ -54,17 +181,9 @@ def split_stages(arrays: Dict[str, jax.Array], params: SearchParams):
             qp, arrays["fes_centroids"], arrays["fes_entries"],
             arrays["fes_entry_ids"], arrays["fes_valid"], params.fes_L,
             entries_scale=arrays.get("fes_entries_scale"))
-        spec1 = T.TraversalSpec(ef=params.ef_pilot, visited_mode=params.visited_mode,
-                                bloom_bits=params.bloom_bits,
-                                max_iters=params.max_iters,
-                                frontier_width=params.frontier_width_pilot,
-                                use_pallas=(params.use_pallas_traversal or
-                                            params.use_persistent_traversal),
-                                pallas_interpret=params.pallas_interpret,
-                                use_persistent=params.use_persistent_traversal)
-        st1 = T.greedy_search(spec1, qp, arrays["sub_neighbors"],
-                              arrays["primary"], nk, entry_ids,
-                              vec_scale=pilot_scale)
+        st1 = T.greedy_search(_pilot_spec(params), qp,
+                              arrays["sub_neighbors"], arrays["primary"], nk,
+                              entry_ids, vec_scale=pilot_scale)
         return st1.cand_id[:B0], st1.cand_d[:B0], st1.visited[:B0]
 
     @jax.jit
@@ -87,12 +206,26 @@ def split_stages(arrays: Dict[str, jax.Array], params: SearchParams):
 
 def pipelined_search(arrays: Dict[str, jax.Array], params: SearchParams,
                      query_batches: List[jax.Array],
-                     *, pipelined: bool = True
+                     *, pipelined: bool = True, depth: int = 2,
+                     donate: bool = False,
+                     record_into: Optional[List[Dict]] = None
                      ) -> Tuple[List[Tuple[np.ndarray, np.ndarray]], float]:
     """Run a stream of query batches; returns (results, wall_seconds).
-    With pipelined=False the stages of each batch run strictly in sequence
-    (jax.block_until_ready between stages) — the "- pipelining" ablation."""
-    pilot_stage, cpu_stages = split_stages(arrays, params)
+
+    depth: maximum batches in flight — the pilot stages of up to ``depth``
+    batches are dispatched while the oldest batch's CPU stages drain
+    (depth=2 reproduces the classic two-deep overlap).  With
+    pipelined=False the stages of each batch run strictly in sequence
+    (jax.block_until_ready between stages) — the "- pipelining" ablation.
+    donate: recycle the stage-boundary buffers through ``donate_argnums``
+    (see ``split_stages``; requires sublane-aligned batches on the Pallas
+    paths).  record_into: optional list; one dict per batch with per-stage
+    wall-clock timestamps (``t_pilot_dispatch`` / ``t_cpu_start`` /
+    ``t_done``, seconds relative to the timed region's start) is appended —
+    the serving runtime's per-stage accounting (DESIGN.md §5)."""
+    if depth < 1:
+        raise ValueError(f"depth must be >= 1, got {depth}")
+    pilot_stage, cpu_stages = split_stages(arrays, params, donate=donate)
 
     # warmup/compile outside the timed region
     w = pilot_stage(query_batches[0])
@@ -100,19 +233,29 @@ def pipelined_search(arrays: Dict[str, jax.Array], params: SearchParams,
 
     results: List = [None] * len(query_batches)
     t0 = time.perf_counter()
+    now = lambda: time.perf_counter() - t0
+
+    def drain(entry):
+        j, qj, poj, t_disp = entry
+        t_cpu = now()
+        results[j] = jax.block_until_ready(cpu_stages(qj, *poj))
+        if record_into is not None:
+            record_into.append({"batch": j, "t_pilot_dispatch": t_disp,
+                                "t_cpu_start": t_cpu, "t_done": now()})
+
     if pipelined:
-        inflight = []  # (idx, queries, pilot outputs)
+        inflight: deque = deque()  # (idx, queries, pilot outputs, t_dispatch)
         for i, q in enumerate(query_batches):
             po = pilot_stage(q)           # dispatched async
-            inflight.append((i, q, po))
-            if len(inflight) > 1:
-                j, qj, poj = inflight.pop(0)
-                results[j] = jax.block_until_ready(cpu_stages(qj, *poj))
-        for j, qj, poj in inflight:
-            results[j] = jax.block_until_ready(cpu_stages(qj, *poj))
+            inflight.append((i, q, po, now()))
+            if len(inflight) >= depth:
+                drain(inflight.popleft())
+        while inflight:
+            drain(inflight.popleft())
     else:
         for i, q in enumerate(query_batches):
+            t_disp = now()
             po = jax.block_until_ready(pilot_stage(q))
-            results[i] = jax.block_until_ready(cpu_stages(q, *po))
+            drain((i, q, po, t_disp))
     dt = time.perf_counter() - t0
     return [(np.asarray(a), np.asarray(b)) for a, b in results], dt

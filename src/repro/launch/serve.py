@@ -26,6 +26,10 @@ def main(argv=None) -> int:
     ap.add_argument("--batches", type=int, default=8)
     ap.add_argument("--ef", type=int, default=64)
     ap.add_argument("--no-pipeline", action="store_true")
+    ap.add_argument("--depth", type=int, default=2,
+                    help="batches in flight (DESIGN.md §5)")
+    ap.add_argument("--donate", action="store_true",
+                    help="donate/recycle the stage-boundary buffers")
     args = ap.parse_args(argv)
 
     ds = synthetic_vectors(args.n, args.d, n_queries=args.batch * args.batches)
@@ -39,11 +43,13 @@ def main(argv=None) -> int:
     batches = [rot[i * args.batch:(i + 1) * args.batch]
                for i in range(args.batches)]
     results, dt = pipelined_search(index.arrays, params, batches,
-                                   pipelined=not args.no_pipeline)
+                                   pipelined=not args.no_pipeline,
+                                   depth=args.depth, donate=args.donate)
     qps = args.batch * args.batches / dt
     print(f"[serve] {args.batches} batches x {args.batch} queries in "
           f"{dt:.3f}s -> {qps:,.0f} QPS "
-          f"(pipelined={not args.no_pipeline})")
+          f"(pipelined={not args.no_pipeline}, depth={args.depth}, "
+          f"donate={args.donate})")
     return 0
 
 

@@ -1,5 +1,7 @@
 from repro.serving.batching import BatchingQueue, Request
 from repro.serving.rag import RagPipeline
 from repro.serving.semantic_cache import SemanticCache
+from repro.serving.server import ServeParams, ThroughputEngine
 
-__all__ = ["BatchingQueue", "Request", "RagPipeline", "SemanticCache"]
+__all__ = ["BatchingQueue", "Request", "RagPipeline", "SemanticCache",
+           "ServeParams", "ThroughputEngine"]

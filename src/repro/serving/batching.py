@@ -51,14 +51,25 @@ class BatchingQueue:
     def next_batch(self) -> List[Optional[Request]]:
         """Fixed-size batch: real requests + None padding (compiled-shape
         stability — the engine scores padded slots against zero queries)."""
-        out: List[Optional[Request]] = []
-        while self.pending and len(out) < self.batch_size:
+        out: List[Optional[Request]] = [None] * self.batch_size
+        for i, r in enumerate(self.drain(self.batch_size)):
+            out[i] = r
+        return out
+
+    def drain(self, max_n: int) -> List[Request]:
+        """Pop up to ``max_n`` requests in FIFO order, no padding — the
+        serving runtime's bucket path pads the result to its shape ladder
+        instead (serving/server.py, DESIGN.md §5)."""
+        out: List[Request] = []
+        while self.pending and len(out) < max_n:
             out.append(self.pending.popleft())
-        out.extend([None] * (self.batch_size - len(out)))
         return out
 
     def requeue(self, reqs: List[Request]) -> None:
-        for r in reqs:
+        """Return unfinished requests to the FRONT of the queue, preserving
+        their relative order (reversed appendleft: requeue([a, b]) leaves
+        a before b), so retried stragglers keep their original priority."""
+        for r in reversed(reqs):
             if not r.done:
                 self.pending.appendleft(r)
 

@@ -1,0 +1,258 @@
+"""Continuous-batching throughput runtime (DESIGN.md §5).
+
+The paper's headline claim is *steady-state QPS at equal recall*, and most
+of that is won or lost in the serving loop, not the kernel: recompiles on
+ragged batch shapes, per-call allocation of search state, and host-side
+stalls between stages.  ``ThroughputEngine`` is the serving loop around the
+search core, built from four mechanisms:
+
+1. **Shape-bucketed executables** — requests drained from ``BatchingQueue``
+   are padded to a small fixed ladder of batch sizes
+   (``multistage.pad_to_bucket``, shared with ``PilotANNIndex.search``), so
+   the jit cache holds at most ``len(buckets)`` executables per stage and a
+   ``warmup()`` pass precompiles them all outside the serving window.
+2. **Donated search state** — the stage-boundary buffers (pilot beam,
+   visited filter) are donated into the CPU-stage executable
+   (``pipeline.split_stages(donate=True)``), so the hot loop stops
+   allocating fresh output buffers for them.
+3. **Depth-D in-flight pipelining** — the pilot stages of up to ``depth``
+   batches are dispatched (async) before the oldest batch's CPU stages are
+   drained, generalizing ``pipeline.pipelined_search``'s two-deep overlap;
+   per-stage wall-clock timestamps land in ``stats["batch_records"]``.
+4. **Semantic-cache short-circuit** — with ``use_semantic_cache``, each
+   submitted query is first looked up in a ``SemanticCache`` (a PilotANN
+   index over past query embeddings); hits return the cached result without
+   touching the pilot stage, with hit-rate accounting in ``stats``.
+   Caveat: the cache's index rebuilds *synchronously* every
+   ``cache_rebuild_every`` inserts (graph construction is the offline
+   path, exactly like the paper's index build), which stalls the serving
+   loop for the build + first-lookup trace — acceptable for the
+   read-heavy workloads the cache targets, wrong for strict p99 SLOs;
+   hence the feature defaults off.
+
+``benchmarks/serving_qps.py`` drives Poisson arrivals through this runtime
+and reports steady-state QPS + latency percentiles for naive-per-shape-jit
+vs bucketed vs bucketed+pipelined serving.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import multistage
+from repro.core.multistage import SearchParams
+from repro.core.pipeline import split_stages
+from repro.serving.batching import BatchingQueue, Request
+from repro.serving.semantic_cache import SemanticCache
+
+
+@dataclass(frozen=True)
+class ServeParams:
+    """Serving-runtime knobs (full field reference: docs/api.md)."""
+    # padded batch-size ladder; every rung should be a sublane (8) multiple
+    # so bucket padding subsumes the Pallas alignment contract (DESIGN.md §3)
+    buckets: Tuple[int, ...] = multistage.BATCH_BUCKETS
+    # max batches in flight: pilot stages of up to depth batches dispatched
+    # before the oldest batch's CPU stages drain (depth=1 = no overlap)
+    depth: int = 2
+    # donate stage-boundary buffers into the CPU-stage executable
+    donate: bool = True
+    # deadline for partially-filled batches (bounds p99 at low load)
+    max_wait_s: float = 0.002
+    # precompile one (pilot, cpu) executable pair per bucket at construction
+    warmup: bool = True
+    # semantic-cache short-circuit in front of the pilot stage
+    use_semantic_cache: bool = False
+    cache_threshold: float = 0.05     # max squared distance for a cache hit
+    cache_rebuild_every: int = 256    # lazy cache-index rebuild cadence
+
+
+class ThroughputEngine:
+    """Continuous-batching serving runtime over a ``PilotANNIndex``.
+
+    Usage: either the offline driver ``serve(queries, arrival_times)`` (the
+    benchmark path — replays an arrival process and returns per-request
+    results + serving stats), or the online primitives ``submit`` /
+    ``pump`` / ``flush`` for callers with their own event loop.
+    """
+
+    def __init__(self, index, params: SearchParams,
+                 serve_params: Optional[ServeParams] = None):
+        self.index = index
+        self.params = params
+        self.serve_params = serve_params or ServeParams()
+        sp = self.serve_params
+        if sp.depth < 1:
+            raise ValueError(f"depth must be >= 1, got {sp.depth}")
+        if not sp.buckets or list(sp.buckets) != sorted(sp.buckets):
+            raise ValueError(f"buckets must be a non-empty ascending ladder, "
+                             f"got {sp.buckets}")
+        self.pilot_stage, self.cpu_stages = split_stages(
+            index.arrays, params, donate=sp.donate)
+        self.queue = BatchingQueue(sp.buckets[-1], max_wait_s=sp.max_wait_s)
+        self.cache: Optional[SemanticCache] = None
+        if sp.use_semantic_cache:
+            self.cache = SemanticCache(dim=index.d,
+                                       threshold=sp.cache_threshold,
+                                       rebuild_every=sp.cache_rebuild_every)
+        # in-flight batches: (requests, padded rotated queries, pilot
+        # outputs, dispatch timestamp)
+        self._inflight: List[Tuple[List[Request], jax.Array, tuple, float]] = []
+        self._t0 = time.perf_counter()
+        self._completions: Dict[int, float] = {}      # rid -> done timestamp
+        self.stats: Dict[str, Any] = {
+            "requests": 0, "batches": 0, "bucket_hist": {},
+            "cache_lookups": 0, "cache_hits": 0, "batch_records": []}
+        if sp.warmup:
+            self.warmup()
+
+    # -- clock ------------------------------------------------------------
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    # -- precompile -------------------------------------------------------
+    def warmup(self) -> int:
+        """Compile one (pilot_stage, cpu_stages) executable pair per bucket
+        with zero queries; returns the number of buckets warmed.  Run at
+        construction (``ServeParams.warmup``) so the serving window never
+        pays a trace."""
+        for b in self.serve_params.buckets:
+            q = jnp.zeros((b, self.index.d), jnp.float32)
+            po = self.pilot_stage(q)
+            jax.block_until_ready(self.cpu_stages(q, *po))
+        return len(self.serve_params.buckets)
+
+    # -- request entry ----------------------------------------------------
+    def submit(self, query: np.ndarray) -> Request:
+        """Enqueue one query (raw, un-rotated).  With the semantic cache
+        enabled, a distance-thresholded hit on a past query completes the
+        request immediately without touching the pilot stage."""
+        q = np.asarray(query, np.float32)
+        self.stats["requests"] += 1
+        req = self.queue.submit(q)
+        if self.cache is not None:
+            self.stats["cache_lookups"] += 1
+            hit = self.cache.lookup(q)
+            if hit is not None:
+                self.stats["cache_hits"] += 1
+                self.queue.pending.pop()          # the one just appended
+                req.result, req.done = hit, True
+                self._completions[req.rid] = self._now()
+        return req
+
+    # -- scheduler core ---------------------------------------------------
+    def _dispatch(self) -> None:
+        sp = self.serve_params
+        reqs = self.queue.drain(sp.buckets[-1])
+        nb = multistage.bucket_size(len(reqs), sp.buckets)
+        q = np.zeros((nb, self.index.d), np.float32)
+        for i, r in enumerate(reqs):
+            q[i] = r.payload
+        qr = self.index.rotate_queries(q)
+        t = self._now()
+        po = self.pilot_stage(qr)                 # async dispatch
+        self._inflight.append((reqs, qr, po, t))
+        self.stats["batches"] += 1
+        hist = self.stats["bucket_hist"]
+        hist[nb] = hist.get(nb, 0) + 1
+
+    def _drain_oldest(self) -> None:
+        reqs, qr, po, t_disp = self._inflight.pop(0)
+        t_cpu = self._now()
+        ids, dists = self.cpu_stages(qr, *po)     # po buffers donated here
+        ids, dists = np.asarray(ids), np.asarray(dists)
+        t_done = self._now()
+        for i, r in enumerate(reqs):
+            r.result = (ids[i], dists[i])
+            r.done = True
+            self._completions[r.rid] = t_done
+            if self.cache is not None:
+                self.cache.insert(r.payload, r.result)
+        self.stats["batch_records"].append(
+            {"bucket": int(qr.shape[0]), "n_real": len(reqs),
+             "t_pilot_dispatch": t_disp, "t_cpu_start": t_cpu,
+             "t_done": t_done})
+
+    def pump(self) -> bool:
+        """One scheduling action: dispatch a pilot batch if there is
+        capacity (``len(inflight) < depth``) and the queue is ready (full
+        bucket or deadline), else drain the oldest in-flight batch through
+        the CPU stages.  Returns False when there was nothing to do (queue
+        waiting on its deadline, or fully idle)."""
+        sp = self.serve_params
+        if len(self._inflight) < sp.depth and self.queue.ready():
+            self._dispatch()
+            return True
+        if self._inflight:
+            self._drain_oldest()
+            return True
+        return False
+
+    def flush(self) -> None:
+        """Force-run everything pending (ignores the batching deadline)."""
+        while self.queue.pending:
+            if len(self._inflight) >= self.serve_params.depth:
+                self._drain_oldest()
+            self._dispatch()
+        while self._inflight:
+            self._drain_oldest()
+
+    # -- offline driver ---------------------------------------------------
+    def serve(self, queries: np.ndarray,
+              arrival_times: Optional[np.ndarray] = None
+              ) -> Tuple[np.ndarray, np.ndarray, Dict[str, Any]]:
+        """Replay an arrival process through the runtime.
+
+        queries: (n, d) raw query vectors; arrival_times: (n,) seconds
+        relative to the call (default: all at t=0, i.e. a saturated closed
+        loop).  Returns ``(ids (n, k), dists (n, k), stats)`` with
+        per-request results in submission order.  The returned ``stats``
+        covers THIS call only (counters, ``bucket_hist``,
+        ``batch_records`` with timestamps relative to this call's start,
+        ``latency_s`` = per-request completion − arrival, ``wall_s``,
+        ``cache_hit_rate``); ``self.stats`` keeps the engine-lifetime
+        running totals.  The semantic cache persists across calls."""
+        queries = np.asarray(queries, np.float32)
+        n = len(queries)
+        arr = (np.zeros(n) if arrival_times is None
+               else np.asarray(arrival_times, float))
+        before = {k: self.stats[k] for k in
+                  ("requests", "batches", "cache_lookups", "cache_hits")}
+        records_before = len(self.stats["batch_records"])
+        hist_before = dict(self.stats["bucket_hist"])
+        self._completions = {}
+        self._t0 = time.perf_counter()
+        reqs: List[Request] = []
+        i = 0
+        while i < n:
+            now = self._now()
+            while i < n and arr[i] <= now:
+                reqs.append(self.submit(queries[i]))
+                i += 1
+            if i < n and not self.pump():
+                time.sleep(min(max(arr[i] - self._now(), 0.0), 5e-4))
+        self.flush()
+        wall = self._now()
+        k = self.params.k
+        ids = (np.stack([r.result[0] for r in reqs]) if reqs
+               else np.zeros((0, k), np.int64))
+        dists = (np.stack([r.result[1] for r in reqs]) if reqs
+                 else np.zeros((0, k), np.float32))
+        stats = {key: self.stats[key] - prev for key, prev in before.items()}
+        stats["batch_records"] = self.stats["batch_records"][records_before:]
+        stats["bucket_hist"] = {
+            b: c - hist_before.get(b, 0)
+            for b, c in self.stats["bucket_hist"].items()
+            if c - hist_before.get(b, 0)}
+        stats["latency_s"] = np.array(
+            [self._completions[r.rid] - arr[j] for j, r in enumerate(reqs)])
+        stats["wall_s"] = wall
+        lookups, hits = stats["cache_lookups"], stats["cache_hits"]
+        stats["cache_hit_rate"] = hits / lookups if lookups else 0.0
+        return ids, dists, stats

@@ -1,0 +1,328 @@
+"""Serving-runtime tests (DESIGN.md §5): batching queue semantics
+(deadlines, padding, straggler requeue), the semantic cache, the
+shape-bucketed executable cache (bounded retracing), the donated
+stage-boundary contract, depth-D pipelining parity, and the
+ThroughputEngine end to end."""
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PilotANNIndex, SearchParams
+from repro.core import multistage
+from repro.core.multistage import bucket_size, pad_to_bucket
+from repro.core.pipeline import pipelined_search, split_stages
+from repro.serving import (BatchingQueue, Request, SemanticCache, ServeParams,
+                           ThroughputEngine)
+from repro.serving.batching import run_query_batches
+
+PARAMS = SearchParams(k=10, ef=32, ef_pilot=32)
+
+
+# ---------------------------------------------------------------------------
+# BatchingQueue
+# ---------------------------------------------------------------------------
+
+def test_deadline_triggers_partial_batch():
+    t = [0.0]
+    q = BatchingQueue(8, max_wait_s=0.5, clock=lambda: t[0])
+    q.submit(np.ones(4))
+    q.submit(np.ones(4))
+    assert not q.ready()                      # 2 < 8 and deadline not hit
+    t[0] = 0.49
+    assert not q.ready()
+    t[0] = 0.51
+    assert q.ready()                          # deadline fires the partial batch
+    batch = q.next_batch()
+    assert sum(r is not None for r in batch) == 2
+    assert not q.pending
+
+
+def test_full_batch_ready_before_deadline():
+    t = [0.0]
+    q = BatchingQueue(2, max_wait_s=100.0, clock=lambda: t[0])
+    q.submit(np.ones(4))
+    assert not q.ready()
+    q.submit(np.ones(4))
+    assert q.ready()
+
+
+def test_tail_padding_noop_slots():
+    """next_batch pads the tail with None; run_query_batches scores padded
+    slots against zero queries and assigns results only to real requests."""
+    q = BatchingQueue(4, max_wait_s=0.0)
+    r1 = q.submit(np.full(4, 1.0, np.float32))
+    r2 = q.submit(np.full(4, 2.0, np.float32))
+    seen = []
+    n = run_query_batches(lambda x: seen.append(x.shape) or x.sum(axis=1),
+                          q, 4)
+    assert n == 1 and seen == [(4, 4)]        # fixed compiled shape
+    assert r1.done and float(r1.result) == pytest.approx(4.0)
+    assert r2.done and float(r2.result) == pytest.approx(8.0)
+
+
+def test_drain_is_fifo_and_unpadded():
+    q = BatchingQueue(8, max_wait_s=0.0)
+    reqs = [q.submit(i) for i in range(5)]
+    got = q.drain(3)
+    assert [r.rid for r in got] == [reqs[0].rid, reqs[1].rid, reqs[2].rid]
+    assert len(q.pending) == 2
+
+
+def test_requeue_preserves_straggler_order():
+    q = BatchingQueue(8, max_wait_s=0.0)
+    a, b, c = (q.submit(i) for i in range(3))
+    d = q.submit(3)
+    batch = q.drain(3)                        # a, b, c in flight
+    assert [r.rid for r in batch] == [a.rid, b.rid, c.rid]
+    b.done = True                             # b finished; a, c straggled
+    q.requeue(batch)
+    # unfinished stragglers return to the FRONT, original order preserved,
+    # ahead of the not-yet-started d
+    assert [r.rid for r in q.pending] == [a.rid, c.rid, d.rid]
+
+
+# ---------------------------------------------------------------------------
+# SemanticCache
+# ---------------------------------------------------------------------------
+
+def test_semantic_cache_lookup_insert_hit_rate():
+    rng = np.random.default_rng(0)
+    cache = SemanticCache(dim=16, threshold=0.05, rebuild_every=16)
+    assert cache.lookup(np.zeros(16, np.float32)) is None   # cold: miss
+    assert cache.hit_rate == 0.0
+    keys = rng.normal(size=(70, 16)).astype(np.float32)
+    for i, k in enumerate(keys):
+        cache.insert(k, i)
+    assert cache.lookup(keys[5] + 1e-4) == 5                # near-dup: hit
+    assert cache.lookup(100.0 * np.ones(16, np.float32)) is None
+    assert cache.hits == 1 and cache.misses == 2
+    assert cache.hit_rate == pytest.approx(1.0 / 3.0)
+
+
+# ---------------------------------------------------------------------------
+# Shape-bucketed executable cache
+# ---------------------------------------------------------------------------
+
+def test_bucket_size_ladder():
+    assert [bucket_size(b, (8, 16, 32)) for b in (1, 8, 9, 16, 31, 32)] == \
+        [8, 8, 16, 16, 32, 32]
+    assert bucket_size(33, (8, 16, 32)) == 64     # beyond top: top-multiples
+    assert bucket_size(65, (8, 16, 32)) == 96
+
+
+def test_pad_to_bucket_zero_rows():
+    q = jnp.ones((5, 4))
+    padded, B = pad_to_bucket(q, (8, 16))
+    assert padded.shape == (8, 4) and B == 5
+    assert np.all(np.asarray(padded[5:]) == 0.0)
+
+
+def test_search_bucketed_compile_count(built_index, small_dataset):
+    """A sweep over batch sizes 1..65 compiles at most len(buckets)
+    executables per params key (the bounded-retracing contract)."""
+    params = dataclasses.replace(PARAMS, ef=24, ef_pilot=24)
+    before = built_index.compile_count(params, baseline=False)
+    for B in range(1, 66):
+        ids, dists, stats = built_index.search(small_dataset.queries[:B],
+                                               params)
+        assert ids.shape == (B, params.k)
+        assert stats["pilot_dist"].shape == (B,)
+    compiled = built_index.compile_count(params, baseline=False) - before
+    assert 0 < compiled <= len(built_index.batch_buckets), compiled
+    # the sizes 1..65 land in exactly the {8,16,32,64,128} rungs
+    assert compiled == 5
+
+
+def test_search_bucket_padding_is_result_invariant(built_index, small_dataset):
+    """Bucket-padded engine search returns exactly what an unpadded direct
+    jit of multistage_search returns (padded rows never perturb real rows)."""
+    params = PARAMS
+    fn = jax.jit(partial(multistage.multistage_search, params=params))
+    B = 13                                    # pads to bucket 16
+    rot = built_index.rotate_queries(small_dataset.queries[:B])
+    ids_ref, d_ref, _ = fn(built_index.arrays, queries=rot)
+    ids, dists, _ = built_index.search(small_dataset.queries[:B], params)
+    assert np.array_equal(ids, np.asarray(ids_ref)[:B])
+    np.testing.assert_allclose(dists, np.asarray(d_ref)[:B], rtol=1e-6)
+
+
+def test_warmup_precompiles_all_buckets(built_index):
+    params = dataclasses.replace(PARAMS, ef=20, ef_pilot=20)
+    assert built_index.compile_count(params) == 0
+    warmed = built_index.warmup(params, buckets=(8, 16))
+    assert warmed == 2
+    assert built_index.compile_count(params, baseline=False) == 2
+    # warmed sizes do not re-trace
+    built_index.search(np.asarray(built_index.reducer.rotate(
+        np.zeros((3, built_index.d), np.float32))), params, rotated=True)
+    assert built_index.compile_count(params, baseline=False) == 2
+
+
+# ---------------------------------------------------------------------------
+# Donated stage-boundary contract
+# ---------------------------------------------------------------------------
+
+def test_split_stages_donation_invalidates_and_recycles(built_index,
+                                                        small_dataset):
+    params = PARAMS
+    rot = built_index.rotate_queries(small_dataset.queries[:16])
+    pilot, cpu = split_stages(built_index.arrays, params, donate=True)
+    pilot0, cpu0 = split_stages(built_index.arrays, params, donate=False)
+
+    po = pilot(rot)
+    vis_ptr = po[2].unsafe_buffer_pointer()
+    ids, dists = cpu(rot, *po)
+    # consuming the boundary invalidates it (use-once contract)
+    assert po[0].is_deleted() and po[1].is_deleted() and po[2].is_deleted()
+    # the visited filter's storage cycles back through the pool: the next
+    # pilot dispatch reuses the same buffer instead of allocating
+    po2 = pilot(rot)
+    assert po2[2].unsafe_buffer_pointer() == vis_ptr
+    ids2, dists2 = cpu(rot, *po2)
+    # bit-identical to the undonated path, on fresh AND recycled storage
+    po0 = pilot0(rot)
+    ids0, dists0 = cpu0(rot, *po0)
+    for got_i, got_d in ((ids, dists), (ids2, dists2)):
+        assert np.array_equal(np.asarray(got_i), np.asarray(ids0))
+        np.testing.assert_allclose(np.asarray(got_d), np.asarray(dists0),
+                                   rtol=1e-6)
+
+
+def test_donated_pallas_path_requires_aligned_batches(built_index,
+                                                      small_dataset):
+    params = dataclasses.replace(PARAMS, use_pallas_traversal=True)
+    pilot, _ = split_stages(built_index.arrays, params, donate=True)
+    with pytest.raises(ValueError, match="sublane-aligned"):
+        pilot(built_index.rotate_queries(small_dataset.queries[:13]))
+
+
+# ---------------------------------------------------------------------------
+# Depth-D pipelining
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth,donate", [(1, False), (2, True), (3, True)])
+def test_pipelined_depth_matches_engine(built_index, small_dataset, depth,
+                                        donate):
+    batches = [built_index.rotate_queries(small_dataset.queries[i * 16:
+                                                                (i + 1) * 16])
+               for i in range(4)]
+    rec = []
+    results, dt = pipelined_search(built_index.arrays, PARAMS, batches,
+                                   depth=depth, donate=donate,
+                                   record_into=rec)
+    assert dt > 0 and len(results) == 4
+    for i, (ids, dists) in enumerate(results):
+        eids, edists, _ = built_index.search(
+            small_dataset.queries[i * 16:(i + 1) * 16], PARAMS)
+        assert np.array_equal(ids, eids), (depth, donate, i)
+        np.testing.assert_allclose(dists, edists, rtol=1e-6)
+    # per-stage timestamps: one record per batch, monotone within a batch
+    assert sorted(r["batch"] for r in rec) == [0, 1, 2, 3]
+    for r in rec:
+        assert 0.0 <= r["t_pilot_dispatch"] <= r["t_cpu_start"] <= r["t_done"]
+
+
+def test_pipelined_depth_validation(built_index, small_dataset):
+    rot = [built_index.rotate_queries(small_dataset.queries[:8])]
+    with pytest.raises(ValueError, match="depth"):
+        pipelined_search(built_index.arrays, PARAMS, rot, depth=0)
+
+
+# ---------------------------------------------------------------------------
+# ThroughputEngine
+# ---------------------------------------------------------------------------
+
+def test_serve_params_validation(built_index):
+    with pytest.raises(ValueError, match="depth"):
+        ThroughputEngine(built_index, PARAMS, ServeParams(depth=0))
+    with pytest.raises(ValueError, match="buckets"):
+        ThroughputEngine(built_index, PARAMS, ServeParams(buckets=(32, 8)))
+
+
+def test_throughput_engine_matches_engine_search(built_index, small_dataset):
+    serve = ServeParams(buckets=(8, 16, 32), depth=2, max_wait_s=0.001)
+    eng = ThroughputEngine(built_index, PARAMS, serve)
+    n = 40
+    ids, dists, stats = eng.serve(small_dataset.queries[:n])
+    eids, edists, _ = built_index.search(small_dataset.queries[:n], PARAMS)
+    assert np.array_equal(ids, eids)
+    np.testing.assert_allclose(dists, edists, rtol=1e-6)
+    # stats schema: counters, bucket histogram, per-batch stage timestamps
+    assert stats["requests"] == n and stats["batches"] >= 2
+    assert sum(stats["bucket_hist"].values()) == stats["batches"]
+    assert all(b in (8, 16, 32) for b in stats["bucket_hist"])
+    assert sum(r["n_real"] for r in stats["batch_records"]) == n
+    for r in stats["batch_records"]:
+        assert 0.0 <= r["t_pilot_dispatch"] <= r["t_cpu_start"] <= r["t_done"]
+        assert r["n_real"] <= r["bucket"]
+    assert stats["latency_s"].shape == (n,) and (stats["latency_s"] > 0).all()
+    assert stats["cache_hit_rate"] == 0.0 and stats["cache_lookups"] == 0
+
+
+def test_throughput_engine_empty_and_reused_serve(built_index,
+                                                  small_dataset):
+    """serve() handles an empty batch and returns per-call stats on reuse
+    (self.stats keeps the lifetime totals)."""
+    serve = ServeParams(buckets=(8,), depth=1, max_wait_s=0.0, warmup=False)
+    eng = ThroughputEngine(built_index, PARAMS, serve)
+    ids, dists, stats = eng.serve(np.zeros((0, built_index.d), np.float32))
+    assert ids.shape == (0, PARAMS.k) and dists.shape == (0, PARAMS.k)
+    assert stats["requests"] == 0 and stats["latency_s"].shape == (0,)
+    _, _, s1 = eng.serve(small_dataset.queries[:8])
+    _, _, s2 = eng.serve(small_dataset.queries[8:24])
+    assert s1["requests"] == 8 and s2["requests"] == 16
+    assert s2["batches"] == 2 and sum(s2["bucket_hist"].values()) == 2
+    assert len(s2["batch_records"]) == 2
+    assert s2["latency_s"].shape == (16,)
+    assert eng.stats["requests"] == 24               # lifetime totals
+
+
+def test_throughput_engine_respects_depth_inflight(built_index,
+                                                   small_dataset):
+    """pump() never holds more than depth batches in flight."""
+    serve = ServeParams(buckets=(8,), depth=2, max_wait_s=0.0, warmup=False)
+    eng = ThroughputEngine(built_index, PARAMS, serve)
+    for i in range(32):
+        eng.submit(small_dataset.queries[i])
+    seen = 0
+    while eng.queue.pending or eng._inflight:
+        assert len(eng._inflight) <= serve.depth
+        if not eng.pump():
+            break
+        seen = max(seen, len(eng._inflight))
+    assert seen == serve.depth                # the overlap actually happens
+    assert eng.stats["batches"] == 4
+
+
+def test_throughput_engine_semantic_cache_short_circuit(built_index,
+                                                        small_dataset):
+    """Repeated near-identical queries short-circuit at the semantic cache
+    once its index builds (64 inserts), with hit-rate accounting."""
+    rng = np.random.default_rng(3)
+    pool = small_dataset.queries[:4]
+    # 72 warm-up requests populate the cache past its first build...
+    warm = pool[rng.integers(0, 4, size=72)] + \
+        rng.normal(scale=1e-5, size=(72, pool.shape[1])).astype(np.float32)
+    serve = ServeParams(buckets=(8, 16, 32, 64, 128), depth=1,
+                        max_wait_s=0.0, use_semantic_cache=True,
+                        cache_threshold=0.05)
+    eng = ThroughputEngine(built_index, PARAMS, serve)
+    _, _, warm_stats = eng.serve(warm.astype(np.float32))
+    assert warm_stats["cache_lookups"] == 72
+    assert eng.stats["cache_lookups"] == 72          # lifetime totals agree
+    # ...then repeats of the same pool hit without touching the pilot stage
+    repeat = pool[rng.integers(0, 4, size=16)].astype(np.float32)
+    ids, dists, stats = eng.serve(repeat)            # per-call stats
+    assert stats["requests"] == 16
+    assert stats["cache_hits"] > 0
+    assert stats["cache_hit_rate"] > 0.0
+    assert ids.shape == (16, PARAMS.k)
+    # cache hits complete requests without consuming a batch slot
+    assert stats["batches"] < 16
+    assert eng.stats["requests"] == 72 + 16          # running totals intact
