@@ -73,6 +73,30 @@ def run(n: int = 8000, d: int = 64, nq: int = 128, target: float = 0.9,
                          f"recall={rec:.3f};recall_delta_vs_fp32={rec - r0:+.4f}"))
         last_idx.set_pilot_dtype("float32")
 
+    # ---- mutable-index residency (DESIGN.md §6): per-segment pilot bytes
+    # after streaming inserts, and again after compact() folds the deltas
+    # into a fresh base — keeps the budget claim verifiable on mutable
+    # indexes (segments carry their own quantized pilot tables) ----
+    from repro.core import SegmentedIndex
+    rng = np.random.default_rng(9)
+    seg_n = max(n // 4, 1000)
+    seg = SegmentedIndex(
+        IndexConfig(R=16, sample_ratio=0.25, svd_ratio=0.5, n_entry=512,
+                    build_method="exact"), ds.vectors[:seg_n])
+    seg.insert(rng.normal(size=(seg_n // 10, d)).astype(np.float32))
+    rep = seg.memory_report()
+    per_seg = ";".join(f"{s['segment']}={s['pilot_bytes']/1e6:.3f}MB"
+                       f"(live={s['live']})" for s in rep["segments"])
+    rows.append(("memory_scaling/segmented_post_insert",
+                 rep["total_pilot_bytes"] / 1e6,
+                 f"MB_pilot_total;{per_seg}"))
+    seg.compact()
+    rep = seg.memory_report()
+    rows.append(("memory_scaling/segmented_post_compact",
+                 rep["total_pilot_bytes"] / 1e6,
+                 f"MB_pilot_total;segments={len(rep['segments'])};"
+                 f"delta_bytes={rep['delta_pilot_bytes']}"))
+
     # analytic 100M-scale geometry (the paper's Table 3 regime): pilot bytes
     # for the pod engine's knobs vs full index, across pilot encodings
     from repro.core.distributed import PodIndexSpec

@@ -1,0 +1,185 @@
+"""Streaming updates under live serving (DESIGN.md §6): sustained QPS vs
+insert rate vs recall for the mutable segmented index.
+
+Three serving runs over the SAME Poisson arrival process and search core:
+
+  static              ThroughputEngine over the immutable PilotANNIndex
+                      (PR-4 bucketed+pipelined serving — the reference QPS)
+  segmented_static    same engine over a SegmentedIndex with no mutations
+                      (fan-out/merge overhead in isolation)
+  streaming           SegmentedIndex + a concurrent insert stream through
+                      the upsert queue (``submit_upsert``), drained between
+                      pump batches — mutation and query traffic interleave
+
+The streaming row's value is sustained QPS; ``derived`` carries the insert
+rate achieved (as %corpus/min — the acceptance bar is ≥1%/min), the QPS
+retention vs the static reference (bar: ≥50%), latency percentiles and
+recall.  Post-stream, the same queries replay against the final corpus and
+recall is scored against full-corpus ground truth (the inserted vectors ARE
+real nearest neighbours), plus a delete→query→compact round-trip row.
+
+Env knobs (scripts/smoke.sh sets the small smoke shape):
+  STREAMING_N           corpus size                  (default 6000)
+  STREAMING_REQUESTS    request count                (default 400)
+  STREAMING_RATE        Poisson arrivals /s          (default 250)
+  STREAMING_DEPTH       pipelining depth D           (default 2)
+  STREAMING_PCT_MIN     insert rate, %corpus/min     (default 20)
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Tuple
+
+import numpy as np
+
+from benchmarks.common import csv_line
+from repro.core import (IndexConfig, PilotANNIndex, SearchParams,
+                        SegmentedIndex, UpdateParams, brute_force_topk,
+                        recall_at_k)
+from repro.data import synthetic_vectors
+from repro.serving import ServeParams, ThroughputEngine
+
+BUCKETS = (8, 16, 32, 64)
+PARAMS = SearchParams(k=10, ef=32, ef_pilot=32)
+
+
+def _env(name: str, default: int) -> int:
+    return int(os.environ.get(name, default))
+
+
+def _poisson_arrivals(n: int, rate: float, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def _pcts(lat: np.ndarray) -> Tuple[float, float]:
+    return (float(np.percentile(lat, 50) * 1e3),
+            float(np.percentile(lat, 99) * 1e3))
+
+
+def _mk_engine(index, depth: int) -> ThroughputEngine:
+    return ThroughputEngine(index, PARAMS,
+                            ServeParams(buckets=BUCKETS, depth=depth,
+                                        donate=True, max_wait_s=0.002,
+                                        warmup=True, mutations_per_pump=16))
+
+
+def _serve_with_inserts(eng: ThroughputEngine, queries, arrivals,
+                        inserts: np.ndarray, insert_at: np.ndarray):
+    """Replay Poisson queries while feeding the upsert queue on its own
+    schedule (insert_at: seconds, aligned with the arrival clock)."""
+    n = len(queries)
+    t0 = time.perf_counter()
+    eng._t0 = t0
+    eng._completions = {}
+    reqs = []
+    i = j = 0
+    while i < n or j < len(insert_at):
+        now = time.perf_counter() - t0
+        while i < n and arrivals[i] <= now:
+            reqs.append(eng.submit(queries[i]))
+            i += 1
+        while j < len(insert_at) and insert_at[j] <= now:
+            eng.submit_upsert(inserts[j][None, :])
+            j += 1
+        if not eng.pump() and (i < n or j < len(insert_at)):
+            pend = ([arrivals[i]] if i < n else []) + \
+                   ([insert_at[j]] if j < len(insert_at) else [])
+            time.sleep(min(max(min(pend) - (time.perf_counter() - t0), 0.0),
+                           5e-4))
+    eng.flush()
+    eng.flush_mutations()
+    wall = time.perf_counter() - t0
+    lat = np.array([eng._completions[r.rid] - arrivals[k]
+                    for k, r in enumerate(reqs)])
+    ids = np.stack([r.result[0] for r in reqs])
+    return ids, lat, wall
+
+
+def run() -> None:
+    n = _env("STREAMING_N", 6000)
+    n_req = _env("STREAMING_REQUESTS", 400)
+    rate = float(_env("STREAMING_RATE", 250))
+    depth = _env("STREAMING_DEPTH", 2)
+    pct_min = float(_env("STREAMING_PCT_MIN", 20))
+    # pace the insert stream at pct_min %corpus/min across the Poisson
+    # window (the acceptance bar is >=1%/min at >=50% QPS retention)
+    span = n_req / rate
+    n_ins = max(8, int(pct_min / 100.0 * n * (0.9 * span) / 60.0))
+
+    ds = synthetic_vectors(n + n_ins, 48, n_queries=256, seed=0)
+    base_vecs, ins_vecs = ds.vectors[:n], ds.vectors[n:]
+    cfg = IndexConfig(R=16, sample_ratio=0.3, svd_ratio=0.5, n_entry=512,
+                      build_method="exact")
+    rng = np.random.default_rng(1)
+    queries = np.ascontiguousarray(
+        ds.queries[rng.integers(0, len(ds.queries), size=n_req)], np.float32)
+    arrivals = _poisson_arrivals(n_req, rate, seed=2)
+    gt_base = brute_force_topk(base_vecs, queries, PARAMS.k)
+    gt_full = brute_force_topk(ds.vectors, queries, PARAMS.k)
+
+    # --- static reference: PR-4 serving over the immutable index --------
+    plain = PilotANNIndex(cfg, base_vecs)
+    ids_s, _, st_s = _mk_engine(plain, depth).serve(queries, arrivals)
+    qps_static = n_req / max(st_s["wall_s"], 1e-9)
+    p50, p99 = _pcts(st_s["latency_s"])
+    print(csv_line("streaming_update/static", qps_static,
+                   f"QPS;p50_ms={p50:.1f};p99_ms={p99:.1f};"
+                   f"recall={recall_at_k(ids_s, gt_base, PARAMS.k):.3f}"))
+
+    # --- segmented, no mutations: fan-out/merge overhead ----------------
+    seg0 = SegmentedIndex(cfg, base_vecs)
+    ids_0, _, st_0 = _mk_engine(seg0, depth).serve(queries, arrivals)
+    qps_seg = n_req / max(st_0["wall_s"], 1e-9)
+    print(csv_line("streaming_update/segmented_static", qps_seg,
+                   f"QPS;retention_vs_static={qps_seg / qps_static:.2f}x;"
+                   f"recall={recall_at_k(ids_0, gt_base, PARAMS.k):.3f}"))
+
+    # --- streaming: Poisson queries + concurrent insert stream ----------
+    seg = SegmentedIndex(cfg, base_vecs, UpdateParams(repair_ef=32,
+                                                      repair_knn=8))
+    eng = _mk_engine(seg, depth)
+    insert_at = np.linspace(0.0, max(arrivals[-1], 1e-3) * 0.9, n_ins)
+    ids_m, lat_m, wall = _serve_with_inserts(eng, queries, arrivals,
+                                             ins_vecs, insert_at)
+    qps_mut = n_req / max(wall, 1e-9)
+    rate_pct_min = (eng.stats["upserts"] / n) * 100.0 * 60.0 / max(wall, 1e-9)
+    p50, p99 = _pcts(lat_m)
+    retention = qps_mut / max(qps_static, 1e-9)
+    print(csv_line("streaming_update/streaming", qps_mut,
+                   f"QPS;inserted={eng.stats['upserts']};"
+                   f"insert_rate_pct_per_min={rate_pct_min:.1f};"
+                   f"retention_vs_static={retention:.2f}x;"
+                   f"p50_ms={p50:.1f};p99_ms={p99:.1f};"
+                   f"recall_vs_base_gt="
+                   f"{recall_at_k(ids_m, gt_base, PARAMS.k):.3f}"))
+    assert rate_pct_min >= 1.0, \
+        f"insert stream too slow: {rate_pct_min:.2f}%/min < 1%/min"
+    assert retention >= 0.5, \
+        f"streaming QPS retention {retention:.2f} < 0.5x static"
+
+    # --- post-stream: same queries against the final corpus -------------
+    ids_p, _, _ = eng.serve(queries, arrivals)
+    rec_p = recall_at_k(ids_p, gt_full, PARAMS.k)
+    print(csv_line("streaming_update/post_insert_recall", rec_p,
+                   f"recall@10_vs_full_corpus_gt;n_total={seg.n_total}"))
+
+    # --- delete -> query -> compact round-trip ---------------------------
+    dead = np.unique(gt_full[:, 0])
+    eng.submit_delete(dead)
+    eng.flush_mutations()
+    ids_d, _, _ = eng.serve(queries[:64])
+    leaked = int(np.isin(ids_d, dead).sum())
+    seg.compact()
+    ids_c, _, _ = seg.search(queries[:64], PARAMS)
+    leaked_c = int(np.isin(ids_c, dead).sum())
+    print(csv_line("streaming_update/delete_roundtrip", leaked + leaked_c,
+                   f"tombstoned_ids_leaked(pre+post_compact);deleted="
+                   f"{len(dead)};generation={seg.generation}"))
+    assert leaked == 0 and leaked_c == 0
+
+
+if __name__ == "__main__":
+    run()

@@ -11,10 +11,11 @@ Three classes of rot this catches:
    §Name`` strings in src/, tests/, benchmarks/, scripts/ and examples/
    must resolve to a ``## §...`` heading in DESIGN.md (these have broken
    silently before).
-3. **API doc coverage** — every field of ``SearchParams``, ``IndexConfig``
-   and the serving runtime's ``ServeParams`` must be documented (appear in
-   backticks) in docs/api.md, and every key of ``memory_report()`` must
-   appear there too.
+3. **API doc coverage** — every field of ``SearchParams``, ``IndexConfig``,
+   the serving runtime's ``ServeParams`` and the mutable index's
+   ``UpdateParams`` must be documented (appear in backticks) in
+   docs/api.md, and every key of ``memory_report()`` (including the
+   segmented-index extensions) must appear there too.
 
 Exit code 0 = clean; 1 = problems (each printed as ``check_docs: ...``).
 """
@@ -116,18 +117,20 @@ def check_design_refs(problems: list) -> None:
 
 def check_api_coverage(problems: list) -> None:
     sys.path.insert(0, os.path.join(ROOT, "src"))
-    from repro.core import IndexConfig, SearchParams   # noqa: E402
+    from repro.core import IndexConfig, SearchParams, UpdateParams  # noqa: E402
     from repro.serving import ServeParams              # noqa: E402
     api = read(os.path.join("docs", "api.md"))
     documented = set(re.findall(r"`([A-Za-z_][A-Za-z0-9_]*)`", api))
-    for cls in (SearchParams, IndexConfig, ServeParams):
+    for cls in (SearchParams, IndexConfig, ServeParams, UpdateParams):
         for f in dataclasses.fields(cls):
             if f.name not in documented:
                 problems.append(
                     f"docs/api.md: undocumented {cls.__name__}.{f.name}")
     for key in ("pilot_bytes", "full_bytes", "ratio", "pilot_dtype",
                 "pilot_id_dtype", "pilot_graph_bytes", "pilot_vec_bytes",
-                "pilot_fes_bytes", "pilot_nodes", "d_primary"):
+                "pilot_fes_bytes", "pilot_nodes", "d_primary",
+                # segmented-index extensions (SegmentedIndex.memory_report)
+                "segments", "delta_pilot_bytes", "total_pilot_bytes"):
         if key not in documented:
             problems.append(f"docs/api.md: undocumented memory_report "
                             f"field {key}")

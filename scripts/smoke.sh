@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Pre-PR smoke check (see README.md); also what CI runs
-# (.github/workflows/ci.yml). Runs all seven sections even if an earlier one
+# (.github/workflows/ci.yml). Runs all eight sections even if an earlier one
 # fails, then summarizes:
 #   1. tier-1 verify (ROADMAP.md), minus the tests known-red on this
 #      container's jax version (flash-attention pallas internals, qwen2-vl,
@@ -16,6 +16,9 @@
 #   7. serving_qps smoke (DESIGN.md §5): tiny index, depth-2 pipelining,
 #      200 Poisson requests — naive-per-shape-jit vs bucketed serving,
 #      BENCH_serving_qps.json for the QPS trajectory
+#   8. mutable-index smoke (DESIGN.md §6): tiny insert->query->delete->
+#      compact round-trip, then the streaming_update benchmark (QPS under
+#      a concurrent insert stream, BENCH_streaming_update.json)
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -30,38 +33,66 @@ KNOWN_RED=(
 
 declare -A status
 
-echo "== [1/7] tier-1 verify (minus known-red, minus slow) =="
+echo "== [1/8] tier-1 verify (minus known-red, minus slow) =="
 python -m pytest -x -q -m "not slow" "${KNOWN_RED[@]}"
 status[tier1]=$?
 
-echo "== [2/7] fused traversal kernel parity (interpret mode) =="
+echo "== [2/8] fused traversal kernel parity (interpret mode) =="
 python -m pytest -q "tests/test_traversal_kernel.py::test_pallas_greedy_search_parity_4k[bloom]"
 status[kernel_parity]=$?
 
-echo "== [3/7] quickstart =="
+echo "== [3/8] quickstart =="
 python examples/quickstart.py
 status[quickstart]=$?
 
-echo "== [4/7] benchmark smoke (frontier_sweep, interpret mode) =="
+echo "== [4/8] benchmark smoke (frontier_sweep, interpret mode) =="
 python -m benchmarks.run --only frontier_sweep --json .
 status[bench_smoke]=$?
 
-echo "== [5/7] docs consistency (links, DESIGN.md § refs, api coverage) =="
+echo "== [5/8] docs consistency (links, DESIGN.md § refs, api coverage) =="
 python scripts/check_docs.py
 status[docs_check]=$?
 
-echo "== [6/7] memory_scaling benchmark smoke (pilot_dtype sweep) =="
+echo "== [6/8] memory_scaling benchmark smoke (pilot_dtype sweep) =="
 python -m benchmarks.run --only memory_scaling --json .
 status[memory_smoke]=$?
 
-echo "== [7/7] serving_qps smoke (bucketed vs naive, D=2, 200 requests) =="
+echo "== [7/8] serving_qps smoke (bucketed vs naive, D=2, 200 requests) =="
 SERVING_QPS_N=4000 SERVING_QPS_REQUESTS=200 SERVING_QPS_DEPTH=2 \
     python -m benchmarks.run --only serving_qps --json .
 status[serving_smoke]=$?
 
+echo "== [8/8] mutable-index smoke (round-trip + streaming_update) =="
+python - <<'PY' && \
+STREAMING_N=3000 STREAMING_REQUESTS=150 STREAMING_RATE=300 \
+    python -m benchmarks.run --only streaming_update --json .
+import numpy as np
+from repro.core import (IndexConfig, SearchParams, SegmentedIndex,
+                        brute_force_topk)
+rng = np.random.default_rng(0)
+x = rng.normal(size=(1200, 24)).astype(np.float32)
+extra = rng.normal(size=(64, 24)).astype(np.float32)
+q = rng.normal(size=(16, 24)).astype(np.float32)
+seg = SegmentedIndex(IndexConfig(R=16, sample_ratio=0.35, n_entry=128,
+                                 build_method="exact"), x)
+params = SearchParams(k=5, ef=32, ef_pilot=32)
+gids = seg.insert(extra)
+ids, _, _ = seg.search(extra[:8], params)
+assert (ids[:, 0] == gids[:8]).all(), "inserted vectors not findable"
+dead = np.unique(ids[:, 0])
+seg.delete(dead)
+ids, _, _ = seg.search(q, params)
+assert not np.isin(ids, dead).any(), "tombstoned id surfaced"
+seg.compact()
+ids, _, _ = seg.search(q, params)
+assert not np.isin(ids, dead).any() and seg.generation == 1
+print("mutable round-trip OK")
+PY
+status[mutable_smoke]=$?
+
 echo
 rc=0
-for k in tier1 kernel_parity quickstart bench_smoke docs_check memory_smoke serving_smoke; do
+for k in tier1 kernel_parity quickstart bench_smoke docs_check memory_smoke serving_smoke mutable_smoke; do
     if [ "${status[$k]}" -eq 0 ]; then
         echo "smoke: $k OK"
     else

@@ -2,7 +2,8 @@ from repro.core.engine import (IndexConfig, PilotANNIndex, ResidencyPlan,
                                ResidencyPlanner, brute_force_topk,
                                recall_at_k)
 from repro.core.multistage import SearchParams
+from repro.core.segments import DeltaSegment, SegmentedIndex, UpdateParams
 
 __all__ = ["IndexConfig", "PilotANNIndex", "ResidencyPlan",
            "ResidencyPlanner", "SearchParams", "brute_force_topk",
-           "recall_at_k"]
+           "recall_at_k", "DeltaSegment", "SegmentedIndex", "UpdateParams"]

@@ -17,6 +17,7 @@ consumes the same index artifacts.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from dataclasses import dataclass
 from functools import partial
 from typing import Dict, Optional, Tuple
@@ -52,6 +53,11 @@ class IndexConfig:
     # if memory_report()["pilot_bytes"] exceeds it (use ResidencyPlanner to
     # solve for knobs that fit)
     pilot_budget_bytes: Optional[int] = None
+    # LRU bound on the jit'd-search cache, which is keyed
+    # (bucket, params, baseline) and would otherwise grow without limit
+    # across param changes (DESIGN.md §5); evictions are counted in
+    # ``PilotANNIndex.jit_evictions`` / ``cache_stats()``
+    jit_cache_capacity: int = 32
 
 
 class PilotANNIndex:
@@ -165,7 +171,10 @@ class PilotANNIndex:
         # so ragged traffic compiles at most len(buckets) executables per
         # params key instead of one per distinct batch size (DESIGN.md §5)
         self.batch_buckets: Tuple[int, ...] = BATCH_BUCKETS
-        self._search_fns: Dict = {}
+        # LRU-bounded (IndexConfig.jit_cache_capacity): param sweeps /
+        # long-lived serving processes stop accumulating dead executables
+        self._search_fns: "OrderedDict" = OrderedDict()
+        self._jit_evictions = 0
 
         if cfg.pilot_budget_bytes is not None:
             got = self.memory_report()["pilot_bytes"]
@@ -238,16 +247,35 @@ class PilotANNIndex:
 
     def _get_fn(self, params: SearchParams, baseline: bool, bucket: int):
         key = (bucket, dataclasses.astuple(params), baseline)
-        if key not in self._search_fns:
+        if key in self._search_fns:
+            self._search_fns.move_to_end(key)          # LRU touch
+        else:
             fn = multistage.baseline_search if baseline else multistage.multistage_search
             self._search_fns[key] = jax.jit(partial(fn, params=params))
+            while len(self._search_fns) > max(1, self.cfg.jit_cache_capacity):
+                self._search_fns.popitem(last=False)   # evict least-recent
+                self._jit_evictions += 1
         return self._search_fns[key]
+
+    @property
+    def jit_evictions(self) -> int:
+        """Executables evicted from the LRU-bounded jit cache so far."""
+        return self._jit_evictions
+
+    def cache_stats(self) -> Dict[str, int]:
+        """Jit-cache observables: live executables, LRU capacity, lifetime
+        eviction count (the unbounded-growth fix, DESIGN.md §5)."""
+        return {"cached_executables": len(self._search_fns),
+                "capacity": self.cfg.jit_cache_capacity,
+                "jit_evictions": self._jit_evictions}
 
     def compile_count(self, params: Optional[SearchParams] = None,
                       baseline: Optional[bool] = None) -> int:
         """Number of cached search executables, optionally filtered by
         params / baseline-ness — the bounded-retracing observable the
-        bucket ladder exists to cap (DESIGN.md §5)."""
+        bucket ladder exists to cap (DESIGN.md §5).  The cache is an LRU
+        bounded by ``IndexConfig.jit_cache_capacity``; see
+        ``cache_stats()`` for the eviction count."""
         pk = None if params is None else dataclasses.astuple(params)
         return sum(1 for (_, p, b) in self._search_fns
                    if (pk is None or p == pk)

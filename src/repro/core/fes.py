@@ -80,9 +80,20 @@ def build_fes(vectors: np.ndarray, candidate_ids: np.ndarray, *, r: int = 32,
                     valid=valid, n=n)
 
 
+def mask_tombstoned(valid: jax.Array, entry_ids: jax.Array,
+                    tombstone: jax.Array) -> jax.Array:
+    """Drop tombstoned entries from an FES validity mask (DESIGN.md §6):
+    ``tombstone`` is the (n+1,) deletion bitmap in ``entry_ids``' id space.
+    Shared by the jnp reference and the Pallas wrapper (kernels/ops.py) so
+    both honor deletes identically; all-false bitmaps are bit-exact."""
+    t = tombstone[jnp.clip(entry_ids, 0, tombstone.shape[0] - 1)]
+    return valid & ~t
+
+
 def fes_select_ref(queries: jax.Array, centroids: jax.Array, entries: jax.Array,
                    entry_ids: jax.Array, valid: jax.Array, L: int,
-                   entries_scale: jax.Array = None
+                   entries_scale: jax.Array = None,
+                   tombstone: jax.Array = None
                    ) -> Tuple[jax.Array, jax.Array]:
     """Pure-jnp reference: route each query to its nearest centroid, score
     only that cluster's entries, return top-L (ids, sq-dists).
@@ -90,8 +101,12 @@ def fes_select_ref(queries: jax.Array, centroids: jax.Array, entries: jax.Array,
     queries (B, d); centroids (r, d); entries (r, C, d); -> (B, L) ids/dists.
     ``entries`` may be stored bf16 or int8 (core/quant.py) — pass the
     per-dim ``entries_scale`` for int8; centroids stay fp32 (they are tiny
-    and routing quality is budget-irrelevant).
+    and routing quality is budget-irrelevant).  ``tombstone``: optional
+    deletion bitmap in the entry-id space — tombstoned entries are treated
+    as padding (DESIGN.md §6).
     """
+    if tombstone is not None:
+        valid = mask_tombstoned(valid, entry_ids, tombstone)
     q = queries.astype(jnp.float32)
     # route
     qc = _xdist(q, centroids)                         # (B, r)

@@ -8,6 +8,15 @@ builder that runs at 10^5–10^6 scale on CPU for the measured experiments:
   2. occlusion pruning (the HNSW/NSG "heuristic"): keep neighbour c only if
      d(q, c) < alpha * min_{kept k} d(k, c),
   3. reverse edges + degree cap.
+
+The prune/augment steps are also the *streaming repair* primitives
+(DESIGN.md §6): ``greedy_candidates`` (best-first candidate collection),
+``prune_one`` (per-node occlusion prune, occluder-only candidates allowed)
+and ``patch_reverse_edges`` (reverse-edge augmentation with re-prune on
+full rows) are what ``core/segments.py`` uses to wire freshly inserted
+nodes into a delta segment — the FreshDiskANN-style insert path.  Their
+invariants (degree bound, candidate subset, alpha monotonicity of the
+occlusion predicate) are pinned by tests/test_graph_build_props.py.
 """
 
 from __future__ import annotations
@@ -108,6 +117,16 @@ def clustered_knn(x: np.ndarray, k: int, *, n_clusters: int = 64,
     return ids, dd
 
 
+def occludes(d_kc, d_qc, alpha: float):
+    """The occlusion predicate (squared-distance domain, single source of
+    truth for build-time pruning AND insert-time repair): an already-kept
+    neighbour k occludes candidate c of node q iff
+    ``d(k, c) < d(q, c) / alpha**2``.  Monotone in alpha: occluded at a
+    larger alpha implies occluded at any smaller alpha (the threshold only
+    grows), which is the invariant tests/test_graph_build_props.py pins."""
+    return d_kc < d_qc / (alpha * alpha)
+
+
 def occlusion_prune(x: np.ndarray, cand_ids: np.ndarray, cand_d: np.ndarray,
                     R: int, *, alpha: float = 1.2,
                     keep_pruned: bool = True) -> np.ndarray:
@@ -132,7 +151,7 @@ def occlusion_prune(x: np.ndarray, cand_ids: np.ndarray, cand_d: np.ndarray,
         diff = kept_vecs - cv[:, None, :]
         d_kc = (diff * diff).sum(-1)                       # (n, R)
         mask_k = np.arange(R)[None, :] < kept_cnt[:, None]
-        occluded = (mask_k & (d_kc < cand_d[:, j][:, None] / (alpha * alpha))).any(axis=1)
+        occluded = (mask_k & occludes(d_kc, cand_d[:, j][:, None], alpha)).any(axis=1)
         take = valid & ~occluded
         rows = np.flatnonzero(take)
         slots = kept_cnt[rows]
@@ -150,6 +169,124 @@ def occlusion_prune(x: np.ndarray, cand_ids: np.ndarray, cand_d: np.ndarray,
             kept[rows, kept_cnt[rows]] = c[rows]
             kept_cnt[rows] += 1
     return kept
+
+
+def prune_one(cand_vecs: np.ndarray, cand_d: np.ndarray, R: int, *,
+              alpha: float = 1.2, edge_ok: Optional[np.ndarray] = None,
+              keep_pruned: bool = True) -> np.ndarray:
+    """Occlusion-prune the candidate list of ONE node (the insert-time
+    repair primitive, DESIGN.md §6).  ``cand_vecs`` (K, d) / ``cand_d``
+    (K,) are the node's collected candidates; candidates with
+    ``edge_ok=False`` (e.g. base-segment nodes a delta node cannot link to)
+    still join the kept set as *occluders* but never consume an edge slot.
+
+    Scans candidates in distance order, keeping c unless an already-kept k
+    occludes it (``occludes``); with ``keep_pruned``, leftover edge slots
+    backfill with the nearest occluded edge-eligible candidates.  Returns
+    the kept-edge indices into the candidate arrays (≤ R, distance order).
+    """
+    K = len(cand_d)
+    edge_ok = np.ones(K, bool) if edge_ok is None else edge_ok
+    order = np.argsort(cand_d, kind="stable")
+    kept_vecs: list = []
+    edges: list = []
+    taken = np.zeros(K, bool)
+    for j in order:
+        if not np.isfinite(cand_d[j]) or len(edges) >= R:
+            continue
+        cv = cand_vecs[j]
+        if kept_vecs:
+            diff = np.stack(kept_vecs) - cv[None, :]
+            if occludes((diff * diff).sum(-1), cand_d[j], alpha).any():
+                continue
+        kept_vecs.append(cv)
+        taken[j] = True
+        if edge_ok[j]:
+            edges.append(j)
+    if keep_pruned:
+        for j in order:
+            if len(edges) >= R:
+                break
+            if not taken[j] and edge_ok[j] and np.isfinite(cand_d[j]):
+                edges.append(j)
+                taken[j] = True
+    return np.asarray(edges, np.int64)
+
+
+def greedy_candidates(neighbors: np.ndarray, x: np.ndarray,
+                      queries: np.ndarray, entry: int, *, ef: int = 64,
+                      live: Optional[np.ndarray] = None
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Numpy best-first beam search over a padded (n, R) adjacency —
+    greedy-search-guided candidate collection for insert-time repair
+    (FreshDiskANN's insert; DESIGN.md §6).  ``live``: optional (n,) mask;
+    dead nodes are traversed *through* but never returned as candidates.
+    Returns (ids (B, ef), d2 (B, ef)), distance-sorted, sentinel ``n`` /
+    ``inf`` padded."""
+    n = x.shape[0]
+    Bq = queries.shape[0]
+    out_ids = np.full((Bq, ef), n, np.int64)
+    out_d = np.full((Bq, ef), np.inf, np.float32)
+    for b in range(Bq):
+        q = queries[b]
+        dv = x[entry] - q
+        beam = {entry: float((dv * dv).sum())}
+        checked: set = set()
+        visited = {entry}
+        while True:
+            frontier = [(d, u) for u, d in beam.items() if u not in checked]
+            if not frontier:
+                break
+            _, u = min(frontier)
+            checked.add(u)
+            nbrs = neighbors[u]
+            nbrs = nbrs[nbrs < n]
+            fresh = [v for v in nbrs if v not in visited]
+            visited.update(fresh)
+            for v in fresh:
+                dv = x[v] - q
+                beam[v] = float((dv * dv).sum())
+            if len(beam) > ef:
+                beam = dict(sorted(beam.items(), key=lambda kv: kv[1])[:ef])
+        items = sorted(beam.items(), key=lambda kv: kv[1])
+        if live is not None:
+            items = [(u, d) for u, d in items if live[u]]
+        items = items[:ef]
+        for j, (u, d) in enumerate(items):
+            out_ids[b, j] = u
+            out_d[b, j] = d
+    return out_ids, out_d
+
+
+def patch_reverse_edges(neighbors: np.ndarray, x: np.ndarray,
+                        src_ids: np.ndarray, n: int, R: int, *,
+                        alpha: float = 1.2) -> np.ndarray:
+    """Reverse-edge augmentation for freshly inserted nodes (in place;
+    DESIGN.md §6): for every edge ``u -> v`` of a new node ``u`` in
+    ``src_ids``, add the reverse ``v -> u``.  A free slot takes it
+    directly; a full row is *re-pruned* — ``prune_one`` over v's current
+    neighbours ∪ {u} — so the degree bound R is never exceeded and the row
+    keeps the occlusion-diverse subset (FreshDiskANN's robust-prune on
+    overflow).  Returns ``neighbors`` for convenience."""
+    for u in np.asarray(src_ids, np.int64):
+        for v in neighbors[u]:
+            if v >= n or v == u:
+                continue
+            row = neighbors[v]
+            deg = int((row < n).sum())
+            if (row[:deg] == u).any():
+                continue
+            if deg < R:
+                row[deg] = u
+                continue
+            cand = np.concatenate([row[:deg], [u]]).astype(np.int64)
+            diff = x[cand] - x[v][None, :]
+            cd = (diff * diff).sum(-1).astype(np.float32)
+            kept = prune_one(x[cand], cd, R, alpha=alpha)
+            new_row = np.full(row.shape[0], n, row.dtype)
+            new_row[:len(kept)] = cand[kept]
+            neighbors[v] = new_row
+    return neighbors
 
 
 def add_reverse_edges(neighbors: np.ndarray, n: int, R: int) -> np.ndarray:

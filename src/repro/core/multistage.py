@@ -170,13 +170,22 @@ def refine_stage(arrays: Dict[str, jax.Array], params: SearchParams,
 
     Returns ``(seed_id, seed_d, refine_dist)``: the refined beam mapped
     back to FULL ids + its exact distances (stage ③'s seed), and the
-    per-query distance-computation count."""
+    per-query distance-computation count.
+
+    Deletes (DESIGN.md §6): when ``arrays`` carries a ``pilot_tombstone``
+    bitmap, tombstoned pilot candidates are sentinel-masked out of the
+    handed-over beam and the bounded traversal, so a deleted node can
+    never ride the pilot beam into stage ③."""
     nk = arrays["pilot_to_full"].shape[0] - 1
     dp = arrays["primary"].shape[1]
     ptf = arrays["pilot_to_full"]
     Bq = queries.shape[0]
-    cand_full = ptf[cand_id]
+    ptomb = arrays.get("pilot_tombstone")
     valid = cand_id < nk
+    if ptomb is not None:
+        cand_id = T.sentinel_mask(ptomb, cand_id, nk)
+        valid = cand_id < nk
+    cand_full = ptf[cand_id]
     if arrays["primary"].dtype != jnp.float32:    # quantized: exact re-score
         d_full = jnp.where(valid,
                            T.sq_dists(queries, arrays["rot_vecs"][cand_full]),
@@ -196,7 +205,8 @@ def refine_stage(arrays: Dict[str, jax.Array], params: SearchParams,
                           arrays["rot_vecs"], nk,
                           entry_ids=jnp.full((Bq, 1), nk, jnp.int32),
                           iters=params.refine_iters, visited=visited,
-                          extra_id=cand_id, extra_d=d_full, dist_fn=dist2)
+                          extra_id=cand_id, extra_d=d_full, dist_fn=dist2,
+                          tombstone=ptomb)
     return ptf[st2.cand_id], st2.cand_d, n_rerank + st2.n_dist
 
 
@@ -210,6 +220,10 @@ def multistage_search(arrays: Dict[str, jax.Array], params: SearchParams,
       pilot_to_full (nk+1,); fes_centroids (r, d), fes_entries (r, C, dp)
       [+ fes_entries_scale (dp,)], fes_entry_ids (r, C) *pilot* ids,
       fes_valid (r, C); coarse layer + pilot_default_entry.
+    Mutable-index arrays additionally carry ``tombstone`` (n+1,) /
+    ``pilot_tombstone`` (nk+1,) deletion bitmaps (DESIGN.md §6): tombstoned
+    ids are sentinel-masked out of FES, every traversal stage and the
+    stage handovers; absent keys (or all-false bitmaps) are bit-exact.
     Queries must already be SVD-rotated (engine handles it).
     Returns (ids (B, k), dists (B, k), stats).
     """
@@ -221,6 +235,8 @@ def multistage_search(arrays: Dict[str, jax.Array], params: SearchParams,
     q_primary = queries[:, :dp]
     ptf = arrays["pilot_to_full"]
     pilot_scale = arrays.get("primary_scale")
+    tomb = arrays.get("tombstone")
+    ptomb = arrays.get("pilot_tombstone")
 
     # ---- stage 0: entry selection --------------------------------------
     entry_full = None          # full-id entries (pilot disabled paths)
@@ -228,7 +244,8 @@ def multistage_search(arrays: Dict[str, jax.Array], params: SearchParams,
         entry_pilot, _ = F.fes_select_ref(
             q_primary, arrays["fes_centroids"], arrays["fes_entries"],
             arrays["fes_entry_ids"], arrays["fes_valid"], params.fes_L,
-            entries_scale=arrays.get("fes_entries_scale"))
+            entries_scale=arrays.get("fes_entries_scale"),
+            tombstone=ptomb)
         if not params.use_pilot:
             entry_full = ptf[entry_pilot]
         # FES cost: one centroid pass + one cluster pass (counted per query)
@@ -259,7 +276,7 @@ def multistage_search(arrays: Dict[str, jax.Array], params: SearchParams,
                                 use_persistent=params.use_persistent_traversal)
         st1 = T.greedy_search(spec1, q_primary, arrays["sub_neighbors"],
                               arrays["primary"], nk, entry_pilot,
-                              vec_scale=pilot_scale)
+                              vec_scale=pilot_scale, tombstone=ptomb)
         stats["pilot_dist"] = st1.n_dist
         stats["pilot_hops"] = st1.n_hops
         stats["pilot_expanded"] = st1.n_exp
@@ -298,13 +315,16 @@ def multistage_search(arrays: Dict[str, jax.Array], params: SearchParams,
         st3 = T.greedy_search(spec3, queries, arrays["full_neighbors"],
                               arrays["rot_vecs"], n,
                               entry_ids=jnp.full((Bq, 1), n, jnp.int32),
-                              extra_id=seed_id, extra_d=seed_d)
+                              extra_id=seed_id, extra_d=seed_d,
+                              tombstone=tomb)
     elif params.use_pilot:  # pilot w/o refine: re-score pilot beam fully
         st3 = T.greedy_search(spec3, queries, arrays["full_neighbors"],
-                              arrays["rot_vecs"], n, entry_ids=cand_full)
+                              arrays["rot_vecs"], n, entry_ids=cand_full,
+                              tombstone=tomb)
     else:
         st3 = T.greedy_search(spec3, queries, arrays["full_neighbors"],
-                              arrays["rot_vecs"], n, entry_ids=entry_full)
+                              arrays["rot_vecs"], n, entry_ids=entry_full,
+                              tombstone=tomb)
     stats["final_dist"] = st3.n_dist
     stats["final_hops"] = st3.n_hops
     stats["final_expanded"] = st3.n_exp
@@ -333,7 +353,8 @@ def baseline_search(arrays: Dict[str, jax.Array], params: SearchParams,
     slots, entry_cost = hierarchical_entries(arrays, queries, params)
     entries = arrays["coarse_ids"][slots]
     st = T.greedy_search(spec, queries, arrays["full_neighbors"],
-                         arrays["rot_vecs"], n, entries)
+                         arrays["rot_vecs"], n, entries,
+                         tombstone=arrays.get("tombstone"))
     ids, dists = T.topk_from_state(st, params.k)
     zeros = jnp.zeros((Bq,), jnp.int32)
     return ids, dists, {"fes_dist": entry_cost,

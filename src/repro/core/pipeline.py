@@ -80,7 +80,15 @@ class _DonatedStages:
     """The donated variant of the stage pair, presenting the same
     ``pilot(queries)`` / ``cpu(queries, cand_id, cand_d, visited)``
     interface as the plain jitted functions while cycling the visited
-    filter's storage through a per-shape pool (module docstring)."""
+    filter's storage through a per-shape pool (module docstring).
+
+    Mutable-index serving (a ``core/segments.SegmentedIndex`` base) passes
+    the deletion bitmaps as optional trailing *arguments* — ``pilot(queries,
+    pilot_tomb)`` / ``cpu(queries, cand_id, cand_d, visited, pilot_tomb,
+    tomb)`` — because closure-captured arrays are burned into the trace as
+    constants, while same-shape argument replacement (a delete) never
+    retraces (DESIGN.md §6).  Omitting them keeps the immutable fast path
+    (a separate trace without the masking ops)."""
 
     def __init__(self, arrays: Dict[str, jax.Array], params: SearchParams):
         self.params = params
@@ -93,24 +101,28 @@ class _DonatedStages:
                         params.use_persistent_traversal)
 
         @partial(jax.jit, donate_argnums=(1,))
-        def pilot_fn(queries, visited_scratch):
+        def pilot_fn(queries, visited_scratch, pilot_tomb=None):
             # clear the recycled filter in place (donated: output aliases it)
             cleared = visited_scratch ^ visited_scratch
             qp = queries[:, :dp]
             entry_ids, _ = F.fes_select_ref(
                 qp, arrays["fes_centroids"], arrays["fes_entries"],
                 arrays["fes_entry_ids"], arrays["fes_valid"], params.fes_L,
-                entries_scale=arrays.get("fes_entries_scale"))
+                entries_scale=arrays.get("fes_entries_scale"),
+                tombstone=pilot_tomb)
             st1 = T.greedy_search(_pilot_spec(params), qp,
                                   arrays["sub_neighbors"], arrays["primary"],
                                   self.nk, entry_ids, visited=cleared,
-                                  vec_scale=pilot_scale)
+                                  vec_scale=pilot_scale, tombstone=pilot_tomb)
             return st1.cand_id, st1.cand_d, st1.visited
 
         @partial(jax.jit, donate_argnums=(1, 2, 3))
-        def cpu_fn(queries, cand_id, cand_dp, visited):
+        def cpu_fn(queries, cand_id, cand_dp, visited, pilot_tomb=None,
+                   tomb=None):
             Bq = queries.shape[0]
-            seed_id, seed_d, _ = refine_stage(arrays, params, queries,
+            arr = arrays if pilot_tomb is None else dict(
+                arrays, pilot_tombstone=pilot_tomb, tombstone=tomb)
+            seed_id, seed_d, _ = refine_stage(arr, params, queries,
                                               cand_id, cand_dp,
                                               visited=visited)
             spec3 = T.TraversalSpec(ef=params.ef,
@@ -121,7 +133,8 @@ class _DonatedStages:
             st3 = T.greedy_search(spec3, queries, arrays["full_neighbors"],
                                   arrays["rot_vecs"], n,
                                   entry_ids=jnp.full((Bq, 1), n, jnp.int32),
-                                  extra_id=seed_id, extra_d=seed_d)
+                                  extra_id=seed_id, extra_d=seed_d,
+                                  tombstone=tomb)
             ids, dists = T.topk_from_state(st3, params.k)
             # hand the boundary buffers back so their (donated) storage is
             # aliased into outputs instead of freed-and-reallocated; the
@@ -130,7 +143,7 @@ class _DonatedStages:
 
         self._pilot_fn, self._cpu_fn = pilot_fn, cpu_fn
 
-    def pilot(self, queries: jax.Array):
+    def pilot(self, queries: jax.Array, *tombs):
         Bq = queries.shape[0]
         if self._pallas and Bq % 8 != 0:
             raise ValueError(
@@ -140,11 +153,11 @@ class _DonatedStages:
         pool = self._pool.get(Bq)
         scratch = pool.pop() if pool else visited_buffer(self.params, Bq,
                                                          self.nk)
-        return self._pilot_fn(queries, scratch)
+        return self._pilot_fn(queries, scratch, *tombs)
 
-    def cpu(self, queries: jax.Array, cand_id, cand_dp, visited):
+    def cpu(self, queries: jax.Array, cand_id, cand_dp, visited, *tombs):
         ids, dists, _cid, _cd, vis_r = self._cpu_fn(queries, cand_id,
-                                                    cand_dp, visited)
+                                                    cand_dp, visited, *tombs)
         self._pool.setdefault(queries.shape[0], []).append(vis_r)
         return ids, dists
 
@@ -162,7 +175,14 @@ def split_stages(arrays: Dict[str, jax.Array], params: SearchParams,
     ``cpu_stages`` invalidates the caller's arrays — and the visited
     filter's storage is recycled through ``pilot_stage``'s donated scratch
     argument, so the steady-state serving loop stops allocating it.  The
-    interface and the results are identical either way."""
+    interface and the results are identical either way.
+
+    Serving a mutable ``core/segments.SegmentedIndex`` (DESIGN.md §6)
+    passes the deletion bitmaps as optional trailing arguments —
+    ``pilot_stage(queries, pilot_tomb)`` / ``cpu_stages(..., pilot_tomb,
+    tomb)`` — so deletes flow into already-compiled executables without a
+    retrace (closure-captured arrays would be baked in as constants);
+    omitted, the immutable traces carry no masking ops."""
     if donate:
         stages = _DonatedStages(arrays, params)
         return stages.pilot, stages.cpu
@@ -173,23 +193,28 @@ def split_stages(arrays: Dict[str, jax.Array], params: SearchParams,
     pilot_scale = arrays.get("primary_scale")
 
     @jax.jit
-    def pilot_stage(queries):
+    def pilot_stage(queries, pilot_tomb=None):
         B0 = queries.shape[0]
         qpad, _ = pad_for_pallas(queries, params)
         qp = qpad[:, :dp]
         entry_ids, _ = F.fes_select_ref(
             qp, arrays["fes_centroids"], arrays["fes_entries"],
             arrays["fes_entry_ids"], arrays["fes_valid"], params.fes_L,
-            entries_scale=arrays.get("fes_entries_scale"))
+            entries_scale=arrays.get("fes_entries_scale"),
+            tombstone=pilot_tomb)
         st1 = T.greedy_search(_pilot_spec(params), qp,
                               arrays["sub_neighbors"], arrays["primary"], nk,
-                              entry_ids, vec_scale=pilot_scale)
+                              entry_ids, vec_scale=pilot_scale,
+                              tombstone=pilot_tomb)
         return st1.cand_id[:B0], st1.cand_d[:B0], st1.visited[:B0]
 
     @jax.jit
-    def cpu_stages(queries, cand_id, cand_dp, visited):
+    def cpu_stages(queries, cand_id, cand_dp, visited, pilot_tomb=None,
+                   tomb=None):
         Bq = queries.shape[0]
-        seed_id, seed_d, _ = refine_stage(arrays, params, queries,
+        arr = arrays if pilot_tomb is None else dict(
+            arrays, pilot_tombstone=pilot_tomb, tombstone=tomb)
+        seed_id, seed_d, _ = refine_stage(arr, params, queries,
                                           cand_id, cand_dp, visited=visited)
         spec3 = T.TraversalSpec(ef=params.ef, visited_mode=params.visited_mode,
                                 bloom_bits=params.bloom_bits,
@@ -198,7 +223,8 @@ def split_stages(arrays: Dict[str, jax.Array], params: SearchParams,
         st3 = T.greedy_search(spec3, queries, arrays["full_neighbors"],
                               arrays["rot_vecs"], n,
                               entry_ids=jnp.full((Bq, 1), n, jnp.int32),
-                              extra_id=seed_id, extra_d=seed_d)
+                              extra_id=seed_id, extra_d=seed_d,
+                              tombstone=tomb)
         return T.topk_from_state(st3, params.k)
 
     return pilot_stage, cpu_stages

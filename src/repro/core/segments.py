@@ -1,0 +1,608 @@
+"""Segmented mutable index: streaming inserts/deletes under live serving
+(DESIGN.md §6).
+
+The build→engine→serving path used to assume ONE immutable artifact: a
+frozen ``Graph`` out of ``graph_build``, static pilot payloads planned once
+by the residency planner.  Real deployments (RAG stores, semantic caches)
+upsert continuously, so ``SegmentedIndex`` refactors the index core into a
+FreshDiskANN-style segmented store:
+
+* **base segment** — today's build output (``PilotANNIndex``), immutable:
+  its adjacency and vector tables are never edited in place.  Deletes are
+  a *tombstone bitmap* sentinel-masked into every search path
+  (``core/traversal.sentinel_mask``, honored by the jnp stages, FES and
+  the Pallas kernels alike; all-false bitmaps are bit-exact with the
+  tombstone-free build).
+* **delta segments** — append-only ``DeltaSegment``s, each carrying its
+  own adjacency table, raw/rotated/pilot vector tables (pilot rows reuse
+  the ``core/quant.py`` encodings of ``IndexConfig.pilot_dtype``),
+  optional FES entry buckets, a private visited-filter id-space
+  (0..cap with sentinel ``cap``) and its own tombstones.  ``insert``
+  wires new nodes in with incremental graph repair — greedy-search-guided
+  candidate collection (through the base index *and* the delta graph),
+  occlusion pruning against the combined base+delta candidates
+  (``graph_build.prune_one``; base candidates act as occluders only,
+  since edges cannot point across segments) and reverse-edge patching
+  within the delta (``graph_build.patch_reverse_edges``).
+* **search fan-out** — queries run the full multistage search on the base
+  and an exact (or pilot+exact-rescore, past ``brute_threshold``) search
+  per delta, then the beams merge *exactly* by distance in the disjoint
+  global id space.  Global ids are monotone (never reused) and survive
+  ``compact()``.
+* **compact()** — folds live rows of every segment back into a fresh base
+  (and, when a ``pilot_budget_bytes`` is set, re-runs the
+  ``ResidencyPlanner`` over the merged corpus so the pilot dtype/geometry
+  re-fit the budget at the new scale), clearing tombstones and deltas.
+
+``serving/server.ThroughputEngine`` consumes this layer through an upsert
+queue drained between pump batches, so mutation and query traffic
+interleave (benchmarks/streaming_update.py measures the interference).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fes, graph_build, quant
+from repro.core import traversal as T
+from repro.core.engine import IndexConfig, PilotANNIndex, ResidencyPlanner
+from repro.core.multistage import SearchParams, StatsDict
+
+
+@dataclass(frozen=True)
+class UpdateParams:
+    """Streaming-update knobs (full field reference: docs/api.md)."""
+    # initial delta-segment row capacity; doubles on overflow so device
+    # shapes (and thus jit signatures) churn only O(log inserts) times
+    delta_capacity: int = 256
+    # insert-time candidate collection: beam width of the greedy searches
+    # (base index + delta graph) that feed the occlusion prune
+    repair_ef: int = 64
+    # candidates kept per source (delta graph / batch peers / base) before
+    # the combined occlusion prune
+    repair_knn: int = 16
+    # occlusion-prune alpha for insert repair (same predicate as the
+    # offline build: graph_build.occludes)
+    repair_alpha: float = 1.2
+    # delta segments at or below this live count are scored exactly
+    # (brute force); above it the delta's own pilot graph + FES drive a
+    # traversal with an exact re-score of the beam
+    brute_threshold: int = 2048
+    # collect base-segment candidates and let them join the occlusion
+    # prune as occluder-only entries (edges never cross segments)
+    use_base_occluders: bool = True
+    # fold deltas into a fresh base once total delta live rows exceed this
+    # fraction of the base (None = manual compact() only)
+    auto_compact_fraction: Optional[float] = None
+
+
+# ---------------------------------------------------------------------------
+# Delta-segment search (jit'd; shapes are stable per capacity rung)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k",))
+def _delta_brute_topk(q: jax.Array, rot: jax.Array, valid: jax.Array,
+                      k: int) -> Tuple[jax.Array, jax.Array]:
+    """Exact top-k of one delta segment: score every live row."""
+    d2 = T.sq_dists(q.astype(jnp.float32), rot)
+    d2 = jnp.where(valid[None, :], d2, jnp.inf)
+    neg, idx = jax.lax.top_k(-d2, k)
+    return idx.astype(jnp.int32), -neg
+
+
+@partial(jax.jit, static_argnames=("params", "k"))
+def _delta_graph_topk(arrays: Dict[str, jax.Array], q: jax.Array,
+                      params: SearchParams, k: int
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Large-delta search: FES/medoid entries → traversal on the delta's
+    own pilot table (quantized) → exact re-score of the beam from the
+    full-d rotated rows (mirrors the base's stage ①→② handover)."""
+    cap = arrays["rot_vecs"].shape[0] - 1
+    dp = arrays["primary"].shape[1]
+    Bq = q.shape[0]
+    qp = q[:, :dp]
+    if "fes_centroids" in arrays:
+        L = min(params.fes_L, arrays["fes_entry_ids"].shape[1])
+        entries, _ = fes.fes_select_ref(
+            qp, arrays["fes_centroids"], arrays["fes_entries"],
+            arrays["fes_entry_ids"], arrays["fes_valid"], L,
+            entries_scale=arrays.get("fes_entries_scale"))
+    else:
+        entries = jnp.broadcast_to(arrays["entry"][None, :], (Bq, 1))
+    spec = T.TraversalSpec(ef=max(params.ef, k),
+                           visited_mode=params.visited_mode,
+                           bloom_bits=params.bloom_bits,
+                           max_iters=params.max_iters,
+                           frontier_width=params.frontier_width)
+    st = T.greedy_search(spec, qp, arrays["neighbors"], arrays["primary"],
+                         cap, entries, vec_scale=arrays.get("primary_scale"))
+    ok = (st.cand_id < cap) & arrays["valid"][jnp.clip(st.cand_id, 0, cap - 1)]
+    d = jnp.where(ok, T.sq_dists(q, arrays["rot_vecs"][st.cand_id]), jnp.inf)
+    neg, idx = jax.lax.top_k(-d, min(k, d.shape[1]))
+    ids = jnp.take_along_axis(st.cand_id, idx, axis=1)
+    return ids, -neg, st.n_dist + jnp.sum(ok, axis=1).astype(jnp.int32)
+
+
+class DeltaSegment:
+    """One append-only mutable segment: host-side build state (raw/rotated
+    rows, adjacency, tombstones, global ids) plus refreshed device arrays
+    in its own compact id space 0..cap (sentinel ``cap``)."""
+
+    def __init__(self, d: int, dp: int, R: int, cap: int):
+        self.d, self.dp, self.R = d, dp, R
+        self.cap = cap
+        self.m = 0                       # rows appended so far
+        self.raw = np.zeros((cap, d), np.float32)
+        self.rot = np.zeros((cap, d), np.float32)
+        self.gids = np.full(cap, -1, np.int64)
+        self.tomb = np.zeros(cap, bool)
+        self.neighbors = np.full((cap, R), cap, np.int32)
+        self.entry = 0                   # live medoid (traversal entry)
+        self.arrays: Dict[str, jax.Array] = {}
+
+    def live_mask(self) -> np.ndarray:
+        mask = np.zeros(self.cap, bool)
+        mask[:self.m] = ~self.tomb[:self.m]
+        return mask
+
+    def live_count(self) -> int:
+        return int(self.live_mask().sum())
+
+    def grow(self, need: int) -> None:
+        """Double the capacity until ``m + need`` rows fit; device shapes
+        change, so jit signatures churn only O(log inserts) times."""
+        new_cap = self.cap
+        while new_cap < self.m + need:
+            new_cap *= 2
+        if new_cap == self.cap:
+            return
+        pad = new_cap - self.cap
+        self.raw = np.concatenate([self.raw, np.zeros((pad, self.d), np.float32)])
+        self.rot = np.concatenate([self.rot, np.zeros((pad, self.d), np.float32)])
+        self.gids = np.concatenate([self.gids, np.full(pad, -1, np.int64)])
+        self.tomb = np.concatenate([self.tomb, np.zeros(pad, bool)])
+        nb = np.full((new_cap, self.R), new_cap, np.int32)
+        old = self.neighbors
+        nb[:self.cap] = np.where(old == self.cap, new_cap, old)  # remap sentinel
+        self.neighbors = nb
+        self.cap = new_cap
+
+    def refresh(self, pilot_dtype: str, *, fes_threshold: int = 2048) -> None:
+        """Rebuild the device arrays after a mutation batch: sentinel-mask
+        tombstoned edge targets, (re)quantize the pilot rows, recompute the
+        live-medoid entry, and (past ``fes_threshold`` live rows) the
+        delta's own FES buckets."""
+        cap, R, dp = self.cap, self.R, self.dp
+        live = self.live_mask()
+        nbrs = self.neighbors.copy()
+        dead_target = (nbrs < cap) & self.tomb[np.clip(nbrs, 0, cap - 1)]
+        nbrs[dead_target] = cap
+        table = np.concatenate([nbrs, np.full((1, R), cap, np.int32)], axis=0)
+        rotz = np.concatenate([self.rot, np.zeros((1, self.d), np.float32)], 0)
+        pdata, pscale = quant.quantize(rotz[:, :dp], pilot_dtype)
+        arrays: Dict[str, jax.Array] = {
+            "neighbors": jnp.asarray(table),
+            "rot_vecs": jnp.asarray(rotz),
+            "primary": jnp.asarray(pdata),
+            "valid": jnp.asarray(live),
+        }
+        if pscale is not None:
+            arrays["primary_scale"] = jnp.asarray(pscale)
+        live_idx = np.flatnonzero(live)
+        if len(live_idx):
+            mu = self.rot[live_idx].mean(axis=0, keepdims=True)
+            self.entry = int(live_idx[np.argmin(
+                ((self.rot[live_idx] - mu) ** 2).sum(axis=1))])
+        arrays["entry"] = jnp.asarray(np.array([self.entry], np.int32))
+        if len(live_idx) > fes_threshold:
+            r = int(min(8, max(2, len(live_idx) // 128)))
+            fidx = fes.build_fes(self.rot[:, :dp], live_idx, r=r,
+                                 n_entry=min(len(live_idx), 512))
+            edata, escale = quant.quantize(fidx.entries, pilot_dtype)
+            arrays["fes_centroids"] = jnp.asarray(fidx.centroids)
+            arrays["fes_entries"] = jnp.asarray(edata)
+            arrays["fes_entry_ids"] = jnp.asarray(fidx.entry_ids)
+            arrays["fes_valid"] = jnp.asarray(fidx.valid)
+            if escale is not None:
+                arrays["fes_entries_scale"] = jnp.asarray(escale)
+        self.arrays = arrays
+
+    def pilot_bytes(self) -> int:
+        """Accelerator-resident stage-① bytes of this segment (adjacency +
+        quantized pilot rows + FES buckets), memory_report() granularity."""
+        keys = ("neighbors", "primary", "primary_scale", "fes_entries",
+                "fes_entries_scale", "fes_centroids")
+        return sum(int(a.size * a.dtype.itemsize)
+                   for k, a in self.arrays.items() if k in keys)
+
+
+class SegmentedIndex:
+    """Mutable PilotANN index: immutable base + append-only delta segments
+    + tombstones, searched by fan-out with an exact beam merge (module
+    docstring; DESIGN.md §6).  Results are *global ids*: assigned
+    monotonically at insert time, stable across ``compact()``."""
+
+    def __init__(self, cfg: IndexConfig, vectors: np.ndarray,
+                 update_params: Optional[UpdateParams] = None):
+        self.up = update_params or UpdateParams()
+        self._vectors = np.ascontiguousarray(vectors, np.float32)
+        self.base = PilotANNIndex(cfg, self._vectors)
+        n = self.base.n
+        self._base_gids = np.arange(n, dtype=np.int64)
+        self._base_tomb = np.zeros(n, bool)
+        self._gid_dead = np.zeros(n, bool)     # global tombstone lookup
+        self._next_gid = n
+        self.deltas: List[DeltaSegment] = []
+        self.generation = 0                    # bumped by compact()
+        self._warm_ctx: Optional[Tuple[SearchParams, Tuple[int, ...]]] = None
+        self._graph_warmed: set = set()
+        self._install_base_tombstones()
+
+    # -- delegation --------------------------------------------------------
+    @property
+    def d(self) -> int:
+        return self.base.d
+
+    @property
+    def n_total(self) -> int:
+        return self.base.n + sum(s.m for s in self.deltas)
+
+    @property
+    def n_live(self) -> int:
+        return int((~self._base_tomb).sum()) + \
+            sum(s.live_count() for s in self.deltas)
+
+    def rotate_queries(self, queries: np.ndarray) -> jax.Array:
+        return self.base.rotate_queries(queries)
+
+    def warmup(self, params: SearchParams,
+               buckets: Optional[Tuple[int, ...]] = None) -> None:
+        """Precompile the mutation/merge-path executables outside any
+        latency-sensitive serving window: the repair candidate search
+        (``insert`` runs it per batch at the bucket rungs) and the
+        delta-segment scorer at the current capacity rung.  Capacity
+        doubling still recompiles mid-serve, but only O(log inserts)
+        times (DESIGN.md §6)."""
+        from repro.core.multistage import BATCH_BUCKETS
+        buckets = buckets or BATCH_BUCKETS
+        kk = max(1, self.up.repair_knn)
+        if self.up.use_base_occluders:
+            for b in buckets:
+                self._base_candidates(np.zeros((b, self.d), np.float32), kk)
+        cap = self.deltas[-1].cap if self.deltas else \
+            max(self.up.delta_capacity, 8)
+        rot = jnp.zeros((cap, self.d), jnp.float32)
+        valid = jnp.zeros((cap,), bool)
+        k_eff = max(1, min(params.k, cap))
+        for b in buckets:
+            _delta_brute_topk(jnp.zeros((b, self.d), jnp.float32), rot,
+                              valid, k_eff)
+        # remember the serving context so a later brute->graph threshold
+        # crossing can compile _delta_graph_topk during the mutation drain
+        # instead of stalling the first post-crossing serve batch
+        self._warm_ctx = (params, tuple(buckets))
+        for seg in self.deltas:
+            self._maybe_warm_graph_path(seg)
+
+    def _maybe_warm_graph_path(self, seg: "DeltaSegment") -> None:
+        """Compile the above-``brute_threshold`` delta search for ``seg``'s
+        current shape signature, once, off the serve path (called after a
+        mutation refresh; no-op until ``warmup`` has recorded a serving
+        context or while the delta is still brute-scored)."""
+        if (self._warm_ctx is None
+                or seg.live_count() <= self.up.brute_threshold):
+            return
+        params, buckets = self._warm_ctx
+        key = (id(seg), seg.cap, frozenset(seg.arrays.keys()))
+        if key in self._graph_warmed:
+            return
+        k_eff = max(1, min(params.k, seg.cap))
+        for b in buckets:
+            _delta_graph_topk(seg.arrays,
+                              jnp.zeros((b, self.d), jnp.float32),
+                              params, k_eff)
+        self._graph_warmed.add(key)
+
+    # -- tombstones --------------------------------------------------------
+    def _install_base_tombstones(self) -> None:
+        """Refresh the device deletion bitmaps the base search consumes
+        (arrays are jit *arguments*, so same-shape replacement never
+        retraces).  Keys exist from construction — all-false bitmaps are
+        bit-exact with the tombstone-free build (tested)."""
+        n, nk = self.base.n, self.base.n_pilot
+        tomb = np.zeros(n + 1, bool)
+        tomb[:n] = self._base_tomb
+        ptomb = np.zeros(nk + 1, bool)
+        ptomb[:nk] = self._base_tomb[self.base.keep_ids]
+        self.base.arrays["tombstone"] = jnp.asarray(tomb)
+        self.base.arrays["pilot_tombstone"] = jnp.asarray(ptomb)
+
+    def is_live(self, gids: np.ndarray) -> np.ndarray:
+        """Liveness of global ids (False for unknown/negative ids)."""
+        g = np.asarray(gids, np.int64)
+        ok = (g >= 0) & (g < self._next_gid)
+        return ok & ~self._gid_dead[np.clip(g, 0, self._next_gid - 1)]
+
+    def delete(self, gids) -> int:
+        """Tombstone global ids; returns how many were live before.  The
+        bitmap is honored by every search path (beam merge, FES, jnp and
+        Pallas traversal) from the next query on; storage is reclaimed by
+        ``compact()``."""
+        changed_base = False
+        changed = set()
+        count = 0
+        for g in np.atleast_1d(np.asarray(gids, np.int64)):
+            if g < 0 or g >= self._next_gid or self._gid_dead[g]:
+                continue
+            self._gid_dead[g] = True
+            count += 1
+            i = np.searchsorted(self._base_gids, g)
+            if i < len(self._base_gids) and self._base_gids[i] == g:
+                self._base_tomb[i] = True
+                changed_base = True
+                continue
+            for si, seg in enumerate(self.deltas):
+                j = np.searchsorted(seg.gids[:seg.m], g)
+                if j < seg.m and seg.gids[j] == g:
+                    seg.tomb[j] = True
+                    changed.add(si)
+                    break
+        if changed_base:
+            self._install_base_tombstones()
+        for si in changed:
+            self.deltas[si].refresh(self.base.cfg.pilot_dtype,
+                                    fes_threshold=self.up.brute_threshold)
+            self._maybe_warm_graph_path(self.deltas[si])
+        return count
+
+    # -- insert ------------------------------------------------------------
+    def _ensure_delta(self, need: int) -> DeltaSegment:
+        if not self.deltas:
+            self.deltas.append(DeltaSegment(
+                self.d, self.base.reducer.d_primary, self.base.cfg.R,
+                max(self.up.delta_capacity, 8)))
+        seg = self.deltas[-1]
+        seg.grow(need)
+        return seg
+
+    def _base_candidates(self, rot_q: np.ndarray, kk: int
+                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Greedy-search-guided base candidates (ids, dists, vectors) for
+        insert-time repair: the engine's cached bucketed executable on
+        already-rotated queries.  Only ids/dists/vecs are materialized
+        (the full stats tree would cost more host transfers than the
+        search itself), and the candidate-vector gather runs at the
+        *padded* bucket shape so its executable is shared across ragged
+        insert batches (one compile per rung, warmed by ``warmup``)."""
+        from repro.core.multistage import pad_to_bucket
+        sp = SearchParams(k=kk, ef=max(self.up.repair_ef, kk),
+                          ef_pilot=max(self.up.repair_ef, kk))
+        q, B = pad_to_bucket(jnp.asarray(rot_q), self.base.batch_buckets)
+        fn = self.base._get_fn(sp, False, q.shape[0])
+        ids, dists, _ = fn(self.base.arrays, queries=q)
+        vecs = self.base.arrays["rot_vecs"][jnp.clip(ids, 0, self.base.n)]
+        return (np.asarray(ids[:B]), np.asarray(dists[:B]),
+                np.asarray(vecs[:B]))
+
+    def insert(self, vectors: np.ndarray) -> np.ndarray:
+        """Append vectors as new live nodes; returns their global ids.
+
+        Incremental graph repair (DESIGN.md §6): candidates are collected
+        by greedy search through the base index and the delta graph (plus
+        exact scoring of the small cases and the batch peers), occlusion-
+        pruned with the same predicate as the offline build, and reverse
+        edges are patched within the delta with re-prune on full rows —
+        the build's prune/augment helpers, reused one node at a time."""
+        vectors = np.ascontiguousarray(vectors, np.float32)
+        if vectors.ndim == 1:
+            vectors = vectors[None, :]
+        b = len(vectors)
+        if b == 0:
+            return np.zeros(0, np.int64)
+        up = self.up
+        rot = np.ascontiguousarray(self.base.reducer.rotate(vectors),
+                                   np.float32)
+        seg = self._ensure_delta(b)
+        m0, cap, R = seg.m, seg.cap, seg.R
+
+        # ---- candidate collection -------------------------------------
+        cand_parts: List[Tuple[np.ndarray, np.ndarray, np.ndarray, bool]] = []
+        live_idx = np.flatnonzero(seg.live_mask())
+        kk = max(1, up.repair_knn)
+        if len(live_idx):
+            if len(live_idx) <= up.brute_threshold:
+                d2 = graph_build.pairwise_sq_dists(rot, seg.rot[live_idx])
+                take = min(kk, len(live_idx))
+                part = np.argpartition(d2, take - 1, axis=1)[:, :take]
+                ids = live_idx[part].astype(np.int64)
+                dd = np.take_along_axis(d2, part, axis=1)
+            else:
+                ids, dd = graph_build.greedy_candidates(
+                    seg.neighbors, seg.rot, rot, seg.entry,
+                    ef=up.repair_ef, live=seg.live_mask())
+                ids, dd = ids[:, :kk], dd[:, :kk]
+            cand_parts.append((ids, dd.astype(np.float32),
+                               seg.rot[np.clip(ids, 0, cap - 1)], True))
+        if b > 1:
+            d2p = graph_build.pairwise_sq_dists(rot, rot)
+            np.fill_diagonal(d2p, np.inf)
+            take = min(kk, b - 1)
+            part = np.argpartition(d2p, take - 1, axis=1)[:, :take]
+            pe_ids = (m0 + part).astype(np.int64)
+            pe_d = np.take_along_axis(d2p, part, axis=1).astype(np.float32)
+            cand_parts.append((pe_ids, pe_d, rot[part], True))
+        if up.use_base_occluders and (~self._base_tomb).any():
+            bids, bd, bvecs = self._base_candidates(rot, kk)
+            bd = np.where(bids < self.base.n, bd, np.inf).astype(np.float32)
+            cand_parts.append((np.full_like(bids, -1, dtype=np.int64),
+                               bd, bvecs, False))
+
+        # ---- occlusion prune + write rows -----------------------------
+        seg.raw[m0:m0 + b] = vectors
+        seg.rot[m0:m0 + b] = rot
+        gids = np.arange(self._next_gid, self._next_gid + b, dtype=np.int64)
+        seg.gids[m0:m0 + b] = gids
+        self._next_gid += b
+        self._gid_dead = np.concatenate([self._gid_dead, np.zeros(b, bool)])
+        for i in range(b):
+            if not cand_parts:
+                break
+            cv = np.concatenate([p[2][i] for p in cand_parts], axis=0)
+            cd = np.concatenate([p[1][i] for p in cand_parts], axis=0)
+            cid = np.concatenate([p[0][i] for p in cand_parts], axis=0)
+            ok = np.concatenate([np.full(len(p[0][i]), p[3])
+                                 for p in cand_parts], axis=0)
+            kept = graph_build.prune_one(cv, cd, R, alpha=up.repair_alpha,
+                                         edge_ok=ok)
+            edges = cid[kept]
+            seg.neighbors[m0 + i, :len(edges)] = edges.astype(np.int32)
+        seg.m = m0 + b
+        graph_build.patch_reverse_edges(seg.neighbors, seg.rot,
+                                        np.arange(m0, m0 + b), cap, R,
+                                        alpha=up.repair_alpha)
+        seg.refresh(self.base.cfg.pilot_dtype,
+                    fes_threshold=up.brute_threshold)
+        self._maybe_warm_graph_path(seg)
+        self._maybe_auto_compact()
+        return gids
+
+    def _maybe_auto_compact(self) -> None:
+        frac = self.up.auto_compact_fraction
+        if frac is None:
+            return
+        delta_live = sum(s.live_count() for s in self.deltas)
+        if delta_live > frac * max(1, self.base.n):
+            self.compact()
+
+    # -- compaction --------------------------------------------------------
+    def compact(self, *, replan: bool = True) -> "SegmentedIndex":
+        """Fold every segment's live rows into a fresh immutable base:
+        re-fit SVD, rebuild graph/FES, clear tombstones and deltas.
+        Global ids are preserved.  With ``replan`` and a configured
+        ``pilot_budget_bytes``, the ``ResidencyPlanner`` re-solves the
+        pilot dtype/geometry for the merged corpus size first, so the
+        budget keeps holding as the index grows (DESIGN.md §6)."""
+        live_base = ~self._base_tomb
+        vec_parts = [self._vectors[live_base]]
+        gid_parts = [self._base_gids[live_base]]
+        for seg in self.deltas:
+            live = seg.live_mask()[:seg.m]
+            vec_parts.append(seg.raw[:seg.m][live])
+            gid_parts.append(seg.gids[:seg.m][live])
+        x = np.concatenate(vec_parts, axis=0)
+        g = np.concatenate(gid_parts, axis=0)
+        cfg = self.base.cfg
+        if replan and cfg.pilot_budget_bytes is not None:
+            plan = ResidencyPlanner(
+                len(x), self.d, R=cfg.R, n_entry=cfg.n_entry,
+                fes_clusters=cfg.fes_clusters,
+                pilot_id_dtype=cfg.pilot_id_dtype,
+            ).plan(cfg.pilot_budget_bytes)
+            cfg = plan.to_config(cfg)
+        self.base = PilotANNIndex(cfg, x)
+        self._vectors = x
+        self._base_gids = g
+        self._base_tomb = np.zeros(len(x), bool)
+        self.deltas = []
+        self.generation += 1
+        self._install_base_tombstones()
+        return self
+
+    # -- search ------------------------------------------------------------
+    def _delta_topk(self, q_rot: jax.Array, seg: DeltaSegment, k: int,
+                    params: SearchParams
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Top-k of one delta for a (rotated) query batch: exact brute
+        force below ``brute_threshold``, pilot-graph traversal + exact
+        re-score above it.  Returns local ids, exact distances and the
+        per-query scored-candidate count."""
+        from repro.core.multistage import pad_to_bucket
+        q_rot, B0 = pad_to_bucket(q_rot)        # bounded jit signatures
+        k_eff = max(1, min(k, seg.cap))
+        if seg.live_count() <= self.up.brute_threshold:
+            ids, dd = _delta_brute_topk(q_rot, seg.arrays["rot_vecs"][:-1],
+                                        seg.arrays["valid"], k_eff)
+            cnt = np.full(B0, seg.live_count(), np.int32)
+            return np.asarray(ids)[:B0], np.asarray(dd)[:B0], cnt
+        ids, dd, cnt = _delta_graph_topk(seg.arrays, q_rot, params, k_eff)
+        return (np.asarray(ids)[:B0], np.asarray(dd)[:B0],
+                np.asarray(cnt)[:B0])
+
+    def merge_with_deltas(self, q_rot: jax.Array, base_ids: np.ndarray,
+                          base_d: np.ndarray, k: int, params: SearchParams
+                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Exact cross-segment beam merge: base results (positional ids)
+        map to global ids, each live delta contributes its top-k, anything
+        tombstoned *since dispatch* is dropped, and the union is re-sorted
+        by exact distance.  Returns (gids (B, k), dists (B, k),
+        delta-scored counts (B,)); short rows pad with gid -1 / +inf."""
+        n = self.base.n
+        base_ids = np.asarray(base_ids)
+        base_d = np.asarray(base_d, np.float32)
+        ok = (base_ids < n) & (base_ids >= 0) & np.isfinite(base_d)
+        all_g = [np.where(ok, self._base_gids[np.clip(base_ids, 0, n - 1)],
+                          -1)]
+        all_d = [np.where(ok, base_d, np.inf)]
+        Bq = base_ids.shape[0]
+        scored = np.zeros(Bq, np.int32)
+        for seg in self.deltas:
+            if seg.live_count() == 0:
+                continue
+            lids, ld, cnt = self._delta_topk(q_rot, seg, k, params)
+            lv = np.isfinite(ld)
+            all_g.append(np.where(lv, seg.gids[np.clip(lids, 0, seg.cap - 1)],
+                                  -1))
+            all_d.append(np.where(lv, ld, np.inf))
+            scored += cnt
+        G = np.concatenate(all_g, axis=1)
+        D = np.concatenate(all_d, axis=1)
+        live = self.is_live(G)
+        D = np.where(live, D, np.inf)
+        G = np.where(live, G, -1)
+        order = np.argsort(D, axis=1, kind="stable")[:, :k]
+        return (np.take_along_axis(G, order, axis=1),
+                np.take_along_axis(D, order, axis=1), scored)
+
+    def search(self, queries: np.ndarray, params: SearchParams,
+               *, rotated: bool = False
+               ) -> Tuple[np.ndarray, np.ndarray, StatsDict]:
+        """Fan-out search: multistage on the (tombstone-masked) base, exact
+        per-delta top-k, exact merge.  Returns ``(gids, dists, stats)``
+        with the base's unified stats schema plus ``delta_dist`` (per-query
+        delta candidates scored)."""
+        q = jnp.asarray(queries) if rotated else self.rotate_queries(
+            np.asarray(queries, np.float32))
+        ids_b, d_b, stats = self.base.search(q, params, rotated=True)
+        gids, dists, scored = self.merge_with_deltas(q, ids_b, d_b,
+                                                     params.k, params)
+        stats = dict(stats)
+        stats["delta_dist"] = scored
+        return gids, dists, stats
+
+    # -- accounting --------------------------------------------------------
+    def memory_report(self) -> Dict:
+        """The base's dtype-aware report plus per-segment pilot bytes:
+        ``segments`` (one row per segment with nodes/live/pilot_bytes),
+        ``delta_pilot_bytes`` and ``total_pilot_bytes`` (base + deltas) —
+        what benchmarks/memory_scaling.py tracks across insert/compact."""
+        rep = dict(self.base.memory_report())
+        segs = [{"segment": "base", "nodes": self.base.n,
+                 "live": int((~self._base_tomb).sum()),
+                 "pilot_bytes": rep["pilot_bytes"]}]
+        delta_pilot = 0
+        for i, seg in enumerate(self.deltas):
+            pb = seg.pilot_bytes()
+            delta_pilot += pb
+            segs.append({"segment": f"delta{i}", "nodes": seg.m,
+                         "live": seg.live_count(), "pilot_bytes": pb})
+        rep["segments"] = segs
+        rep["delta_pilot_bytes"] = delta_pilot
+        rep["total_pilot_bytes"] = rep["pilot_bytes"] + delta_pilot
+        return rep

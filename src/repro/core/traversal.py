@@ -72,6 +72,18 @@ class TraversalSpec:
     use_persistent: bool = False
 
 
+def sentinel_mask(tombstone: jax.Array, ids: jax.Array, n: int) -> jax.Array:
+    """Sentinel-mask tombstoned ids (DESIGN.md §6): every id whose bit is
+    set in the ``(n+1,)`` tombstone bitmap becomes the sentinel ``n``
+    (dtype-preserving, so int16 pilot tables stay int16).  Applied to the
+    adjacency table this prunes every edge INTO a deleted node — deleted
+    nodes keep their out-edges but stop being scored, entering beams, or
+    surfacing in results.  With an all-false bitmap ``where`` is the
+    identity, which is what keeps the zero-tombstone paths bit-exact."""
+    t = tombstone[jnp.clip(ids, 0, tombstone.shape[0] - 1)]
+    return jnp.where(t, jnp.asarray(n, ids.dtype), ids)
+
+
 def sq_dists(q: jax.Array, vecs: jax.Array) -> jax.Array:
     """q: (B, d); vecs: (B, R, d) — or (m, d) shared across the batch —
     -> (B, R) / (B, m) squared euclidean, fp32.
@@ -288,7 +300,8 @@ def greedy_search(spec: TraversalSpec, queries: jax.Array,
                   extra_id: Optional[jax.Array] = None,
                   extra_d: Optional[jax.Array] = None,
                   nbr_fn=None, dist_fn=None,
-                  vec_scale: Optional[jax.Array] = None) -> SearchState:
+                  vec_scale: Optional[jax.Array] = None,
+                  tombstone: Optional[jax.Array] = None) -> SearchState:
     """Greedy best-first search (Algorithm 1), batched, W-wide per round
     (spec.frontier_width).
 
@@ -296,6 +309,11 @@ def greedy_search(spec: TraversalSpec, queries: jax.Array,
     vector_table:   (n+1, d) vectors with zero row at n.  May be stored
     bfloat16 or int8 (core/quant.py); for int8 pass the per-dim ``vec_scale``
     so distances dequantize (the fused kernels dequantize in VMEM).
+    tombstone: optional (n+1,) bool deletion bitmap (DESIGN.md §6) —
+    tombstoned ids are sentinel-masked out of the adjacency, the entry set
+    and the handed-over beam before the search starts, so they are never
+    scored and never surface; the hop bodies (jnp and Pallas alike) run
+    unchanged, and an all-false bitmap is bit-exact with ``None``.
     iters: if given, runs a fixed number of rounds (stage-② refinement and
     the distributed serving step use this); otherwise runs to convergence
     (no unchecked candidate anywhere) with spec.max_iters as a safety bound.
@@ -306,6 +324,13 @@ def greedy_search(spec: TraversalSpec, queries: jax.Array,
     inside one persistent Pallas kernel instead (DESIGN.md §3) — results
     are identical either way.
     """
+    if tombstone is not None:
+        neighbor_table = sentinel_mask(tombstone, neighbor_table, n)
+        entry_ids = sentinel_mask(tombstone, entry_ids, n)
+        if extra_id is not None:
+            dead = tombstone[jnp.clip(extra_id, 0, n)]
+            extra_id = jnp.where(dead, n, extra_id)
+            extra_d = jnp.where(dead, INF, extra_d)
     state = init_state(spec, queries, entry_ids, vector_table[:-1], n,
                        visited=visited, extra_id=extra_id, extra_d=extra_d,
                        vec_scale=vec_scale)

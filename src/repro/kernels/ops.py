@@ -32,14 +32,20 @@ def _pad_to(x: jax.Array, axis: int, size: int, value=0):
 def fes_select(queries: jax.Array, centroids: jax.Array, entries: jax.Array,
                entry_ids: jax.Array, valid: jax.Array, *, L: int,
                qc: Optional[int] = None, interpret: bool = True,
-               entries_scale: Optional[jax.Array] = None
+               entries_scale: Optional[jax.Array] = None,
+               tombstone: Optional[jax.Array] = None
                ) -> Tuple[jax.Array, jax.Array]:
     """queries (B, d); centroids (r, d); entries (r, C, d) — stored fp32,
     bf16 or int8 with per-dim ``entries_scale`` (core/quant.py; the kernel
     dequantizes in VMEM).
     Returns (ids (B, L), sq-dists (B, L)) — top-L entries of each query's
     routed cluster.  ``qc``: per-cluster query capacity (defaults to B —
-    always-safe; production tune: ~4B/r)."""
+    always-safe; production tune: ~4B/r).  ``tombstone``: optional deletion
+    bitmap in the entry-id space; tombstoned entries fold into the validity
+    mask before the kernel (DESIGN.md §6 — bit-exact when ``None``)."""
+    if tombstone is not None:
+        from repro.core.fes import mask_tombstoned
+        valid = mask_tombstoned(valid, entry_ids, tombstone)
     B, d = queries.shape
     r, C, _ = entries.shape
     qc = qc or B

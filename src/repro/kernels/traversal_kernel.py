@@ -313,6 +313,22 @@ def _pad_state(q, nbr_table, vec_table, beam_id, beam_d, beam_ck, visited,
     return q, nbr_t, vec_t, beam_id, bd, beam_ck, vis, Bpad, bt, vpad, vbits
 
 
+def _apply_tombstone(tombstone, nbr_table, beam_id, beam_d, n: int):
+    """Sentinel-mask a deletion bitmap into the kernel operands (DESIGN.md
+    §6): tombstoned targets in the adjacency and tombstoned beam entries
+    become sentinel-id/``+inf`` rows *before* the pallas_call, so the kernel
+    bodies never see them and stay byte-identical to the tombstone-free
+    build.  With ``tombstone=None`` (or an all-false bitmap) every ``where``
+    is the identity — the bit-exactness contract the parity tests pin."""
+    if tombstone is None:
+        return nbr_table, beam_id, beam_d
+    nbr_table = jnp.where(tombstone[nbr_table],
+                          jnp.asarray(n, nbr_table.dtype), nbr_table)
+    dead = tombstone[jnp.clip(beam_id, 0, n)]
+    return (nbr_table, jnp.where(dead, n, beam_id),
+            jnp.where(dead, jnp.inf, beam_d))
+
+
 def _scale_operand(vec_scale, dp: int) -> jax.Array:
     """(8, dp) fp32 dequant-scale block (sublane-tiled); all-ones when the
     table is exact — multiplying by 1.0f is bit-exact, so passing the
@@ -329,7 +345,8 @@ def fused_traversal_hop(q: jax.Array, nbr_table: jax.Array,
                         visited: jax.Array, n: int, *, width: int = 1,
                         visited_mode: str = "bloom", b_tile: int = 128,
                         interpret: bool = False,
-                        vec_scale: jax.Array = None
+                        vec_scale: jax.Array = None,
+                        tombstone: jax.Array = None
                         ) -> Tuple[jax.Array, jax.Array, jax.Array,
                                    jax.Array, jax.Array]:
     """One fused W-wide expansion round.
@@ -338,7 +355,9 @@ def fused_traversal_hop(q: jax.Array, nbr_table: jax.Array,
     vec_table (n+1, dp) with zero row at n — stored fp32, bf16 or int8
     (pass ``vec_scale`` (dp,) for int8; DESIGN.md §4); beam_* (B, ef) sorted
     beam (+inf sentinel distances); visited (B, n_bits) bloom filter or
-    (B, n+1) exact bitmap.
+    (B, n+1) exact bitmap; tombstone: optional (n+1,) deletion bitmap,
+    sentinel-masked into the operands before the kernel (DESIGN.md §6;
+    bit-exact no-op when ``None``/all-false).
 
     Returns ``(new_id, new_d, new_ck, new_visited, fresh)`` with the same
     semantics as ``core.traversal.expansion_round`` minus the counters —
@@ -351,6 +370,8 @@ def fused_traversal_hop(q: jax.Array, nbr_table: jax.Array,
     assert vec_table.shape[0] == N1
     assert width >= 1
 
+    nbr_table, beam_id, beam_d = _apply_tombstone(tombstone, nbr_table,
+                                                  beam_id, beam_d, n)
     (q, nbr_t, vec_t, beam_id, bd, beam_ck, vis, Bpad, bt, vpad,
      vbits) = _pad_state(q, nbr_table, vec_table, beam_id, beam_d, beam_ck,
                          visited, n, b_tile)
@@ -402,14 +423,17 @@ def fused_pilot_search(q: jax.Array, nbr_table: jax.Array,
                        visited: jax.Array, n: int, *, rounds: int,
                        width: int = 1, visited_mode: str = "bloom",
                        b_tile: int = 128, interpret: bool = False,
-                       vec_scale: jax.Array = None
+                       vec_scale: jax.Array = None,
+                       tombstone: jax.Array = None
                        ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
                                   jax.Array, jax.Array, jax.Array]:
     """Persistent stage-① search: run up to ``rounds`` W-wide expansion
     rounds — with in-kernel convergence exit — inside one ``pallas_call``.
 
     Inputs as ``fused_traversal_hop`` (the initial beam/visited state comes
-    from ``core.traversal.init_state``; quantized tables pass ``vec_scale``).
+    from ``core.traversal.init_state``; quantized tables pass ``vec_scale``;
+    ``tombstone`` deletion bitmaps are sentinel-masked into the operands,
+    DESIGN.md §6).
     Returns ``(beam_id, beam_d, beam_ck, visited, n_dist, n_hops, n_exp)``
     where the three counters are (B,) int32 *deltas* accumulated over the
     executed rounds (the caller adds them to the init-state counters).
@@ -421,6 +445,8 @@ def fused_pilot_search(q: jax.Array, nbr_table: jax.Array,
     assert vec_table.shape[0] == N1
     assert width >= 1 and rounds >= 0
 
+    nbr_table, beam_id, beam_d = _apply_tombstone(tombstone, nbr_table,
+                                                  beam_id, beam_d, n)
     (q, nbr_t, vec_t, beam_id, bd, beam_ck, vis, Bpad, bt, vpad,
      vbits) = _pad_state(q, nbr_table, vec_table, beam_id, beam_d, beam_ck,
                          visited, n, b_tile)

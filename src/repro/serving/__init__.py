@@ -1,7 +1,8 @@
 from repro.serving.batching import BatchingQueue, Request
 from repro.serving.rag import RagPipeline
 from repro.serving.semantic_cache import SemanticCache
-from repro.serving.server import ServeParams, ThroughputEngine
+from repro.serving.server import (MutationTicket, ServeParams,
+                                  ThroughputEngine)
 
 __all__ = ["BatchingQueue", "Request", "RagPipeline", "SemanticCache",
-           "ServeParams", "ThroughputEngine"]
+           "ServeParams", "ThroughputEngine", "MutationTicket"]

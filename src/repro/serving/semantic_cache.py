@@ -1,9 +1,20 @@
 """Semantic cache (GPTCache-style — one of the paper's motivating workloads):
 short-circuit generation when a semantically-near query was already answered.
 
-The cache IS a PilotANN index over past query embeddings; hits are distance-
-thresholded.  Inserts rebuild lazily in batches (graph construction is the
-offline path, exactly like the paper's index build)."""
+The cache IS a PilotANN index over past query embeddings — now the *mutable*
+one (``core/segments.SegmentedIndex``, DESIGN.md §6), which is what fixes
+the old synchronous-rebuild stall: inserts used to stage until
+``rebuild_every`` and then rebuild the whole index inline, blocking a serve
+batch for the full (and growing) graph construction.  Now each insert is an
+incremental repair into a delta segment — work bounded by the delta's size
+(the repair itself is O(candidates); ``DeltaSegment.refresh`` re-encodes
+the delta's device tables, O(cap·d) host work, never the whole corpus) —
+and the only remaining heavyweight operation, folding deltas back into a
+fresh base, is deferred to ``maintain()``, which the serving loop calls on
+*idle* pump cycles (``ThroughputEngine.pump``), amortizing it off the
+serve-batch path.  Hit/miss accounting is unchanged and exact: every lookup
+increments exactly one of the two counters against the index state at
+lookup time."""
 
 from __future__ import annotations
 
@@ -12,21 +23,32 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import IndexConfig, PilotANNIndex, SearchParams
+from repro.core import IndexConfig, SearchParams
+from repro.core.segments import SegmentedIndex, UpdateParams
+
+# Below this many inserts there is nothing worth building a graph over; the
+# cache just stays cold (misses), exactly as before.
+MIN_BUILD = 64
 
 
 @dataclass
 class SemanticCache:
     dim: int
     threshold: float = 0.25          # max squared distance for a hit
-    rebuild_every: int = 256
+    rebuild_every: int = 256         # compaction cadence (deferred to maintain)
     index_cfg: IndexConfig = field(default_factory=lambda: IndexConfig(
         R=16, sample_ratio=0.5, svd_ratio=0.5, n_entry=512))
+    # cheap repair: while a delta stays under brute_threshold its lookups
+    # are exact regardless of graph quality, so base-occluder collection
+    # would buy nothing per insert
+    update_params: UpdateParams = field(default_factory=lambda: UpdateParams(
+        delta_capacity=64, repair_ef=32, repair_knn=8,
+        use_base_occluders=False))
 
-    _keys: List[np.ndarray] = field(default_factory=list)
-    _values: List[Any] = field(default_factory=list)
-    _index: Optional[PilotANNIndex] = None
-    _staged: int = 0
+    _values: List[Any] = field(default_factory=list)   # gid -> value
+    _staged: List[np.ndarray] = field(default_factory=list)  # pre-MIN_BUILD
+    _index: Optional[SegmentedIndex] = None
+    _inserts_since_compact: int = 0
     hits: int = 0
     misses: int = 0
 
@@ -35,26 +57,48 @@ class SemanticCache:
             self.misses += 1
             return None
         params = SearchParams(k=1, ef=32, ef_pilot=32)
-        ids, dists, _ = self._index.search(emb[None, :], params)
-        if dists[0, 0] <= self.threshold:
+        gids, dists, _ = self._index.search(emb[None, :], params)
+        if gids[0, 0] >= 0 and dists[0, 0] <= self.threshold:
             self.hits += 1
-            return self._values[int(ids[0, 0])]
+            return self._values[int(gids[0, 0])]
         self.misses += 1
         return None
 
     def insert(self, emb: np.ndarray, value: Any) -> None:
-        self._keys.append(np.asarray(emb, np.float32))
+        """Record one (embedding, value) pair.  Bounded work: either a
+        staging append (cold cache), a one-time ``MIN_BUILD``-vector base
+        build, or a single-node incremental repair into the delta segment —
+        never a full rebuild (that moved to ``maintain()``)."""
+        emb = np.asarray(emb, np.float32)
         self._values.append(value)
-        self._staged += 1
-        if self._index is None and len(self._keys) >= 64:
-            self._rebuild()
-        elif self._staged >= self.rebuild_every:
-            self._rebuild()
+        if self._index is None:
+            self._staged.append(emb)
+            if len(self._staged) >= MIN_BUILD:
+                self._index = SegmentedIndex(self.index_cfg,
+                                             np.stack(self._staged),
+                                             self.update_params)
+                self._staged = []
+            return
+        self._index.insert(emb[None, :])
+        self._inserts_since_compact += 1
 
-    def _rebuild(self) -> None:
-        x = np.stack(self._keys)
-        self._index = PilotANNIndex(self.index_cfg, x)
-        self._staged = 0
+    @property
+    def maintenance_pending(self) -> bool:
+        """True when a deferred compaction is due — the serving loop polls
+        this on idle pump cycles (serving/server.py)."""
+        return (self._index is not None
+                and self._inserts_since_compact >= self.rebuild_every)
+
+    def maintain(self, budget: int = 1) -> bool:
+        """Run at most one deferred maintenance step (currently: fold the
+        delta segments into a fresh base once ``rebuild_every`` inserts
+        have accumulated).  Returns True if work was done.  Called from
+        idle serving cycles so the stall never lands on a serve batch."""
+        if not self.maintenance_pending or budget <= 0:
+            return False
+        self._index.compact()
+        self._inserts_since_compact = 0
+        return True
 
     @property
     def hit_rate(self) -> float:

@@ -22,24 +22,35 @@ search core, built from four mechanisms:
 4. **Semantic-cache short-circuit** — with ``use_semantic_cache``, each
    submitted query is first looked up in a ``SemanticCache`` (a PilotANN
    index over past query embeddings); hits return the cached result without
-   touching the pilot stage, with hit-rate accounting in ``stats``.
-   Caveat: the cache's index rebuilds *synchronously* every
-   ``cache_rebuild_every`` inserts (graph construction is the offline
-   path, exactly like the paper's index build), which stalls the serving
-   loop for the build + first-lookup trace — acceptable for the
-   read-heavy workloads the cache targets, wrong for strict p99 SLOs;
-   hence the feature defaults off.
+   touching the pilot stage, with hit-rate accounting in ``stats``.  The
+   cache's index is the *mutable* one (``core/segments.py``): inserts are
+   incremental repairs bounded by the delta-segment size, and its one
+   heavyweight operation —
+   compaction — is deferred to idle pump cycles via ``cache.maintain()``
+   (the old synchronous-rebuild stall is gone; serving/semantic_cache.py).
+5. **Streaming upserts** (DESIGN.md §6) — serving a
+   ``core/segments.SegmentedIndex``, ``submit_upsert`` / ``submit_delete``
+   enqueue mutations that are drained *between* pump batches
+   (``mutations_per_pump`` rows at a time), so Poisson query traffic and
+   index mutation interleave without ever blocking a dispatched batch.
+   Deletions flow into the already-compiled stage executables as tombstone
+   *arguments* (no retrace); inserts land in delta segments whose exact
+   top-k is merged with the base batch at drain time; a ``compact()``
+   (rare) bumps the index generation, and the engine rebuilds its stage
+   pair when it notices (``stats["stage_rebuilds"]``).
 
 ``benchmarks/serving_qps.py`` drives Poisson arrivals through this runtime
 and reports steady-state QPS + latency percentiles for naive-per-shape-jit
-vs bucketed vs bucketed+pipelined serving.
+vs bucketed vs bucketed+pipelined serving; ``benchmarks/streaming_update.py``
+measures sustained QPS/recall under a concurrent insert stream.
 """
 
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +59,7 @@ import numpy as np
 from repro.core import multistage
 from repro.core.multistage import SearchParams
 from repro.core.pipeline import split_stages
+from repro.core.segments import SegmentedIndex
 from repro.serving.batching import BatchingQueue, Request
 from repro.serving.semantic_cache import SemanticCache
 
@@ -70,7 +82,21 @@ class ServeParams:
     # semantic-cache short-circuit in front of the pilot stage
     use_semantic_cache: bool = False
     cache_threshold: float = 0.05     # max squared distance for a cache hit
-    cache_rebuild_every: int = 256    # lazy cache-index rebuild cadence
+    cache_rebuild_every: int = 256    # cache compaction cadence (idle-cycle)
+    # streaming upserts (DESIGN.md §6): max mutation rows (insert vectors /
+    # delete ids) applied from the upsert queue between two pump batches
+    mutations_per_pump: int = 64
+
+
+@dataclass
+class MutationTicket:
+    """Handle for one queued mutation: ``done`` flips when it is applied
+    between pump batches; for inserts, ``gids`` then carries the assigned
+    global ids."""
+    kind: str                         # "insert" | "delete"
+    payload: Any
+    done: bool = False
+    gids: Optional[np.ndarray] = None
 
 
 class ThroughputEngine:
@@ -85,6 +111,8 @@ class ThroughputEngine:
     def __init__(self, index, params: SearchParams,
                  serve_params: Optional[ServeParams] = None):
         self.index = index
+        self.segments: Optional[SegmentedIndex] = \
+            index if isinstance(index, SegmentedIndex) else None
         self.params = params
         self.serve_params = serve_params or ServeParams()
         sp = self.serve_params
@@ -93,8 +121,8 @@ class ThroughputEngine:
         if not sp.buckets or list(sp.buckets) != sorted(sp.buckets):
             raise ValueError(f"buckets must be a non-empty ascending ladder, "
                              f"got {sp.buckets}")
-        self.pilot_stage, self.cpu_stages = split_stages(
-            index.arrays, params, donate=sp.donate)
+        self._generation = -1
+        self._build_stages()
         self.queue = BatchingQueue(sp.buckets[-1], max_wait_s=sp.max_wait_s)
         self.cache: Optional[SemanticCache] = None
         if sp.use_semantic_cache:
@@ -104,13 +132,41 @@ class ThroughputEngine:
         # in-flight batches: (requests, padded rotated queries, pilot
         # outputs, dispatch timestamp)
         self._inflight: List[Tuple[List[Request], jax.Array, tuple, float]] = []
+        self._mutations: Deque[MutationTicket] = deque()
         self._t0 = time.perf_counter()
         self._completions: Dict[int, float] = {}      # rid -> done timestamp
         self.stats: Dict[str, Any] = {
             "requests": 0, "batches": 0, "bucket_hist": {},
-            "cache_lookups": 0, "cache_hits": 0, "batch_records": []}
+            "cache_lookups": 0, "cache_hits": 0, "batch_records": [],
+            "upserts": 0, "deletes": 0, "mutation_drains": 0,
+            "stage_rebuilds": 0, "cache_maintenance": 0}
         if sp.warmup:
             self.warmup()
+
+    # -- stage pair ---------------------------------------------------------
+    def _build_stages(self) -> None:
+        """(Re)build the jitted stage pair.  Immutable indexes close over
+        the arrays as before; a ``SegmentedIndex`` base gets the stage
+        pair with tombstone bitmaps as trailing call arguments
+        (DESIGN.md §6) and
+        the wrappers pull the current bitmaps at call time — so deletes
+        apply without a retrace, and only a ``compact()`` (generation
+        bump, observed at dispatch and in the mutation drain) forces a
+        rebuild."""
+        sp = self.serve_params
+        if self.segments is None:
+            self._pilot_call, self._cpu_call = split_stages(
+                self.index.arrays, self.params, donate=sp.donate)
+            return
+        base = self.segments.base
+        pilot, cpu = split_stages(base.arrays, self.params,
+                                  donate=sp.donate)
+        self._pilot_call = lambda q: pilot(
+            q, base.arrays["pilot_tombstone"])
+        self._cpu_call = lambda q, *po: cpu(
+            q, *po, base.arrays["pilot_tombstone"],
+            base.arrays["tombstone"])
+        self._generation = self.segments.generation
 
     # -- clock ------------------------------------------------------------
     def _now(self) -> float:
@@ -124,9 +180,83 @@ class ThroughputEngine:
         pays a trace."""
         for b in self.serve_params.buckets:
             q = jnp.zeros((b, self.index.d), jnp.float32)
-            po = self.pilot_stage(q)
-            jax.block_until_ready(self.cpu_stages(q, *po))
+            po = self._pilot_call(q)
+            jax.block_until_ready(self._cpu_call(q, *po))
+        if self.segments is not None:
+            # also warm the mutation/merge path (repair search, delta
+            # scorers) so the first upsert doesn't stall a serve batch
+            self.segments.warmup(self.params, self.serve_params.buckets)
         return len(self.serve_params.buckets)
+
+    # -- mutation entry (DESIGN.md §6) -------------------------------------
+    def submit_upsert(self, vectors: np.ndarray) -> MutationTicket:
+        """Queue vectors for insertion into the (segmented) index.  Applied
+        between pump batches (``mutations_per_pump`` rows at a time); the
+        returned ticket's ``gids`` fills in when it lands."""
+        if self.segments is None:
+            raise ValueError("streaming upserts need a SegmentedIndex "
+                             "(core/segments.py); this engine serves an "
+                             "immutable PilotANNIndex")
+        vectors = np.atleast_2d(np.asarray(vectors, np.float32))
+        t = MutationTicket("insert", vectors)
+        self._mutations.append(t)
+        return t
+
+    def submit_delete(self, gids) -> MutationTicket:
+        """Queue global ids for tombstoning (applied between pump batches)."""
+        if self.segments is None:
+            raise ValueError("streaming deletes need a SegmentedIndex")
+        t = MutationTicket("delete", np.atleast_1d(np.asarray(gids, np.int64)))
+        self._mutations.append(t)
+        return t
+
+    def _apply_mutations(self, max_rows: int) -> bool:
+        """Drain up to ``max_rows`` mutation rows from the upsert queue —
+        called between pump batches so mutation work interleaves with query
+        batches instead of blocking one.  Rebuilds the stage pair if a
+        mutation compacted the index (generation bump)."""
+        if self.segments is None or not self._mutations or max_rows <= 0:
+            return False
+        # drain in-flight batches first: a mutation may compact the index
+        # (auto_compact_fraction), which would invalidate the positional
+        # ids of batches dispatched against the old base
+        while self._inflight:
+            self._drain_oldest()
+        rows = 0
+        while self._mutations and rows < max_rows:
+            # coalesce a run of same-kind tickets into ONE index call: the
+            # repair path amortizes its candidate search over the batch, so
+            # many queued single-row upserts cost one batched insert
+            run = [self._mutations.popleft()]
+            while (self._mutations
+                   and self._mutations[0].kind == run[0].kind
+                   and rows + sum(len(t.payload) for t in run)
+                   + len(self._mutations[0].payload) <= max_rows):
+                run.append(self._mutations.popleft())
+            payload = np.concatenate([t.payload for t in run])
+            if run[0].kind == "insert":
+                gids = self.segments.insert(payload)
+                self.stats["upserts"] += len(gids)
+                rows += len(gids)
+                off = 0
+                for t in run:
+                    t.gids = gids[off:off + len(t.payload)]
+                    off += len(t.payload)
+            else:
+                self.stats["deletes"] += self.segments.delete(payload)
+                rows += len(payload)
+            for t in run:
+                t.done = True
+        self.stats["mutation_drains"] += 1
+        if self.segments.generation != self._generation:
+            self._build_stages()
+            self.stats["stage_rebuilds"] += 1
+        return True
+
+    def flush_mutations(self) -> None:
+        """Apply every queued mutation now (maintenance path)."""
+        while self._mutations:
+            self._apply_mutations(len(self._mutations) * (1 << 20))
 
     # -- request entry ----------------------------------------------------
     def submit(self, query: np.ndarray) -> Request:
@@ -149,6 +279,13 @@ class ThroughputEngine:
     # -- scheduler core ---------------------------------------------------
     def _dispatch(self) -> None:
         sp = self.serve_params
+        if (self.segments is not None
+                and self.segments.generation != self._generation):
+            # out-of-band compact() (direct index call / auto-compact):
+            # the captured base arrays are stale — rebuild before
+            # dispatching against them
+            self._build_stages()
+            self.stats["stage_rebuilds"] += 1
         reqs = self.queue.drain(sp.buckets[-1])
         nb = multistage.bucket_size(len(reqs), sp.buckets)
         q = np.zeros((nb, self.index.d), np.float32)
@@ -156,7 +293,7 @@ class ThroughputEngine:
             q[i] = r.payload
         qr = self.index.rotate_queries(q)
         t = self._now()
-        po = self.pilot_stage(qr)                 # async dispatch
+        po = self._pilot_call(qr)                 # async dispatch
         self._inflight.append((reqs, qr, po, t))
         self.stats["batches"] += 1
         hist = self.stats["bucket_hist"]
@@ -165,8 +302,13 @@ class ThroughputEngine:
     def _drain_oldest(self) -> None:
         reqs, qr, po, t_disp = self._inflight.pop(0)
         t_cpu = self._now()
-        ids, dists = self.cpu_stages(qr, *po)     # po buffers donated here
+        ids, dists = self._cpu_call(qr, *po)      # po buffers donated here
         ids, dists = np.asarray(ids), np.asarray(dists)
+        if self.segments is not None:
+            # exact cross-segment merge: base positional ids -> global ids,
+            # delta top-k folded in, late deletes filtered (DESIGN.md §6)
+            ids, dists, _ = self.segments.merge_with_deltas(
+                qr, ids, dists, self.params.k, self.params)
         t_done = self._now()
         for i, r in enumerate(reqs):
             r.result = (ids[i], dists[i])
@@ -183,15 +325,26 @@ class ThroughputEngine:
         """One scheduling action: dispatch a pilot batch if there is
         capacity (``len(inflight) < depth``) and the queue is ready (full
         bucket or deadline), else drain the oldest in-flight batch through
-        the CPU stages.  Returns False when there was nothing to do (queue
-        waiting on its deadline, or fully idle)."""
+        the CPU stages.  Between batches — after a drain, or when query
+        traffic is idle — up to ``mutations_per_pump`` rows of the upsert
+        queue are applied, so mutation and query traffic interleave
+        (DESIGN.md §6); deferred semantic-cache maintenance runs only on
+        otherwise-idle cycles.  Returns False when there was nothing to do
+        (queue waiting on its deadline, or fully idle)."""
         sp = self.serve_params
         if len(self._inflight) < sp.depth and self.queue.ready():
             self._dispatch()
             return True
         if self._inflight:
             self._drain_oldest()
+            self._apply_mutations(sp.mutations_per_pump)
             return True
+        if self._apply_mutations(sp.mutations_per_pump):
+            return True
+        if self.cache is not None and self.cache.maintenance_pending:
+            if self.cache.maintain():
+                self.stats["cache_maintenance"] += 1
+                return True
         return False
 
     def flush(self) -> None:

@@ -1,0 +1,131 @@
+"""Hypothesis properties for the graph-construction prune/augment helpers
+(skips cleanly when hypothesis is absent, like test_frontier_props).
+
+These helpers are reused one node at a time by the streaming-insert repair
+path (core/segments.py, DESIGN.md §6), so their invariants are pinned here
+first: occlusion-pruned degree never exceeds the cap, kept edges are a
+subset of the candidates, the occlusion predicate is monotone in alpha (at
+the first divergence of two greedy scans the larger alpha is always the
+one that keeps — the localized form of "larger alpha keeps more"; the
+*global* kept-set superset claim is false once earlier keeps feed back
+into later occlusion tests), and reverse-edge augmentation never exceeds
+the degree bound."""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph_build import (add_reverse_edges, brute_knn, occludes,
+                                    occlusion_prune, patch_reverse_edges,
+                                    prune_one)
+
+
+def _dataset(seed, n=48, d=6, K=16):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    ids, dd = brute_knn(x, K)
+    return x, ids, dd
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 10_000), st.sampled_from([4, 6, 8]),
+       st.floats(1.0, 1.6), st.booleans())
+def test_occlusion_prune_degree_and_subset(seed, R, alpha, keep_pruned):
+    """Degree ≤ cap; every kept id is one of that node's candidates; no
+    duplicates; with keep_pruned the slots fill to min(R, #candidates)."""
+    x, ids, dd = _dataset(seed)
+    n = len(x)
+    nb = occlusion_prune(x, ids, dd, R, alpha=alpha, keep_pruned=keep_pruned)
+    real = nb < n
+    deg = real.sum(axis=1)
+    assert (deg <= R).all()
+    for i in range(n):
+        kept = nb[i][real[i]]
+        assert len(set(kept.tolist())) == len(kept)
+        assert set(kept.tolist()) <= set(ids[i].tolist())
+    if keep_pruned:
+        avail = (ids < n).sum(axis=1)
+        assert (deg == np.minimum(R, avail)).all()
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 10_000), st.floats(1.0, 1.4), st.floats(0.01, 0.6))
+def test_alpha_monotone_at_first_divergence(seed, a_lo, gap):
+    """Greedy occlusion scans at alpha_lo < alpha_hi over the same
+    candidate list: wherever the two kept sequences first diverge, it must
+    be alpha_hi keeping a candidate alpha_lo pruned — never the reverse.
+    (Up to the first divergence both scans hold the identical kept prefix,
+    so the decision reduces to the predicate, and ``occludes`` is monotone:
+    the threshold d_qc/alpha**2 only shrinks as alpha grows.)"""
+    a_hi = a_lo + gap
+    x, ids, dd = _dataset(seed)
+    n = len(x)
+    for i in range(0, n, 5):
+        K = (ids[i] < n).sum()
+        cv, cd = x[ids[i][:K]], dd[i][:K]
+        lo = set(prune_one(cv, cd, K, alpha=a_lo, keep_pruned=False).tolist())
+        hi = set(prune_one(cv, cd, K, alpha=a_hi, keep_pruned=False).tolist())
+        order = np.argsort(cd, kind="stable")
+        for j in order:
+            in_lo, in_hi = j in lo, j in hi
+            if in_lo != in_hi:
+                assert in_hi and not in_lo, \
+                    f"first divergence kept by SMALLER alpha (cand {j})"
+                break
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 10_000))
+def test_occludes_predicate_monotone(seed):
+    rng = np.random.default_rng(seed)
+    d_kc = rng.uniform(0, 4, 64)
+    d_qc = rng.uniform(0, 4, 64)
+    a1, a2 = sorted(rng.uniform(1.0, 2.0, 2))
+    assert not (occludes(d_kc, d_qc, a2) & ~occludes(d_kc, d_qc, a1)).any()
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 10_000), st.sampled_from([4, 6]))
+def test_reverse_augmentation_degree_bound(seed, R):
+    """add_reverse_edges (bulk build) and patch_reverse_edges (streaming
+    repair, with occlusion re-prune on full rows) both respect the degree
+    bound and keep edges in-range with no self loops."""
+    x, ids, dd = _dataset(seed)
+    n = len(x)
+    nb = occlusion_prune(x, ids, dd, R, alpha=1.2)
+    bulk = add_reverse_edges(nb.copy(), n, R)
+    assert ((bulk < n).sum(axis=1) <= R).all()
+    assert (bulk <= n).all() and (bulk >= 0).all()
+
+    patched = nb.copy()
+    new_src = np.arange(0, n, 7)
+    patch_reverse_edges(patched, x, new_src, n, R, alpha=1.2)
+    real = patched < n
+    assert (real.sum(axis=1) <= R).all()
+    rows = np.broadcast_to(np.arange(n)[:, None], patched.shape)
+    assert not (real & (patched == rows)).any(), "self loop"
+    # every row still holds a valid set (no duplicates among real edges)
+    for i in range(n):
+        kept = patched[i][real[i]]
+        assert len(set(kept.tolist())) == len(kept)
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(0, 10_000), st.sampled_from([3, 5]))
+def test_prune_one_occluder_only_candidates(seed, R):
+    """edge_ok=False candidates (base-segment occluders in the insert
+    repair) influence pruning but never become edges."""
+    rng = np.random.default_rng(seed)
+    K = 14
+    cv = rng.normal(size=(K, 5)).astype(np.float32)
+    cd = (cv * cv).sum(-1).astype(np.float32)
+    edge_ok = rng.random(K) < 0.6
+    kept = prune_one(cv, cd, R, alpha=1.2, edge_ok=edge_ok)
+    assert len(kept) <= R
+    assert edge_ok[kept].all()
+    assert len(set(kept.tolist())) == len(kept)
+    # with everything edge-eligible and keep_pruned, slots fill up
+    full = prune_one(cv, cd, R, alpha=1.2)
+    assert len(full) == min(R, K)

@@ -1,0 +1,407 @@
+"""Mutable segmented index tests (DESIGN.md §6): zero-tombstone
+bit-exactness against the immutable engine (jnp + both Pallas stage-①
+paths), build-at-once vs build-then-insert recall parity, delete/tombstone
+guarantees across every layer, compaction, the serving-runtime upsert
+queue, and the LRU-bounded jit caches."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (IndexConfig, PilotANNIndex, SearchParams,
+                        SegmentedIndex, UpdateParams, brute_force_topk,
+                        recall_at_k)
+from repro.core import traversal as T
+
+CFG = IndexConfig(R=16, sample_ratio=0.35, svd_ratio=0.5, n_entry=256,
+                  build_method="exact")
+PARAMS = SearchParams(k=10, ef=64, ef_pilot=64)
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(2000, 32)).astype(np.float32)
+    extra = rng.normal(size=(200, 32)).astype(np.float32)
+    q = rng.normal(size=(32, 32)).astype(np.float32)
+    return x, extra, q
+
+
+@pytest.fixture(scope="module")
+def seg(data):
+    x, extra, _ = data
+    s = SegmentedIndex(dataclasses.replace(CFG), x)
+    s.insert(extra)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Zero-tombstone bit-exactness (the refactor must not perturb the old paths)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("params", [
+    PARAMS,
+    dataclasses.replace(PARAMS, use_pallas_traversal=True),
+    dataclasses.replace(PARAMS, use_persistent_traversal=True),
+], ids=["jnp", "pallas_hop", "pallas_persistent"])
+def test_zero_tombstone_bit_exact(data, params):
+    """A SegmentedIndex with no inserts/deletes (all-false tombstone
+    bitmaps installed in the arrays) returns bit-identical ids AND
+    distances to the plain immutable index on every stage-① path."""
+    x, _, q = data
+    plain = PilotANNIndex(dataclasses.replace(CFG), x)
+    s = SegmentedIndex(dataclasses.replace(CFG), x)
+    i1, d1, _ = plain.search(q, params)
+    i2, d2, _ = s.search(q, params)
+    np.testing.assert_array_equal(i1, i2)
+    np.testing.assert_array_equal(d1, d2)
+
+
+def test_kernel_tombstone_operand_allfalse_bit_exact():
+    """fused_traversal_hop with an all-false tombstone operand is
+    bit-identical to the operand-free call (the sentinel-mask `where` is
+    the identity)."""
+    from repro.kernels.traversal_kernel import fused_traversal_hop
+    rng = np.random.default_rng(3)
+    n, R, d, Bq, ef = 400, 8, 16, 8, 24
+    nbr = jnp.asarray(np.concatenate(
+        [rng.integers(0, n, (n, R)), np.full((1, R), n)]).astype(np.int32))
+    vec = jnp.asarray(np.concatenate(
+        [rng.normal(size=(n, d)), np.zeros((1, d))]).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(Bq, d)).astype(np.float32))
+    st = T.init_state(T.TraversalSpec(ef=ef), q,
+                      jnp.asarray(rng.integers(0, n, (Bq, 4)).astype(np.int32)),
+                      vec[:-1], n)
+    args = (q, nbr, vec, st.cand_id, st.cand_d, st.checked, st.visited, n)
+    a = fused_traversal_hop(*args, interpret=True)
+    b = fused_traversal_hop(*args, interpret=True,
+                            tombstone=jnp.zeros(n + 1, bool))
+    for u, v in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+
+
+def test_kernel_tombstone_operand_masks_targets():
+    """A tombstoned node never enters the beam through the fused hop."""
+    from repro.kernels.traversal_kernel import fused_traversal_hop
+    rng = np.random.default_rng(4)
+    n, R, d, Bq, ef = 400, 8, 16, 8, 24
+    nbr = jnp.asarray(np.concatenate(
+        [rng.integers(0, n, (n, R)), np.full((1, R), n)]).astype(np.int32))
+    vec = jnp.asarray(np.concatenate(
+        [rng.normal(size=(n, d)), np.zeros((1, d))]).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(Bq, d)).astype(np.float32))
+    st = T.init_state(T.TraversalSpec(ef=ef), q,
+                      jnp.asarray(rng.integers(0, n, (Bq, 4)).astype(np.int32)),
+                      vec[:-1], n)
+    dead = np.zeros(n + 1, bool)
+    dead[rng.choice(n, 50, replace=False)] = True
+    nid, _, _, _, _ = fused_traversal_hop(
+        q, nbr, vec, st.cand_id, st.cand_d, st.checked, st.visited, n,
+        interpret=True, tombstone=jnp.asarray(dead))
+    beam = np.asarray(nid)
+    # no dead id anywhere in the merged beam: neighbour targets are
+    # sentinel-masked in the adjacency operand, and tombstoned entries of
+    # the handed-over beam are masked by the wrapper too
+    assert not dead[beam[beam < n]].any()
+
+
+# ---------------------------------------------------------------------------
+# Build-at-once vs build-then-insert parity
+# ---------------------------------------------------------------------------
+
+def test_insert_recall_parity_with_build_at_once(data, seg):
+    """Recall at equal ef: segmented (base + streamed inserts, fan-out +
+    exact merge) must match a from-scratch build over the same corpus
+    within tolerance, and inserted vectors must actually be findable."""
+    x, extra, q = data
+    full = np.concatenate([x, extra])
+    gt = brute_force_topk(full, q, 10)
+    once = PilotANNIndex(dataclasses.replace(CFG), full)
+    r_once = recall_at_k(once.search(q, PARAMS)[0], gt, 10)
+    r_seg = recall_at_k(seg.search(q, PARAMS)[0], gt, 10)
+    assert r_seg >= r_once - 0.03, (r_seg, r_once)
+
+    # inserted vectors are their own nearest neighbours at their gid
+    gids, dists, _ = seg.search(extra[:16], PARAMS)
+    want = 2000 + np.arange(16)
+    assert (gids[:, 0] == want).all()
+    np.testing.assert_allclose(dists[:, 0], 0.0, atol=1e-3)
+
+
+def test_insert_repair_graph_invariants(data):
+    """Delta adjacency after streaming inserts: degree bound respected,
+    edges stay inside the delta id space, no self loops."""
+    x, extra, _ = data
+    s = SegmentedIndex(dataclasses.replace(CFG), x)
+    for i in range(0, len(extra), 32):        # several batches
+        s.insert(extra[i:i + 32])
+    d = s.deltas[0]
+    nb = d.neighbors[:d.m]
+    real = nb < d.cap
+    assert (real.sum(axis=1) <= d.R).all()
+    rows = np.broadcast_to(np.arange(d.m)[:, None], nb.shape)
+    assert not (real & (nb == rows)).any()
+    assert (nb[real] < d.m).all()             # only inserted rows referenced
+
+
+def test_insert_stats_and_delta_accounting(seg, data):
+    x, extra, q = data
+    _, _, stats = seg.search(q[:8], PARAMS)
+    assert (np.asarray(stats["delta_dist"]) > 0).all()
+    rep = seg.memory_report()
+    names = [s["segment"] for s in rep["segments"]]
+    assert names[0] == "base" and len(names) >= 2
+    assert rep["delta_pilot_bytes"] > 0
+    assert rep["total_pilot_bytes"] == \
+        rep["pilot_bytes"] + rep["delta_pilot_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# Deletes
+# ---------------------------------------------------------------------------
+
+def test_delete_never_surfaces(data):
+    """Tombstoned ids (base AND delta) never appear in top-k, on the jnp
+    and the Pallas stage-① paths alike."""
+    x, extra, q = data
+    s = SegmentedIndex(dataclasses.replace(CFG), x)
+    s.insert(extra)
+    gt = brute_force_topk(np.concatenate([x, extra]), q, 10)
+    dead = np.unique(np.concatenate([gt[:, 0], [2005, 2017, 42]]))
+    assert s.delete(dead) == len(dead)
+    assert s.delete(dead) == 0                # idempotent
+    for params in (PARAMS,
+                   dataclasses.replace(PARAMS, use_pallas_traversal=True)):
+        gids, _, _ = s.search(q, params)
+        assert not np.isin(gids, dead).any()
+    assert not s.is_live(dead).any()
+    assert s.n_live == s.n_total - len(dead)
+
+
+def test_delete_honored_by_fes_and_baseline(data):
+    """FES entry selection and the coarse/baseline path honor the bitmap:
+    a tombstoned id can neither route in as an FES entry nor survive the
+    baseline traversal."""
+    x, _, q = data
+    s = SegmentedIndex(dataclasses.replace(CFG), x)
+    gids, _, _ = s.search(q, PARAMS)
+    dead = np.unique(gids[:, 0])
+    s.delete(dead)
+    nofes = dataclasses.replace(PARAMS, use_fes=False)
+    for params in (PARAMS, nofes):
+        g2, _, _ = s.search(q, params)
+        assert not np.isin(g2, dead).any()
+
+
+def test_delete_recall_against_live_groundtruth(data):
+    x, extra, q = data
+    s = SegmentedIndex(dataclasses.replace(CFG), x)
+    s.insert(extra)
+    full = np.concatenate([x, extra])
+    rng = np.random.default_rng(11)
+    dead = rng.choice(len(full), 150, replace=False)
+    s.delete(dead)
+    live = np.setdiff1d(np.arange(len(full)), dead)
+    gt = live[brute_force_topk(full[live], q, 10)]
+    rec = recall_at_k(s.search(q, PARAMS)[0], gt, 10)
+    assert rec >= 0.85, rec
+
+
+# ---------------------------------------------------------------------------
+# Compaction
+# ---------------------------------------------------------------------------
+
+def test_compact_preserves_gids_and_drops_tombstones(data):
+    x, extra, q = data
+    s = SegmentedIndex(dataclasses.replace(CFG), x)
+    s.insert(extra)
+    dead = np.asarray([0, 1, 2000, 2001])
+    s.delete(dead)
+    g_before, d_before, _ = s.search(q, PARAMS)
+    gen = s.generation
+    s.compact()
+    assert s.generation == gen + 1
+    assert not s.deltas and s.n_total == s.n_live == 2200 - 4
+    g_after, _, _ = s.search(q, PARAMS)
+    assert not np.isin(g_after, dead).any()
+    # global ids survive compaction: recall vs the same live ground truth
+    full = np.concatenate([x, extra])
+    live = np.setdiff1d(np.arange(len(full)), dead)
+    gt = live[brute_force_topk(full[live], q, 10)]
+    assert recall_at_k(g_after, gt, 10) >= \
+        recall_at_k(g_before, gt, 10) - 0.03
+
+
+def test_compact_replans_budget():
+    """With a pilot budget set, compact() re-runs the ResidencyPlanner on
+    the merged corpus and the rebuilt base still fits."""
+    rng = np.random.default_rng(12)
+    x = rng.normal(size=(1200, 32)).astype(np.float32)
+    cfg = dataclasses.replace(CFG, sample_ratio=0.3, n_entry=128)
+    probe = PilotANNIndex(cfg, x)
+    budget = int(probe.memory_report()["pilot_bytes"] * 1.15)
+    s = SegmentedIndex(dataclasses.replace(cfg, pilot_budget_bytes=budget), x)
+    s.insert(rng.normal(size=(600, 32)).astype(np.float32))  # +50% corpus
+    s.compact()                                  # must re-plan, not raise
+    assert s.base.memory_report()["pilot_bytes"] <= budget
+    assert s.base.cfg.pilot_budget_bytes == budget
+
+
+def test_auto_compact_triggers():
+    rng = np.random.default_rng(13)
+    x = rng.normal(size=(600, 24)).astype(np.float32)
+    s = SegmentedIndex(
+        dataclasses.replace(CFG, sample_ratio=0.3, n_entry=128), x,
+        UpdateParams(auto_compact_fraction=0.1, delta_capacity=32))
+    s.insert(rng.normal(size=(100, 24)).astype(np.float32))
+    assert s.generation == 1 and not s.deltas and s.base.n == 700
+
+
+# ---------------------------------------------------------------------------
+# Serving runtime: upsert queue + mutable stage pair
+# ---------------------------------------------------------------------------
+
+def test_throughput_engine_upsert_queue_interleaves(data):
+    from repro.serving import ServeParams, ThroughputEngine
+    x, extra, q = data
+    s = SegmentedIndex(dataclasses.replace(CFG), x)
+    eng = ThroughputEngine(s, PARAMS,
+                           ServeParams(buckets=(8, 16, 32), depth=2,
+                                       donate=True, warmup=True,
+                                       max_wait_s=0.0,
+                                       mutations_per_pump=32))
+    t_up = eng.submit_upsert(extra[:64])
+    t_del = eng.submit_delete(np.arange(8))
+    for qq in q[:16]:
+        eng.submit(qq)
+    while eng.queue.pending or eng._inflight or eng._mutations:
+        if not eng.pump():
+            break
+    eng.flush()
+    eng.flush_mutations()
+    assert t_up.done and len(t_up.gids) == 64
+    assert t_del.done
+    assert eng.stats["upserts"] == 64 and eng.stats["deletes"] == 8
+
+    # post-mutation serving sees the inserts, never the deletes
+    ids, _, _ = eng.serve(q)
+    assert not np.isin(ids, np.arange(8)).any()
+    full = np.concatenate([x, extra[:64]])
+    live = np.setdiff1d(np.arange(len(full)), np.arange(8))
+    gt = live[brute_force_topk(full[live], q, 10)]
+    assert recall_at_k(ids, gt, 10) >= 0.85
+
+
+def test_throughput_engine_delete_without_retrace(data):
+    """Deletes flow into compiled executables as tombstone arguments: the
+    stage pair is NOT rebuilt (stage_rebuilds == 0), yet the deleted id
+    stops surfacing."""
+    from repro.serving import ServeParams, ThroughputEngine
+    x, _, q = data
+    s = SegmentedIndex(dataclasses.replace(CFG), x)
+    eng = ThroughputEngine(s, PARAMS,
+                           ServeParams(buckets=(8, 16, 32), depth=1,
+                                       donate=False, warmup=True,
+                                       max_wait_s=0.0))
+    ids0, _, _ = eng.serve(q[:8])
+    dead = np.unique(ids0[:, 0])
+    eng.submit_delete(dead)
+    eng.flush_mutations()
+    assert eng.stats["stage_rebuilds"] == 0
+    ids1, _, _ = eng.serve(q[:8])
+    assert not np.isin(ids1, dead).any()
+
+
+def test_throughput_engine_compact_rebuilds_stages(data):
+    from repro.serving import ServeParams, ThroughputEngine
+    x, extra, q = data
+    s = SegmentedIndex(dataclasses.replace(CFG), x,
+                       UpdateParams(auto_compact_fraction=0.05))
+    eng = ThroughputEngine(s, PARAMS,
+                           ServeParams(buckets=(8, 16), depth=1,
+                                       donate=True, warmup=False,
+                                       max_wait_s=0.0))
+    eng.submit_upsert(extra[:128])               # > 5% of base -> compact
+    eng.flush_mutations()
+    assert s.generation == 1
+    assert eng.stats["stage_rebuilds"] == 1
+    ids, _, _ = eng.serve(q[:8])
+    assert (ids[:, 0] >= 0).all()
+
+
+def test_out_of_band_compact_detected_at_dispatch(data):
+    """A compact() called directly on the served index (not through the
+    upsert queue) must not leave the engine's stage pair pointing at the
+    old base: the generation check at dispatch rebuilds it, and serve()
+    results agree with SegmentedIndex.search."""
+    from repro.serving import ServeParams, ThroughputEngine
+    x, extra, q = data
+    s = SegmentedIndex(dataclasses.replace(CFG), x)
+    eng = ThroughputEngine(s, PARAMS,
+                           ServeParams(buckets=(8, 16), depth=2,
+                                       donate=True, warmup=True,
+                                       max_wait_s=0.0))
+    eng.serve(q[:8])
+    s.insert(extra[:32])
+    s.delete([3, 4])
+    s.compact()                       # out-of-band: no queued mutation
+    ids_e, d_e, _ = eng.serve(q[:16])
+    assert eng.stats["stage_rebuilds"] == 1
+    ids_s, d_s, _ = s.search(q[:16], PARAMS)
+    np.testing.assert_array_equal(ids_e, ids_s)
+    np.testing.assert_allclose(d_e, d_s, rtol=1e-6)
+
+
+def test_upsert_rejected_on_immutable_index(built_index):
+    from repro.serving import ServeParams, ThroughputEngine
+    eng = ThroughputEngine(built_index, PARAMS,
+                           ServeParams(warmup=False))
+    with pytest.raises(ValueError, match="SegmentedIndex"):
+        eng.submit_upsert(np.zeros((1, built_index.d), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# LRU-bounded jit caches (satellite)
+# ---------------------------------------------------------------------------
+
+def test_engine_jit_cache_lru_bounded(data):
+    x, _, q = data
+    idx = PilotANNIndex(dataclasses.replace(CFG, jit_cache_capacity=3), x)
+    for ef in (16, 24, 32, 48, 64):
+        idx.search(q[:8], SearchParams(k=5, ef=ef, ef_pilot=ef))
+    cs = idx.cache_stats()
+    assert cs["cached_executables"] <= 3
+    assert cs["jit_evictions"] == 2 and idx.jit_evictions == 2
+    assert idx.compile_count() <= 3
+    # most-recent params stay cached: re-searching them adds no executable
+    before = len(idx._search_fns)
+    idx.search(q[:8], SearchParams(k=5, ef=64, ef_pilot=64))
+    assert len(idx._search_fns) == before
+
+
+# ---------------------------------------------------------------------------
+# Semantic cache: amortized maintenance (satellite)
+# ---------------------------------------------------------------------------
+
+def test_semantic_cache_incremental_no_rebuild_stall():
+    """Inserts past the first build are bounded incremental repairs into a
+    delta segment (visible immediately); the compaction is deferred until
+    maintain() — and hit/miss accounting stays exact throughout."""
+    from repro.serving import SemanticCache
+    rng = np.random.default_rng(5)
+    cache = SemanticCache(dim=16, threshold=0.05, rebuild_every=8)
+    keys = rng.normal(size=(80, 16)).astype(np.float32)
+    for i, k in enumerate(keys):
+        cache.insert(k, i)
+    assert cache._index is not None
+    assert cache._index.deltas and cache._index.deltas[0].m == 16
+    assert cache.lookup(keys[75] + 1e-4) == 75    # fresh insert, no rebuild
+    assert cache.maintenance_pending
+    assert cache.maintain()
+    assert not cache._index.deltas                # compacted on idle cycle
+    assert cache.lookup(keys[75] + 1e-4) == 75
+    assert cache.hits == 2 and cache.misses == 0
+    assert cache.hit_rate == 1.0
