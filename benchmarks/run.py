@@ -21,7 +21,8 @@ import time
 
 ALL = ["density", "stage_breakdown", "accel_threshold", "recall_qps",
        "ablation", "memory_scaling", "fes_benefit", "graph_sensitivity",
-       "pilot_kernel", "frontier_sweep", "serving_qps", "streaming_update"]
+       "pilot_kernel", "frontier_sweep", "serving_qps", "streaming_update",
+       "pod_scaling"]
 
 
 class _Tee(io.TextIOBase):

@@ -12,10 +12,12 @@ Three classes of rot this catches:
    must resolve to a ``## §...`` heading in DESIGN.md (these have broken
    silently before).
 3. **API doc coverage** — every field of ``SearchParams``, ``IndexConfig``,
-   the serving runtime's ``ServeParams`` and the mutable index's
-   ``UpdateParams`` must be documented (appear in backticks) in
-   docs/api.md, and every key of ``memory_report()`` (including the
-   segmented-index extensions) must appear there too.
+   the serving runtime's ``ServeParams``, the mutable index's
+   ``UpdateParams``, and the pod layer's ``ShardParams`` / ``PodIndexSpec``
+   must be documented (appear in backticks) in docs/api.md, and every key
+   of ``memory_report()`` (including the segmented-index extensions) plus
+   the serving deadline surface (``deadline``, ``min_deadline``) must
+   appear there too.
 
 Exit code 0 = clean; 1 = problems (each printed as ``check_docs: ...``).
 """
@@ -118,10 +120,12 @@ def check_design_refs(problems: list) -> None:
 def check_api_coverage(problems: list) -> None:
     sys.path.insert(0, os.path.join(ROOT, "src"))
     from repro.core import IndexConfig, SearchParams, UpdateParams  # noqa: E402
+    from repro.core.distributed import PodIndexSpec, ShardParams  # noqa: E402
     from repro.serving import ServeParams              # noqa: E402
     api = read(os.path.join("docs", "api.md"))
     documented = set(re.findall(r"`([A-Za-z_][A-Za-z0-9_]*)`", api))
-    for cls in (SearchParams, IndexConfig, ServeParams, UpdateParams):
+    for cls in (SearchParams, IndexConfig, ServeParams, UpdateParams,
+                ShardParams, PodIndexSpec):
         for f in dataclasses.fields(cls):
             if f.name not in documented:
                 problems.append(
@@ -134,6 +138,10 @@ def check_api_coverage(problems: list) -> None:
         if key not in documented:
             problems.append(f"docs/api.md: undocumented memory_report "
                             f"field {key}")
+    # serving deadline surface (serving/batching.py, DESIGN.md §7)
+    for key in ("deadline", "min_deadline"):
+        if key not in documented:
+            problems.append(f"docs/api.md: undocumented serving field {key}")
 
 
 def main() -> int:

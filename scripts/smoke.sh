@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Pre-PR smoke check (see README.md); also what CI runs
-# (.github/workflows/ci.yml). Runs all eight sections even if an earlier one
+# (.github/workflows/ci.yml). Runs all nine sections even if an earlier one
 # fails, then summarizes:
 #   1. tier-1 verify (ROADMAP.md), minus the tests known-red on this
 #      container's jax version (flash-attention pallas internals, qwen2-vl,
@@ -19,6 +19,12 @@
 #   8. mutable-index smoke (DESIGN.md §6): tiny insert->query->delete->
 #      compact round-trip, then the streaming_update benchmark (QPS under
 #      a concurrent insert stream, BENCH_streaming_update.json)
+#   9. pod-scale sharded serving smoke (DESIGN.md §7): 4 forced host CPU
+#      devices (--xla_force_host_platform_device_count), sharded
+#      insert->search->delete round-trip bit-identical to the single-device
+#      index, then the pod_scaling benchmark (QPS-vs-shards curve,
+#      BENCH_pod_scaling.json); CI additionally runs the full
+#      multidevice-marked parity harness as its own step
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -33,36 +39,36 @@ KNOWN_RED=(
 
 declare -A status
 
-echo "== [1/8] tier-1 verify (minus known-red, minus slow) =="
-python -m pytest -x -q -m "not slow" "${KNOWN_RED[@]}"
+echo "== [1/9] tier-1 verify (minus known-red, minus slow/multidevice) =="
+python -m pytest -x -q -m "not slow and not multidevice" "${KNOWN_RED[@]}"
 status[tier1]=$?
 
-echo "== [2/8] fused traversal kernel parity (interpret mode) =="
+echo "== [2/9] fused traversal kernel parity (interpret mode) =="
 python -m pytest -q "tests/test_traversal_kernel.py::test_pallas_greedy_search_parity_4k[bloom]"
 status[kernel_parity]=$?
 
-echo "== [3/8] quickstart =="
+echo "== [3/9] quickstart =="
 python examples/quickstart.py
 status[quickstart]=$?
 
-echo "== [4/8] benchmark smoke (frontier_sweep, interpret mode) =="
+echo "== [4/9] benchmark smoke (frontier_sweep, interpret mode) =="
 python -m benchmarks.run --only frontier_sweep --json .
 status[bench_smoke]=$?
 
-echo "== [5/8] docs consistency (links, DESIGN.md § refs, api coverage) =="
+echo "== [5/9] docs consistency (links, DESIGN.md § refs, api coverage) =="
 python scripts/check_docs.py
 status[docs_check]=$?
 
-echo "== [6/8] memory_scaling benchmark smoke (pilot_dtype sweep) =="
+echo "== [6/9] memory_scaling benchmark smoke (pilot_dtype sweep) =="
 python -m benchmarks.run --only memory_scaling --json .
 status[memory_smoke]=$?
 
-echo "== [7/8] serving_qps smoke (bucketed vs naive, D=2, 200 requests) =="
+echo "== [7/9] serving_qps smoke (bucketed vs naive, D=2, 200 requests) =="
 SERVING_QPS_N=4000 SERVING_QPS_REQUESTS=200 SERVING_QPS_DEPTH=2 \
     python -m benchmarks.run --only serving_qps --json .
 status[serving_smoke]=$?
 
-echo "== [8/8] mutable-index smoke (round-trip + streaming_update) =="
+echo "== [8/9] mutable-index smoke (round-trip + streaming_update) =="
 python - <<'PY' && \
 STREAMING_N=3000 STREAMING_REQUESTS=150 STREAMING_RATE=300 \
     python -m benchmarks.run --only streaming_update --json .
@@ -90,9 +96,39 @@ print("mutable round-trip OK")
 PY
 status[mutable_smoke]=$?
 
+echo "== [9/9] pod serving smoke (sharded round-trip + pod_scaling, 4 CPU devices) =="
+XLA_FLAGS=--xla_force_host_platform_device_count=4 python - <<'PY' && \
+POD_SCALING_N=2500 POD_SCALING_REQUESTS=128 POD_SCALING_SHARDS=1,2,4 \
+    python -m benchmarks.run --only pod_scaling --json .
+import numpy as np
+from repro.core import (IndexConfig, SearchParams, SegmentedIndex,
+                        ShardParams, ShardedSegmentedIndex)
+rng = np.random.default_rng(0)
+x = rng.normal(size=(900, 24)).astype(np.float32)
+extra = rng.normal(size=(32, 24)).astype(np.float32)
+q = rng.normal(size=(16, 24)).astype(np.float32)
+cfg = IndexConfig(R=16, sample_ratio=0.35, n_entry=128, build_method="exact")
+params = SearchParams(k=5, ef=32, ef_pilot=32)
+ref = SegmentedIndex(cfg, x)
+sh = ShardedSegmentedIndex(cfg, x, shard_params=ShardParams(n_shards=4))
+ref.insert(extra); gids = sh.insert(extra)
+ids_r, d_r, _ = ref.search(q, params)
+ids_s, d_s, _ = sh.search(q, params)
+assert np.array_equal(ids_r, ids_s) and np.array_equal(d_r, d_s), \
+    "sharded search diverged from single-device"
+dead = np.unique(ids_r[:, 0])
+ref.delete(dead); sh.delete(dead)
+ids_r2, d_r2, _ = ref.search(q, params)
+ids_s2, d_s2, _ = sh.search(q, params)
+assert np.array_equal(ids_r2, ids_s2) and np.array_equal(d_r2, d_s2)
+assert not np.isin(ids_s2, dead).any(), "tombstoned id surfaced"
+print("4-device sharded round-trip OK")
+PY
+status[pod_smoke]=$?
+
 echo
 rc=0
-for k in tier1 kernel_parity quickstart bench_smoke docs_check memory_smoke serving_smoke mutable_smoke; do
+for k in tier1 kernel_parity quickstart bench_smoke docs_check memory_smoke serving_smoke mutable_smoke pod_smoke; do
     if [ "${status[$k]}" -eq 0 ]; then
         echo "smoke: $k OK"
     else

@@ -1,3 +1,4 @@
+from repro.core.distributed import (ShardedSegmentedIndex, ShardParams)
 from repro.core.engine import (IndexConfig, PilotANNIndex, ResidencyPlan,
                                ResidencyPlanner, brute_force_topk,
                                recall_at_k)
@@ -6,4 +7,5 @@ from repro.core.segments import DeltaSegment, SegmentedIndex, UpdateParams
 
 __all__ = ["IndexConfig", "PilotANNIndex", "ResidencyPlan",
            "ResidencyPlanner", "SearchParams", "brute_force_topk",
-           "recall_at_k", "DeltaSegment", "SegmentedIndex", "UpdateParams"]
+           "recall_at_k", "DeltaSegment", "SegmentedIndex", "UpdateParams",
+           "ShardParams", "ShardedSegmentedIndex"]

@@ -17,10 +17,25 @@ Two gather schemes for the sharded stages:
                      implemented by constraining the gathered block to stay
                      corpus-sharded so XLA reduces post-contraction.
 The §Perf hillclimb measures both from the lowered HLO.
+
+Pod-scale *serving* (DESIGN.md §7) lives here too: ``ShardedSegmentedIndex``
+partitions the mutable ``core/segments.SegmentedIndex`` across a device mesh
+— hot pilot payloads (subgraph, quantized pilot vectors + scales, FES,
+tombstones) replicated per shard, cold tables (full adjacency, full-d
+rotated vectors, residuals) row-sharded, delta segments owned round-robin by
+shards — and serves it through a ``shard_map`` stage pair
+(``core/pipeline.split_stages(shard_ctx=...)``) whose results are
+bit-identical to the single-device index at every shard count.  The
+exactness argument: every row is owned by exactly one shard, the owner
+computes the identical ``traversal.sq_dists`` value, non-owners contribute
+exact zeros, and a psum of one value plus zeros is the value; the cross-
+shard beam merge is ``segments.merge_topk``'s canonical (distance, gid)
+order, which is invariant to the row-to-shard assignment.
 """
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 from functools import partial
 from typing import Dict, Optional, Tuple
@@ -33,6 +48,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import fes as F
 from repro.core import traversal as T
 from repro.core.multistage import SearchParams
+from repro.core.segments import DeltaSegment, SegmentedIndex
 
 
 @dataclass(frozen=True)
@@ -60,6 +76,13 @@ class PodIndexSpec:
                                   # (float32|bfloat16|int8; DESIGN.md §4 —
                                   # int8 adds one fp32 scale row per table)
 
+    # mutable pod serving (DESIGN.md §7): include tombstone bitmaps and
+    # per-shard delta-segment tables in the specs/shardings.  Off by
+    # default so immutable dry-run consumers see the historical key set.
+    mutable: bool = False
+    n_delta_segments: int = 8     # open delta segments (round-robin owned)
+    delta_capacity: int = 65536   # rows per delta segment
+
     def pilot_bytes(self) -> int:
         """Per-chip replicated pilot payload, dtype-aware (the per-chip HBM
         budget the ResidencyPlanner solves against at pod scale)."""
@@ -73,6 +96,22 @@ class PodIndexSpec:
 
     def full_bytes(self) -> int:
         return self.n * self.d * 4 + self.n * self.R * 4
+
+    def delta_bytes(self) -> int:
+        """Accelerator-resident delta-segment payload across the pod
+        (adjacency + quantized pilot rows + scales + gids + liveness;
+        the full-d rotated rows are cold-tier, like ``full_bytes``)."""
+        if not self.mutable:
+            return 0
+        from repro.core import quant
+        vb = quant.VEC_ITEMSIZE[self.pilot_dtype]
+        scale = self.d_primary * 4 if self.pilot_dtype == "int8" else 0
+        per = (self.delta_capacity * self.R * 4
+               + self.delta_capacity * self.d_primary * vb
+               + scale
+               + self.delta_capacity * 8      # global ids (int64)
+               + self.delta_capacity)         # live bitmap
+        return self.n_delta_segments * per
 
 
 def pod_array_specs(spec: PodIndexSpec, mesh) -> Dict[str, jax.ShapeDtypeStruct]:
@@ -100,7 +139,21 @@ def pod_array_specs(spec: PodIndexSpec, mesh) -> Dict[str, jax.ShapeDtypeStruct]
                                           getattr(jnp, spec.vec_dtype)),
         # queries (rotated, full-d)
         "queries": jax.ShapeDtypeStruct((spec.query_batch, spec.d), jnp.float32),
-    }
+    } | ({} if not spec.mutable else {
+        # mutable serving (DESIGN.md §7): deletion bitmaps + delta segments
+        "tombstone": jax.ShapeDtypeStruct((Np,), bool),
+        "pilot_tombstone": jax.ShapeDtypeStruct((npl,), bool),
+        "delta_neighbors": jax.ShapeDtypeStruct(
+            (spec.n_delta_segments, spec.delta_capacity, spec.R), jnp.int32),
+        "delta_pilot": jax.ShapeDtypeStruct(
+            (spec.n_delta_segments, spec.delta_capacity, spec.d_primary), pdt),
+        "delta_pilot_scale": jax.ShapeDtypeStruct(
+            (spec.n_delta_segments, spec.d_primary), jnp.float32),
+        "delta_gids": jax.ShapeDtypeStruct(
+            (spec.n_delta_segments, spec.delta_capacity), jnp.int64),
+        "delta_valid": jax.ShapeDtypeStruct(
+            (spec.n_delta_segments, spec.delta_capacity), bool),
+    })
 
 
 def pod_shardings(spec: PodIndexSpec, mesh, *, corpus_axes=None,
@@ -127,7 +180,18 @@ def pod_shardings(spec: PodIndexSpec, mesh, *, corpus_axes=None,
         "full_neighbors": NS(corpus_axes),
         "full_vecs": NS(corpus_axes),
         "queries": NS(query_axes),
-    }
+    } | ({} if not spec.mutable else {
+        # tombstones ride with the replicated pilot payload (argument
+        # replacement on delete, no retrace); delta segments are owned
+        # round-robin: sharded over segment slots, not rows
+        "tombstone": rep,
+        "pilot_tombstone": rep,
+        "delta_neighbors": NS(corpus_axes),
+        "delta_pilot": NS(corpus_axes),
+        "delta_pilot_scale": NS(corpus_axes),
+        "delta_gids": NS(corpus_axes),
+        "delta_valid": NS(corpus_axes),
+    })
 
 
 def make_pod_search_step(spec: PodIndexSpec, params: Optional[SearchParams] = None,
@@ -309,3 +373,295 @@ def make_shardwise_fns(mesh, corpus_axes, query_spec, N: int, R: int):
 
 def _round_to(x: int, k: int) -> int:
     return -(-x // k) * k
+
+
+# ---------------------------------------------------------------------------
+# Pod-scale serving: the sharded mutable index (DESIGN.md §7)
+#
+# ``make_pod_search_step`` above is the *dry-run* sharded program (spec-sized
+# stand-in arrays).  This section is the servable counterpart: a real
+# ``SegmentedIndex`` partitioned across a device mesh and searched through
+# the serving stage pair (``core/pipeline.split_stages(shard_ctx=...)``),
+# with bit-exact parity against the single-device index at every shard
+# count (tests/test_pod_serving.py runs it on forced host CPU devices).
+# ---------------------------------------------------------------------------
+
+#: base-index keys row-sharded under the "hot-replicated" placement; every
+#: other array (pilot subgraph, quantized pilot rows + scales, FES tables,
+#: coarse layer, tombstones) is replicated per shard
+COLD_KEYS: Tuple[str, ...] = ("full_neighbors", "rot_vecs", "residual")
+
+
+@dataclass(frozen=True)
+class ShardParams:
+    """Pod-serving shard layout (full field reference: docs/api.md).
+
+    placement:
+      * ``hot-replicated`` — the paper-faithful memory-bounded mode: hot
+        pilot payload replicated on every shard, cold tables (``COLD_KEYS``)
+        row-sharded; stages ②③ score cold rows shard-side (owned rows +
+        psum of exact zeros elsewhere — bit-exact, module docstring).
+      * ``replicated`` — every table replicated, the *query batch* sharded
+        instead: pure throughput scaling for skewed/hot traffic that fits
+        one device (batches must divide by ``n_shards``; the bucket ladder
+        rungs are multiples of 8, so shard counts up to 8 always do).
+    """
+    n_shards: int = 1
+    placement: str = "hot-replicated"   # hot-replicated | replicated
+
+    def __post_init__(self):
+        if self.placement not in ("hot-replicated", "replicated"):
+            raise ValueError(f"unknown placement {self.placement!r}")
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+
+
+@dataclass(frozen=True)
+class ShardContext:
+    """Everything the sharded stage pair needs beyond the arrays: the mesh,
+    the shard axis, the *true* corpus size (the sharded tables are padded to
+    ``n_shards * rows_per`` rows, so ``arrays['rot_vecs'].shape[0] - 1`` is
+    wrong on purpose) and the placement mode."""
+    mesh: jax.sharding.Mesh
+    axis: str
+    n_shards: int
+    rows_per: int
+    n: int
+    placement: str
+
+
+def shard_local_nbr_fn(local_table: jax.Array, axis: str, rows_per: int):
+    """Neighbour-row fetch hook for use INSIDE a shard_map body over a
+    row-sharded adjacency table: each shard contributes the rows it owns
+    (global row ``g`` lives on shard ``g // rows_per``) and exact zeros
+    elsewhere; one psum of (B, R) int32 replaces a cross-shard gather.
+    Values in the table are *global* ids, so only rows are partitioned."""
+    def nbr_fn(u):
+        sid = jax.lax.axis_index(axis)
+        loc = u.astype(jnp.int32) - sid * rows_per
+        owned = (loc >= 0) & (loc < rows_per)
+        rows = local_table[jnp.clip(loc, 0, rows_per - 1)]
+        rows = jnp.where(owned[..., None], rows, 0)
+        return jax.lax.psum(rows, axis)
+    return nbr_fn
+
+
+def shard_local_dist_fn(local_table: jax.Array, axis: str, rows_per: int):
+    """Distance hook for shard_map bodies over a row-sharded vector table,
+    exactness contract of ``multistage.refine_stage``: the owning shard
+    computes the identical ``traversal.sq_dists`` value (same row bytes,
+    same formula), non-owners contribute exact 0.0, and the psum of one
+    value plus zeros is bit-exact — so the sharded stages reproduce the
+    single-device distances bit-for-bit (tests/test_pod_serving.py)."""
+    def dist_fn(q, ids, fresh=None):
+        sid = jax.lax.axis_index(axis)
+        loc = ids.astype(jnp.int32) - sid * rows_per
+        owned = (loc >= 0) & (loc < rows_per)
+        v = local_table[jnp.clip(loc, 0, rows_per - 1)]
+        d = T.sq_dists(q, v)
+        d = jnp.where(owned, d, jnp.float32(0.0))
+        return jax.lax.psum(d, axis)
+    return dist_fn
+
+
+class ShardedSegmentedIndex(SegmentedIndex):
+    """A ``core/segments.SegmentedIndex`` partitioned across devices
+    (DESIGN.md §7): the drop-in pod-scale backend for
+    ``serving/server.ThroughputEngine``.
+
+    Layout (``ShardParams.placement == "hot-replicated"``):
+      * base *hot* payload — replicated on every shard;
+      * base *cold* tables (``COLD_KEYS``) — row-sharded, rows padded to a
+        multiple of the shard count (pad adjacency rows hold the sentinel);
+      * delta segments — whole segments owned round-robin by shards
+        (``DeltaSegment.device``), searched by the owner and merged exactly
+        in the global id space (``segments.merge_topk``'s canonical
+        (distance, gid) order makes the merge layout-invariant);
+      * tombstones — replicated, refreshed by argument replacement.
+
+    Searches run the sharded stage pair from
+    ``core/pipeline.split_stages(shard_ctx=...)``; results are bit-identical
+    to the single-device ``SegmentedIndex`` at every shard count because
+    every scored row has exactly one owner (module docstring).
+
+    Mutation plumbing (global ids, tombstones, repair, compaction) is
+    inherited from ``SegmentedIndex``; only placement
+    (``_ensure_delta``/``_install_shard_arrays``) and the base search path
+    (``search``/``stage_pair``) are overridden.
+    """
+
+
+    def __init__(self, cfg, vectors, update_params=None, *,
+                 shard_params: Optional[ShardParams] = None,
+                 devices=None):
+        sp = shard_params or ShardParams()
+        devices = list(devices if devices is not None
+                       else jax.devices()[:sp.n_shards])
+        if len(devices) < sp.n_shards:
+            raise ValueError(
+                f"need {sp.n_shards} devices, have {len(devices)} "
+                f"(hint: XLA_FLAGS=--xla_force_host_platform_device_"
+                f"count=N before importing jax forces N CPU devices)")
+        self.sp = sp
+        self.devices = devices[:sp.n_shards]
+        self.mesh = jax.sharding.Mesh(np.array(self.devices), ("shard",))
+        self._shard_open: Dict[int, DeltaSegment] = {}
+        self._target_shard: Optional[int] = None
+        self._rr = 0
+        self._stage_cache: "OrderedDict" = OrderedDict()
+        super().__init__(cfg, vectors, update_params)
+        self._install_shard_arrays()
+
+    # -- placement ----------------------------------------------------
+    def _install_shard_arrays(self) -> None:
+        """(Re)commit the base arrays to the mesh: hot keys replicated,
+        cold keys (``COLD_KEYS``) row-sharded under "hot-replicated"
+        placement — rows padded to ``n_shards * rows_per`` (adjacency
+        pads hold the sentinel ``n``; vector pads are zeros and are
+        never scored: every traversal id is ``<= n``)."""
+        base = self.base
+        n = base.n
+        K = self.sp.n_shards
+        Np = _round_to(n + 1, K)
+        rep = NamedSharding(self.mesh, P())
+        row = NamedSharding(self.mesh, P("shard"))
+        hot_repl = self.sp.placement == "hot-replicated"
+        arrs: Dict[str, jax.Array] = {}
+        for k, v in base.arrays.items():
+            if k in ("tombstone", "pilot_tombstone"):
+                continue                     # ride as stage arguments
+            if hot_repl and k in COLD_KEYS:
+                h = np.asarray(v)
+                pad = Np - h.shape[0]
+                if pad:
+                    fill = (np.full((pad, h.shape[1]), n, h.dtype)
+                            if k == "full_neighbors"
+                            else np.zeros((pad,) + h.shape[1:], h.dtype))
+                    h = np.concatenate([h, fill], axis=0)
+                arrs[k] = jax.device_put(h, row)
+            else:
+                arrs[k] = jax.device_put(v, rep)
+        self._shard_arrays = arrs
+        self._shard_ctx = ShardContext(
+            mesh=self.mesh, axis="shard", n_shards=K,
+            rows_per=Np // K, n=n, placement=self.sp.placement)
+        self._stage_cache.clear()
+        self._install_base_tombstones()
+
+    def _install_base_tombstones(self) -> None:
+        super()._install_base_tombstones()
+        if not hasattr(self, "_shard_arrays"):
+            return            # called from super().__init__; deferred
+        rep = NamedSharding(self.mesh, P())
+        self._tomb_rep = jax.device_put(
+            np.asarray(self.base.arrays["tombstone"]), rep)
+        self._ptomb_rep = jax.device_put(
+            np.asarray(self.base.arrays["pilot_tombstone"]), rep)
+
+    def shard_tombs(self) -> Tuple[jax.Array, jax.Array]:
+        """(pilot_tombstone, tombstone) replicated on the mesh — the
+        REQUIRED trailing arguments of the sharded stage pair."""
+        return self._ptomb_rep, self._tomb_rep
+
+    # -- mutation routing ---------------------------------------------
+    def insert(self, vectors: np.ndarray,
+               shard: Optional[int] = None) -> np.ndarray:
+        """Append vectors; the batch lands in the delta segment owned
+        by ``shard`` (round-robin when None).  Global ids stay
+        monotone across shards, so the cross-shard merge remains a
+        pure top-k in the global id space."""
+        if shard is not None and not 0 <= shard < self.sp.n_shards:
+            raise ValueError(f"shard {shard} out of range "
+                             f"[0, {self.sp.n_shards})")
+        self._target_shard = shard
+        try:
+            return super().insert(vectors)
+        finally:
+            self._target_shard = None
+
+    def _ensure_delta(self, need: int) -> DeltaSegment:
+        s = self._target_shard
+        if s is None:
+            s = self._rr
+            self._rr = (self._rr + 1) % self.sp.n_shards
+        seg = self._shard_open.get(s)
+        if seg is None:
+            seg = DeltaSegment(self.d, self.base.reducer.d_primary,
+                               self.base.cfg.R,
+                               max(self.up.delta_capacity, 8))
+            seg.device = self.devices[s]
+            seg.shard = s
+            self._shard_open[s] = seg
+            self.deltas.append(seg)
+        seg.grow(need)
+        return seg
+
+    def shard_of_gids(self, gids) -> np.ndarray:
+        """Owning shard per global id (base rows by row range, delta
+        rows by segment owner; dead/unknown ids report shard 0) —
+        the engine's per-shard delete routing."""
+        g = np.atleast_1d(np.asarray(gids, np.int64))
+        out = np.zeros(len(g), np.int32)
+        rp = self._shard_ctx.rows_per
+        for i, gid in enumerate(g):
+            j = int(np.searchsorted(self._base_gids, gid))
+            if j < len(self._base_gids) and self._base_gids[j] == gid:
+                out[i] = min(j // rp, self.sp.n_shards - 1)
+                continue
+            for seg in self.deltas:
+                jj = int(np.searchsorted(seg.gids[:seg.m], gid))
+                if jj < seg.m and seg.gids[jj] == gid:
+                    out[i] = getattr(seg, "shard", 0)
+                    break
+        return out
+
+    def compact(self, *, replan: bool = True):
+        super().compact(replan=replan)
+        self._shard_open = {}
+        self._rr = 0
+        self._install_shard_arrays()
+        return self
+
+    # -- search --------------------------------------------------------
+    def stage_pair(self, params: SearchParams, *, donate: bool = True):
+        """The cached sharded stage pair for ``params`` (compiled once
+        per (params, donate, generation); the serving engine's
+        ``_build_stages`` consumes this)."""
+        key = (params, donate, self.generation)
+        fns = self._stage_cache.get(key)
+        if fns is None:
+            from repro.core.pipeline import split_stages
+            fns = split_stages(self._shard_arrays, params,
+                               donate=donate, shard_ctx=self._shard_ctx)
+            self._stage_cache[key] = fns
+            while len(self._stage_cache) > 8:
+                self._stage_cache.popitem(last=False)
+        return fns
+
+    def search(self, queries: np.ndarray, params: SearchParams,
+               *, rotated: bool = False):
+        """Sharded fan-out search, same contract as
+        ``SegmentedIndex.search`` (global ids, exact merge); per-stage
+        distance counters are not threaded through the shard_map
+        stages, so the standard stats keys report zero here and only
+        ``delta_dist`` is populated."""
+        from repro.core.multistage import pad_to_bucket
+        q = jnp.asarray(queries) if rotated else self.rotate_queries(
+            np.asarray(queries, np.float32))
+        qp, B = pad_to_bucket(q, self.base.batch_buckets)
+        pilot, cpu = self.stage_pair(params, donate=False)
+        ptomb, tomb = self.shard_tombs()
+        po = pilot(qp, ptomb)
+        ids, dists = cpu(qp, *po, ptomb, tomb)
+        ids_b = np.asarray(ids)[:B]
+        d_b = np.asarray(dists)[:B]
+        gids, dd, scored = self.merge_with_deltas(q, ids_b, d_b,
+                                                  params.k, params)
+        zeros = np.zeros(B, np.int32)
+        stats = {k: zeros for k in
+                 ("fes_dist", "pilot_dist", "pilot_hops",
+                  "pilot_expanded", "refine_dist", "final_dist",
+                  "final_hops", "final_expanded", "total_cpu_dist")}
+        stats["delta_dist"] = scored
+        return gids, dd, stats
+

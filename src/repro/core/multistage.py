@@ -152,7 +152,8 @@ def hierarchical_entries(arrays: Dict[str, jax.Array], queries: jax.Array,
 
 def refine_stage(arrays: Dict[str, jax.Array], params: SearchParams,
                  queries: jax.Array, cand_id: jax.Array, cand_dp: jax.Array,
-                 visited: jax.Array = None
+                 visited: jax.Array = None, *,
+                 dist_full_fn=None, dist_res_fn=None
                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Stage ② (shared by ``multistage_search`` and
     ``pipeline.split_stages``): exact re-rank of the pilot beam, then a
@@ -175,7 +176,14 @@ def refine_stage(arrays: Dict[str, jax.Array], params: SearchParams,
     Deletes (DESIGN.md §6): when ``arrays`` carries a ``pilot_tombstone``
     bitmap, tombstoned pilot candidates are sentinel-masked out of the
     handed-over beam and the bounded traversal, so a deleted node can
-    never ride the pilot beam into stage ③."""
+    never ride the pilot beam into stage ③.
+
+    Pod sharding (DESIGN.md §7): ``dist_full_fn(queries, full_ids)`` /
+    ``dist_res_fn(q_residual, full_ids)`` override the direct ``rot_vecs``
+    / ``residual`` table gathers with shard-side scoring (owned rows +
+    psum), so this stage runs unchanged inside a ``shard_map`` over
+    row-sharded cold tables.  The hooks must be exact: they replace a
+    gather + ``sq_dists``, not an approximation of it."""
     nk = arrays["pilot_to_full"].shape[0] - 1
     dp = arrays["primary"].shape[1]
     ptf = arrays["pilot_to_full"]
@@ -187,16 +195,19 @@ def refine_stage(arrays: Dict[str, jax.Array], params: SearchParams,
         valid = cand_id < nk
     cand_full = ptf[cand_id]
     if arrays["primary"].dtype != jnp.float32:    # quantized: exact re-score
-        d_full = jnp.where(valid,
-                           T.sq_dists(queries, arrays["rot_vecs"][cand_full]),
-                           jnp.inf)
+        raw = (dist_full_fn(queries, cand_full) if dist_full_fn is not None
+               else T.sq_dists(queries, arrays["rot_vecs"][cand_full]))
+        d_full = jnp.where(valid, raw, jnp.inf)
     else:                                         # exact: SVD identity
         qr = queries[:, dp:]
-        d_res = T.sq_dists(qr, arrays["residual"][cand_full])
+        d_res = (dist_res_fn(qr, cand_full) if dist_res_fn is not None
+                 else T.sq_dists(qr, arrays["residual"][cand_full]))
         d_full = jnp.where(valid, cand_dp + d_res, jnp.inf)
     n_rerank = jnp.sum(valid, axis=1).astype(jnp.int32)
 
     def dist2(qs, ids, fresh):
+        if dist_full_fn is not None:
+            return dist_full_fn(qs, ptf[ids])
         return T.sq_dists(qs, arrays["rot_vecs"][ptf[ids]])
     spec2 = T.TraversalSpec(ef=params.ef, visited_mode=params.visited_mode,
                             bloom_bits=params.bloom_bits,

@@ -162,8 +162,165 @@ class _DonatedStages:
         return ids, dists
 
 
+class _ShardedStages:
+    """The pod-sharded stage pair (DESIGN.md §7): the same
+    ``pilot(queries, pilot_tomb)`` / ``cpu(queries, cand_id, cand_d,
+    visited, pilot_tomb, tomb)`` interface as the other variants, executed
+    as ``shard_map`` programs over ``shard_ctx.mesh``.  The deletion
+    bitmaps are REQUIRED trailing arguments here (a sharded serving index
+    is mutable by construction).
+
+    Placement (``shard_ctx.placement``):
+      * ``hot-replicated`` — hot arrays replicated, ``distributed.COLD_KEYS``
+        row-sharded; stage ① is replicated compute, stages ②③ score cold
+        rows shard-side via ``distributed.shard_local_dist_fn`` /
+        ``shard_local_nbr_fn`` (owned rows + psum — bit-exact, see
+        ``multistage.refine_stage``'s hook contract).
+      * ``replicated`` — all arrays replicated, the query batch sharded
+        over the mesh instead (batch must divide by the shard count; the
+        bucket ladder's multiples-of-8 rungs always do for <= 8 shards).
+
+    The true corpus size comes from ``shard_ctx.n`` — the sharded cold
+    tables are row-padded to a multiple of the shard count, so the usual
+    ``rot_vecs.shape[0] - 1`` would over-count.  Donation: same contract
+    as ``_DonatedStages`` (boundary buffers donated, visited filter pooled
+    through the pilot's scratch argument); jit donation composes with
+    shard_map, aliasing each shard's local buffer."""
+
+    COLD = ("full_neighbors", "rot_vecs", "residual")
+
+    def __init__(self, arrays: Dict[str, jax.Array], params: SearchParams,
+                 ctx, *, donate: bool = False):
+        if params.use_pallas_traversal or params.use_persistent_traversal:
+            raise ValueError("sharded split_stages supports the jnp stage "
+                             "paths only (Pallas stage ① is per-device)")
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import distributed as DI
+
+        self.params = params
+        self.ctx = ctx
+        self.donate = donate
+        self.nk = arrays["pilot_to_full"].shape[0] - 1
+        self._pool: Dict[int, List[jax.Array]] = {}
+        mesh, axis, n = ctx.mesh, ctx.axis, ctx.n
+        rows_per = ctx.rows_per
+        dp = arrays["primary"].shape[1]
+        hot_repl = ctx.placement == "hot-replicated"
+        keys = tuple(sorted(arrays.keys()))
+        self._ops = tuple(arrays[k] for k in keys)
+        arr_specs = tuple(P(axis) if hot_repl and k in self.COLD else P()
+                          for k in keys)
+        qspec = P() if hot_repl else P(axis)
+        self._qsharding = NamedSharding(mesh, qspec)
+        self._rsharding = NamedSharding(mesh, P())
+
+        def pilot_core(ops, queries, visited_scratch, pilot_tomb):
+            a = dict(zip(keys, ops))
+            cleared = visited_scratch ^ visited_scratch
+            qp = queries[:, :dp]
+            entry_ids, _ = F.fes_select_ref(
+                qp, a["fes_centroids"], a["fes_entries"],
+                a["fes_entry_ids"], a["fes_valid"], params.fes_L,
+                entries_scale=a.get("fes_entries_scale"),
+                tombstone=pilot_tomb)
+            st1 = T.greedy_search(_pilot_spec(params), qp,
+                                  a["sub_neighbors"], a["primary"],
+                                  self.nk, entry_ids, visited=cleared,
+                                  vec_scale=a.get("primary_scale"),
+                                  tombstone=pilot_tomb)
+            return st1.cand_id, st1.cand_d, st1.visited
+
+        def cpu_core(ops, queries, cand_id, cand_dp, visited,
+                     pilot_tomb, tomb):
+            a = dict(zip(keys, ops))
+            Bq = queries.shape[0]
+            if hot_repl:
+                dfull = DI.shard_local_dist_fn(a["rot_vecs"], axis, rows_per)
+                dres = DI.shard_local_dist_fn(a["residual"], axis, rows_per)
+            else:
+                dfull = dres = None
+            arr = dict(a, pilot_tombstone=pilot_tomb, tombstone=tomb)
+            seed_id, seed_d, _ = refine_stage(
+                arr, params, queries, cand_id, cand_dp, visited=visited,
+                dist_full_fn=dfull, dist_res_fn=dres)
+            spec3 = T.TraversalSpec(ef=params.ef,
+                                    visited_mode=params.visited_mode,
+                                    bloom_bits=params.bloom_bits,
+                                    max_iters=params.max_iters,
+                                    frontier_width=params.frontier_width)
+            if hot_repl:
+                # tombstone-mask the *local* table here: with an nbr_fn,
+                # greedy_search's own masking applies to the (unused)
+                # positional table only.  Masking is value-wise (global
+                # ids), so it composes with row sharding.
+                masked = T.sentinel_mask(tomb, a["full_neighbors"], n)
+                nbr3 = DI.shard_local_nbr_fn(masked, axis, rows_per)
+                dist3 = dfull
+            else:
+                masked = a["full_neighbors"]
+                nbr3 = dist3 = None
+            st3 = T.greedy_search(spec3, queries, masked, a["rot_vecs"], n,
+                                  entry_ids=jnp.full((Bq, 1), n, jnp.int32),
+                                  extra_id=seed_id, extra_d=seed_d,
+                                  nbr_fn=nbr3, dist_fn=dist3,
+                                  tombstone=tomb)
+            ids, dists = T.topk_from_state(st3, params.k)
+            return ids, dists, cand_id, cand_dp, visited
+
+        sm_pilot = shard_map(pilot_core, mesh=mesh,
+                             in_specs=(arr_specs, qspec, qspec, P()),
+                             out_specs=(qspec, qspec, qspec),
+                             check_rep=False)
+        sm_cpu = shard_map(cpu_core, mesh=mesh,
+                           in_specs=(arr_specs, qspec, qspec, qspec, qspec,
+                                     P(), P()),
+                           out_specs=(qspec,) * 5,
+                           check_rep=False)
+        if donate:
+            self._pilot_fn = jax.jit(sm_pilot, donate_argnums=(2,))
+            self._cpu_fn = jax.jit(sm_cpu, donate_argnums=(2, 3, 4))
+        else:
+            self._pilot_fn = jax.jit(sm_pilot)
+            self._cpu_fn = jax.jit(sm_cpu)
+
+    def _check_batch(self, Bq: int) -> None:
+        if self.ctx.placement != "hot-replicated" and \
+                Bq % self.ctx.n_shards != 0:
+            raise ValueError(
+                f"'replicated' placement shards the query batch: B={Bq} "
+                f"must divide by n_shards={self.ctx.n_shards} (bucket-pad "
+                f"with multistage.pad_to_bucket first)")
+
+    def pilot(self, queries: jax.Array, *tombs):
+        if len(tombs) != 1:
+            raise TypeError("sharded pilot stage requires the pilot "
+                            "tombstone argument: pilot(queries, pilot_tomb)")
+        Bq = queries.shape[0]
+        self._check_batch(Bq)
+        q = jax.device_put(queries, self._qsharding)
+        pt = jax.device_put(tombs[0], self._rsharding)
+        pool = self._pool.get(Bq)
+        scratch = pool.pop() if pool and self.donate else jax.device_put(
+            visited_buffer(self.params, Bq, self.nk), self._qsharding)
+        return self._pilot_fn(self._ops, q, scratch, pt)
+
+    def cpu(self, queries: jax.Array, cand_id, cand_dp, visited, *tombs):
+        if len(tombs) != 2:
+            raise TypeError("sharded cpu stage requires both tombstone "
+                            "arguments: cpu(..., pilot_tomb, tomb)")
+        q = jax.device_put(queries, self._qsharding)
+        pt = jax.device_put(tombs[0], self._rsharding)
+        tb = jax.device_put(tombs[1], self._rsharding)
+        ids, dists, _cid, _cd, vis_r = self._cpu_fn(
+            self._ops, q, cand_id, cand_dp, visited, pt, tb)
+        if self.donate:
+            self._pool.setdefault(queries.shape[0], []).append(vis_r)
+        return ids, dists
+
+
 def split_stages(arrays: Dict[str, jax.Array], params: SearchParams,
-                 *, donate: bool = False):
+                 *, donate: bool = False, shard_ctx=None):
     """jit the pilot stage (①+FES) and the CPU stages (②③) separately so
     they can be dispatched independently (the pipelining boundary).
     Returns ``(pilot_stage, cpu_stages)`` with
@@ -182,7 +339,15 @@ def split_stages(arrays: Dict[str, jax.Array], params: SearchParams,
     ``pilot_stage(queries, pilot_tomb)`` / ``cpu_stages(..., pilot_tomb,
     tomb)`` — so deletes flow into already-compiled executables without a
     retrace (closure-captured arrays would be baked in as constants);
-    omitted, the immutable traces carry no masking ops."""
+    omitted, the immutable traces carry no masking ops.
+
+    shard_ctx (a ``distributed.ShardContext``) selects the pod-sharded
+    variant (DESIGN.md §7): the stages become ``shard_map`` programs over
+    the context's mesh — bit-identical results at every shard count — and
+    the deletion bitmaps become REQUIRED trailing arguments."""
+    if shard_ctx is not None:
+        stages = _ShardedStages(arrays, params, shard_ctx, donate=donate)
+        return stages.pilot, stages.cpu
     if donate:
         stages = _DonatedStages(arrays, params)
         return stages.pilot, stages.cpu

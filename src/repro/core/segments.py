@@ -84,6 +84,37 @@ class UpdateParams:
 
 
 # ---------------------------------------------------------------------------
+# Canonical beam merge (shared by single-device fan-out and pod sharding)
+# ---------------------------------------------------------------------------
+
+def merge_topk(gids: np.ndarray, dists: np.ndarray, k: int
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact top-k over concatenated candidate beams in the global id space,
+    with a **canonical (distance, gid) ordering**: ties in distance break by
+    the smaller global id, never by the position of the candidate in the
+    concatenation.  That makes the merge invariant to how the beams were
+    produced — segment order, shard permutation, row-to-shard assignment —
+    which is what lets the pod-sharded fan-out (core/distributed.py) reuse
+    this merge bit-for-bit against the single-device path (DESIGN.md §7).
+
+    ``gids`` (B, M) int64 with -1 for dead/padded slots, ``dists`` (B, M)
+    float32.  Returns (gids (B, k), dists (B, k)); short rows pad with
+    gid -1 / +inf (padded slots sort last: their distance is +inf)."""
+    G = np.asarray(gids, np.int64)
+    D = np.asarray(dists, np.float32)
+    dead = G < 0
+    D = np.where(dead, np.inf, D)
+    G = np.where(dead, -1, G)
+    if G.shape[1] < k:
+        pad = k - G.shape[1]
+        G = np.pad(G, ((0, 0), (0, pad)), constant_values=-1)
+        D = np.pad(D, ((0, 0), (0, pad)), constant_values=np.inf)
+    order = np.lexsort((G, D), axis=-1)[:, :k]
+    return (np.take_along_axis(G, order, axis=1),
+            np.take_along_axis(D, order, axis=1))
+
+
+# ---------------------------------------------------------------------------
 # Delta-segment search (jit'd; shapes are stable per capacity rung)
 # ---------------------------------------------------------------------------
 
@@ -146,6 +177,10 @@ class DeltaSegment:
         self.neighbors = np.full((cap, R), cap, np.int32)
         self.entry = 0                   # live medoid (traversal entry)
         self.arrays: Dict[str, jax.Array] = {}
+        # pod sharding (core/distributed.ShardedSegmentedIndex): the owning
+        # device — refresh() commits the device arrays there so each shard
+        # scores only its own delta segments; None = default placement
+        self.device = None
 
     def live_mask(self) -> np.ndarray:
         mask = np.zeros(self.cap, bool)
@@ -212,6 +247,9 @@ class DeltaSegment:
             arrays["fes_valid"] = jnp.asarray(fidx.valid)
             if escale is not None:
                 arrays["fes_entries_scale"] = jnp.asarray(escale)
+        if self.device is not None:
+            arrays = {k: jax.device_put(v, self.device)
+                      for k, v in arrays.items()}
         self.arrays = arrays
 
     def pilot_bytes(self) -> int:
@@ -498,6 +536,14 @@ class SegmentedIndex:
             gid_parts.append(seg.gids[:seg.m][live])
         x = np.concatenate(vec_parts, axis=0)
         g = np.concatenate(gid_parts, axis=0)
+        # canonical row order: ascending gid.  A no-op for the sequential
+        # single-device delta chain (segments fill in gid order), but pod
+        # sharding creates delta segments round-robin across shards, so the
+        # concatenation order depends on the layout — sorting makes the
+        # rebuilt base (graph build is row-order sensitive) identical for
+        # every shard count (DESIGN.md §7)
+        order = np.argsort(g, kind="stable")
+        x, g = x[order], g[order]
         cfg = self.base.cfg
         if replan and cfg.pilot_budget_bytes is not None:
             plan = ResidencyPlanner(
@@ -525,6 +571,10 @@ class SegmentedIndex:
         per-query scored-candidate count."""
         from repro.core.multistage import pad_to_bucket
         q_rot, B0 = pad_to_bucket(q_rot)        # bounded jit signatures
+        if seg.device is not None:
+            # pod sharding: colocate the query batch with the segment's
+            # owning device (committed args must agree on placement)
+            q_rot = jax.device_put(q_rot, seg.device)
         k_eff = max(1, min(k, seg.cap))
         if seg.live_count() <= self.up.brute_threshold:
             ids, dd = _delta_brute_topk(q_rot, seg.arrays["rot_vecs"][:-1],
@@ -541,8 +591,11 @@ class SegmentedIndex:
         """Exact cross-segment beam merge: base results (positional ids)
         map to global ids, each live delta contributes its top-k, anything
         tombstoned *since dispatch* is dropped, and the union is re-sorted
-        by exact distance.  Returns (gids (B, k), dists (B, k),
-        delta-scored counts (B,)); short rows pad with gid -1 / +inf."""
+        by ``merge_topk``'s canonical (distance, gid) order — layout-
+        invariant, so the pod-sharded fan-out merges per-shard beams with
+        the identical code path (DESIGN.md §7).  Returns (gids (B, k),
+        dists (B, k), delta-scored counts (B,)); short rows pad with
+        gid -1 / +inf."""
         n = self.base.n
         base_ids = np.asarray(base_ids)
         base_d = np.asarray(base_d, np.float32)
@@ -566,9 +619,8 @@ class SegmentedIndex:
         live = self.is_live(G)
         D = np.where(live, D, np.inf)
         G = np.where(live, G, -1)
-        order = np.argsort(D, axis=1, kind="stable")[:, :k]
-        return (np.take_along_axis(G, order, axis=1),
-                np.take_along_axis(D, order, axis=1), scored)
+        mg, md = merge_topk(G, D, k)
+        return mg, md, scored
 
     def search(self, queries: np.ndarray, params: SearchParams,
                *, rotated: bool = False

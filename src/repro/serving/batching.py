@@ -22,6 +22,11 @@ class Request:
     rid: int
     payload: Any
     enqueued_at: float = field(default_factory=time.monotonic)
+    # absolute dispatch deadline (queue-clock domain); ``submit`` defaults it
+    # to ``enqueued_at + max_wait_s``.  Carried through ``drain``/``requeue``
+    # round-trips, scheduled against by ``ready()`` and surfaced per batch in
+    # the serving engine's ``batch_records`` (ROADMAP item 4 builds on it).
+    deadline: Optional[float] = None
     result: Any = None
     done: bool = False
 
@@ -35,18 +40,28 @@ class BatchingQueue:
         self.pending: Deque[Request] = deque()
         self._next_rid = 0
 
-    def submit(self, payload: Any) -> Request:
-        req = Request(self._next_rid, payload, enqueued_at=self.clock())
+    def submit(self, payload: Any, *,
+               deadline: Optional[float] = None) -> Request:
+        req = Request(self._next_rid, payload, enqueued_at=self.clock(),
+                      deadline=deadline)
+        if req.deadline is None:
+            req.deadline = req.enqueued_at + self.max_wait_s
         self._next_rid += 1
         self.pending.append(req)
         return req
 
     def ready(self) -> bool:
+        """A batch is ready when it is full or the EARLIEST pending deadline
+        has passed.  For default deadlines FIFO order makes the head the
+        earliest (the historical head-age check), but an explicit tight
+        deadline mid-queue — or a requeued straggler carrying its original
+        deadline — must be able to trigger dispatch too; the old head-only
+        age check silently ignored both."""
         if not self.pending:
             return False
         if len(self.pending) >= self.batch_size:
             return True
-        return self.clock() - self.pending[0].enqueued_at >= self.max_wait_s
+        return self.clock() >= min(r.deadline for r in self.pending)
 
     def next_batch(self) -> List[Optional[Request]]:
         """Fixed-size batch: real requests + None padding (compiled-shape

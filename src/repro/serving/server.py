@@ -57,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import multistage
+from repro.core.distributed import ShardedSegmentedIndex
 from repro.core.multistage import SearchParams
 from repro.core.pipeline import split_stages
 from repro.core.segments import SegmentedIndex
@@ -92,11 +93,15 @@ class ServeParams:
 class MutationTicket:
     """Handle for one queued mutation: ``done`` flips when it is applied
     between pump batches; for inserts, ``gids`` then carries the assigned
-    global ids."""
+    global ids.  ``shard`` is the per-shard upsert queue the ticket rides
+    (always 0 on a single-device index); ``seq`` is the global submission
+    order, which the drain preserves across queues (DESIGN.md §7)."""
     kind: str                         # "insert" | "delete"
     payload: Any
     done: bool = False
     gids: Optional[np.ndarray] = None
+    shard: int = 0
+    seq: int = -1
 
 
 class ThroughputEngine:
@@ -113,6 +118,11 @@ class ThroughputEngine:
         self.index = index
         self.segments: Optional[SegmentedIndex] = \
             index if isinstance(index, SegmentedIndex) else None
+        # pod-sharded serving (DESIGN.md §7): a ShardedSegmentedIndex IS a
+        # SegmentedIndex, so all the mutable-serving plumbing applies; the
+        # stage pair and the mutation routing specialize below
+        self.sharded: Optional[ShardedSegmentedIndex] = \
+            index if isinstance(index, ShardedSegmentedIndex) else None
         self.params = params
         self.serve_params = serve_params or ServeParams()
         sp = self.serve_params
@@ -131,8 +141,17 @@ class ThroughputEngine:
                                        rebuild_every=sp.cache_rebuild_every)
         # in-flight batches: (requests, padded rotated queries, pilot
         # outputs, dispatch timestamp)
-        self._inflight: List[Tuple[List[Request], jax.Array, tuple, float]] = []
-        self._mutations: Deque[MutationTicket] = deque()
+        self._inflight: List[Tuple[List[Request], jax.Array, tuple, float,
+                                   Optional[float]]] = []
+        # per-shard upsert queues (DESIGN.md §7): one deque per shard so a
+        # pod drains mutations shard-by-shard between pump batches; a
+        # single-device index has exactly one.  ``seq`` preserves the global
+        # submission order across queues.
+        self._n_mut_queues = self.sharded.sp.n_shards if self.sharded else 1
+        self._mut_queues: List[Deque[MutationTicket]] = [
+            deque() for _ in range(self._n_mut_queues)]
+        self._mut_seq = 0
+        self._rr_shard = 0
         self._t0 = time.perf_counter()
         self._completions: Dict[int, float] = {}      # rid -> done timestamp
         self.stats: Dict[str, Any] = {
@@ -154,6 +173,15 @@ class ThroughputEngine:
         bump, observed at dispatch and in the mutation drain) forces a
         rebuild."""
         sp = self.serve_params
+        if self.sharded is not None:
+            # pod-sharded stage pair (DESIGN.md §7): shard_map executables
+            # cached on the index, tombstones pulled fresh at call time
+            sh = self.sharded
+            pilot, cpu = sh.stage_pair(self.params, donate=sp.donate)
+            self._pilot_call = lambda q: pilot(q, sh.shard_tombs()[0])
+            self._cpu_call = lambda q, *po: cpu(q, *po, *sh.shard_tombs())
+            self._generation = sh.generation
+            return
         if self.segments is None:
             self._pilot_call, self._cpu_call = split_stages(
                 self.index.arrays, self.params, donate=sp.donate)
@@ -188,34 +216,60 @@ class ThroughputEngine:
             self.segments.warmup(self.params, self.serve_params.buckets)
         return len(self.serve_params.buckets)
 
-    # -- mutation entry (DESIGN.md §6) -------------------------------------
-    def submit_upsert(self, vectors: np.ndarray) -> MutationTicket:
+    # -- mutation entry (DESIGN.md §6, §7) ---------------------------------
+    def _mutations_pending(self) -> bool:
+        return any(self._mut_queues)
+
+    def submit_upsert(self, vectors: np.ndarray,
+                      shard: Optional[int] = None) -> MutationTicket:
         """Queue vectors for insertion into the (segmented) index.  Applied
         between pump batches (``mutations_per_pump`` rows at a time); the
-        returned ticket's ``gids`` fills in when it lands."""
+        returned ticket's ``gids`` fills in when it lands.  On a sharded
+        index the batch rides the per-shard upsert queue of ``shard``
+        (round-robin when None) and lands in that shard's delta segment."""
         if self.segments is None:
             raise ValueError("streaming upserts need a SegmentedIndex "
                              "(core/segments.py); this engine serves an "
                              "immutable PilotANNIndex")
+        if shard is not None and not 0 <= shard < self._n_mut_queues:
+            raise ValueError(f"shard {shard} out of range "
+                             f"[0, {self._n_mut_queues})")
+        if shard is None:
+            shard = self._rr_shard
+            self._rr_shard = (self._rr_shard + 1) % self._n_mut_queues
         vectors = np.atleast_2d(np.asarray(vectors, np.float32))
-        t = MutationTicket("insert", vectors)
-        self._mutations.append(t)
+        t = MutationTicket("insert", vectors, shard=shard, seq=self._mut_seq)
+        self._mut_seq += 1
+        self._mut_queues[shard].append(t)
         return t
 
     def submit_delete(self, gids) -> MutationTicket:
-        """Queue global ids for tombstoning (applied between pump batches)."""
+        """Queue global ids for tombstoning (applied between pump batches).
+        On a sharded index the ticket rides the queue of the shard owning
+        the first id (tombstones themselves are replicated — routing only
+        spreads drain work)."""
         if self.segments is None:
             raise ValueError("streaming deletes need a SegmentedIndex")
-        t = MutationTicket("delete", np.atleast_1d(np.asarray(gids, np.int64)))
-        self._mutations.append(t)
+        payload = np.atleast_1d(np.asarray(gids, np.int64))
+        shard = 0
+        if self.sharded is not None and len(payload):
+            shard = int(self.sharded.shard_of_gids(payload[:1])[0])
+        t = MutationTicket("delete", payload, shard=shard, seq=self._mut_seq)
+        self._mut_seq += 1
+        self._mut_queues[shard].append(t)
         return t
 
     def _apply_mutations(self, max_rows: int) -> bool:
-        """Drain up to ``max_rows`` mutation rows from the upsert queue —
-        called between pump batches so mutation work interleaves with query
-        batches instead of blocking one.  Rebuilds the stage pair if a
-        mutation compacted the index (generation bump)."""
-        if self.segments is None or not self._mutations or max_rows <= 0:
+        """Drain up to ``max_rows`` mutation rows from the per-shard upsert
+        queues — called between pump batches so mutation work interleaves
+        with query batches instead of blocking one.  Queues drain in global
+        submission order (``MutationTicket.seq``), so a single-queue engine
+        behaves exactly as before and a sharded one preserves cross-shard
+        causality (an insert submitted before a delete lands first).
+        Rebuilds the stage pair if a mutation compacted the index
+        (generation bump)."""
+        if self.segments is None or not self._mutations_pending() \
+                or max_rows <= 0:
             return False
         # drain in-flight batches first: a mutation may compact the index
         # (auto_compact_fraction), which would invalidate the positional
@@ -223,19 +277,27 @@ class ThroughputEngine:
         while self._inflight:
             self._drain_oldest()
         rows = 0
-        while self._mutations and rows < max_rows:
+        while self._mutations_pending() and rows < max_rows:
+            # next queue = the one whose head ticket was submitted earliest
+            qi = min((i for i, q in enumerate(self._mut_queues) if q),
+                     key=lambda i: self._mut_queues[i][0].seq)
+            mq = self._mut_queues[qi]
             # coalesce a run of same-kind tickets into ONE index call: the
             # repair path amortizes its candidate search over the batch, so
-            # many queued single-row upserts cost one batched insert
-            run = [self._mutations.popleft()]
-            while (self._mutations
-                   and self._mutations[0].kind == run[0].kind
+            # many queued single-row upserts cost one batched insert.  Only
+            # seq-contiguous tickets coalesce, so the run cannot jump over
+            # a mutation of the other kind waiting on another shard's queue
+            run = [mq.popleft()]
+            while (mq and mq[0].kind == run[0].kind
+                   and mq[0].seq == run[-1].seq + 1
                    and rows + sum(len(t.payload) for t in run)
-                   + len(self._mutations[0].payload) <= max_rows):
-                run.append(self._mutations.popleft())
+                   + len(mq[0].payload) <= max_rows):
+                run.append(mq.popleft())
             payload = np.concatenate([t.payload for t in run])
             if run[0].kind == "insert":
-                gids = self.segments.insert(payload)
+                gids = (self.sharded.insert(payload, shard=qi)
+                        if self.sharded is not None
+                        else self.segments.insert(payload))
                 self.stats["upserts"] += len(gids)
                 rows += len(gids)
                 off = 0
@@ -255,8 +317,8 @@ class ThroughputEngine:
 
     def flush_mutations(self) -> None:
         """Apply every queued mutation now (maintenance path)."""
-        while self._mutations:
-            self._apply_mutations(len(self._mutations) * (1 << 20))
+        while self._mutations_pending():
+            self._apply_mutations(1 << 30)
 
     # -- request entry ----------------------------------------------------
     def submit(self, query: np.ndarray) -> Request:
@@ -294,13 +356,18 @@ class ThroughputEngine:
         qr = self.index.rotate_queries(q)
         t = self._now()
         po = self._pilot_call(qr)                 # async dispatch
-        self._inflight.append((reqs, qr, po, t))
+        # earliest dispatch deadline in the batch (queue-clock domain):
+        # surfaced in batch_records so deadline-aware scheduling work
+        # (ROADMAP item 4) can measure slack per batch
+        dl = min((r.deadline for r in reqs if r.deadline is not None),
+                 default=None)
+        self._inflight.append((reqs, qr, po, t, dl))
         self.stats["batches"] += 1
         hist = self.stats["bucket_hist"]
         hist[nb] = hist.get(nb, 0) + 1
 
     def _drain_oldest(self) -> None:
-        reqs, qr, po, t_disp = self._inflight.pop(0)
+        reqs, qr, po, t_disp, dl = self._inflight.pop(0)
         t_cpu = self._now()
         ids, dists = self._cpu_call(qr, *po)      # po buffers donated here
         ids, dists = np.asarray(ids), np.asarray(dists)
@@ -319,7 +386,7 @@ class ThroughputEngine:
         self.stats["batch_records"].append(
             {"bucket": int(qr.shape[0]), "n_real": len(reqs),
              "t_pilot_dispatch": t_disp, "t_cpu_start": t_cpu,
-             "t_done": t_done})
+             "t_done": t_done, "min_deadline": dl})
 
     def pump(self) -> bool:
         """One scheduling action: dispatch a pilot batch if there is

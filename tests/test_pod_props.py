@@ -1,0 +1,137 @@
+"""Property tests for the cross-shard beam merge (segments.merge_topk).
+
+The pod-sharded fan-out (core/distributed.py) concatenates per-shard
+candidate beams and merges them with the SAME ``merge_topk`` the delta-
+segment path uses (DESIGN.md §7).  Bit-exact parity with the single-device
+index rests on three algebraic facts about that merge, checked here with
+hypothesis over adversarial inputs (tied distances, tombstones, ragged
+beams):
+
+  * invariance to shard permutation AND to the row-to-shard assignment of
+    candidates (owner-computes: each gid lives in at most one beam);
+  * tombstoned slots (gid -1) never surface with a finite distance, and
+    live output gids are never duplicated;
+  * hierarchical degradation — merging pre-merged per-segment beams equals
+    one flat merge, so a 1-shard pod is exactly the PR 5 segment merge.
+
+Skip-clean when hypothesis isn't installed.
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.segments import merge_topk
+
+# distances drawn from a tiny value set so ties are the common case, not the
+# 1-in-2^32 case
+DIST_POOL = (0.0, 0.5, 1.0, 1.0, 2.25, np.float32(1e-30), 7.5)
+
+
+@st.composite
+def beams(draw, max_b=4, max_m=12):
+    """(gids, dists) with -1 tombstones and heavy distance ties."""
+    b = draw(st.integers(1, max_b))
+    m = draw(st.integers(1, max_m))
+    gids = draw(st.lists(
+        st.lists(st.integers(-1, 30), min_size=m, max_size=m),
+        min_size=b, max_size=b))
+    dists = draw(st.lists(
+        st.lists(st.sampled_from(DIST_POOL), min_size=m, max_size=m),
+        min_size=b, max_size=b))
+    return (np.asarray(gids, np.int64),
+            np.asarray(dists, np.float32))
+
+
+@st.composite
+def owned_row(draw, max_n=24):
+    """One query row of owner-computes candidates: unique gids."""
+    n = draw(st.integers(1, max_n))
+    gids = draw(st.permutations(range(50)).map(lambda p: p[:n]))
+    dists = draw(st.lists(st.sampled_from(DIST_POOL), min_size=n, max_size=n))
+    return (np.asarray(gids, np.int64), np.asarray(dists, np.float32))
+
+
+def _pad(g, d, m):
+    return (np.pad(g, (0, m - g.size), constant_values=-1),
+            np.pad(d, (0, m - d.size), constant_values=np.inf))
+
+
+@settings(max_examples=200, deadline=None)
+@given(beams(), st.integers(1, 10), st.permutations(range(4)))
+def test_merge_invariant_to_shard_permutation(bd, k, perm):
+    gids, dists = bd
+    K = 4
+    m = gids.shape[1]
+    # view the beam as K shard blocks (pad columns so K divides), then
+    # permute whole blocks — a pod with its shards relabelled
+    mp = -(-m // K) * K
+    G = np.pad(gids, ((0, 0), (0, mp - m)), constant_values=-1)
+    D = np.pad(dists, ((0, 0), (0, mp - m)), constant_values=np.inf)
+    blocks = np.split(G, K, axis=1), np.split(D, K, axis=1)
+    Gp = np.concatenate([blocks[0][i] for i in perm], axis=1)
+    Dp = np.concatenate([blocks[1][i] for i in perm], axis=1)
+    base = merge_topk(G, D, k)
+    swapped = merge_topk(Gp, Dp, k)
+    assert np.array_equal(base[0], swapped[0])
+    assert np.array_equal(base[1].view(np.uint32),
+                          swapped[1].view(np.uint32))
+
+
+@settings(max_examples=200, deadline=None)
+@given(owned_row(), st.integers(1, 10), st.integers(1, 6),
+       st.randoms(use_true_random=False))
+def test_merge_invariant_to_row_to_shard_assignment(row, k, K, rnd):
+    gids, dists = row
+    flat = merge_topk(gids[None], dists[None], k)
+    # scatter the same candidates across K shard beams at random — the
+    # owner-computes layout for any row->shard map — and merge the concat
+    owner = np.asarray([rnd.randrange(K) for _ in gids])
+    width = max(1, int(max((owner == s).sum() for s in range(K))))
+    parts = [_pad(gids[owner == s], dists[owner == s], width)
+             for s in range(K)]
+    G = np.concatenate([p[0] for p in parts])[None]
+    D = np.concatenate([p[1] for p in parts])[None]
+    sharded = merge_topk(G, D, k)
+    assert np.array_equal(flat[0], sharded[0])
+    assert np.array_equal(flat[1].view(np.uint32),
+                          sharded[1].view(np.uint32))
+
+
+@settings(max_examples=200, deadline=None)
+@given(beams(), st.integers(1, 10))
+def test_merge_never_surfaces_tombstones_or_duplicates(bd, k):
+    gids, dists = bd
+    mg, md = merge_topk(gids, dists, k)
+    assert mg.shape == md.shape == (gids.shape[0], k)
+    for r in range(mg.shape[0]):
+        live = mg[r][mg[r] >= 0]
+        # tombstoned inputs only reappear as +inf tail padding
+        assert np.all(np.isinf(md[r][mg[r] < 0]))
+        # a live gid may be duplicated only if the INPUT row held it twice
+        in_counts = {g: int((gids[r] == g).sum()) for g in live}
+        out_counts = {g: int((live == g).sum()) for g in live}
+        assert all(out_counts[g] <= in_counts[g] for g in live)
+        # canonical order: (dist, gid) non-decreasing
+        key = list(zip(md[r].tolist(), mg[r].tolist()))
+        assert key == sorted(key)
+
+
+@settings(max_examples=200, deadline=None)
+@given(owned_row(), st.integers(1, 10), st.integers(1, 5))
+def test_merge_of_premerged_segments_degrades_to_flat_merge(row, k, nseg):
+    gids, dists = row
+    flat = merge_topk(gids[None], dists[None], k)
+    # pre-merge each contiguous segment to its own top-k (the PR 5 per-
+    # segment beams), then merge the merged beams — must equal one flat
+    # merge, which is why 1 shard is exactly the segment merge
+    bounds = np.linspace(0, gids.size, nseg + 1).astype(int)
+    segs = [merge_topk(gids[None, a:b], dists[None, a:b], k)
+            for a, b in zip(bounds[:-1], bounds[1:]) if b > a]
+    G = np.concatenate([s[0] for s in segs], axis=1)
+    D = np.concatenate([s[1] for s in segs], axis=1)
+    hier = merge_topk(G, D, k)
+    assert np.array_equal(flat[0], hier[0])
+    assert np.array_equal(flat[1].view(np.uint32), hier[1].view(np.uint32))

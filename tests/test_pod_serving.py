@@ -1,0 +1,161 @@
+"""Pod-scale sharded serving: exact parity vs the single-device index.
+
+The sharded path (core/distributed.ShardedSegmentedIndex + the shard_map
+stages in core/pipeline._ShardedStages) promises BIT-IDENTICAL results to a
+plain ``SegmentedIndex`` on the same corpus — every cold-table gather is
+owner-computes + exact-zero psum, and the final merge is the canonical
+``segments.merge_topk`` (dist, gid) lexsort, so no float is ever produced by
+a different arithmetic path than the reference.
+
+Multi-device CPU is forced via ``--xla_force_host_platform_device_count`` in
+a child process (XLA_FLAGS must be set before jax imports; the parent test
+process has already initialised jax on one device), mirroring the
+tests/test_distributed.py idiom.  One subprocess covers every scenario so we
+pay the interpreter + index-build cost once.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+
+from repro.core import IndexConfig, SearchParams
+from repro.core.distributed import ShardParams, ShardedSegmentedIndex
+from repro.core.segments import SegmentedIndex, UpdateParams
+from repro.serving import ServeParams, ThroughputEngine
+
+rng = np.random.default_rng(7)
+base = rng.normal(size=(700, 24)).astype(np.float32)
+# duplicate a block of rows: identical vectors => exactly tied distances, so
+# parity also checks the deterministic (dist, gid) tie-break across shards
+x = np.concatenate([base, base[100:150]], axis=0)
+extra = rng.normal(size=(48, 24)).astype(np.float32)
+q = rng.normal(size=(21, 24)).astype(np.float32)
+# steer a few queries straight at duplicated rows so ties actually surface
+q[:4] = x[110:114] + 1e-3
+
+params = SearchParams(k=8, ef=32, ef_pilot=32)
+results = {}
+
+
+def bitexact(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    if a.dtype == np.float32:
+        a, b = a.view(np.uint32), b.view(np.uint32)
+    return bool(np.array_equal(a, b))
+
+
+def parity(cfg, tag, shards=(1, 2, 4, 8), placements=("hot-replicated",)):
+    ref = SegmentedIndex(cfg, x, UpdateParams())
+    rid, rd, _ = ref.search(q, params)
+    for K in shards:
+        for pl in placements:
+            if pl == "replicated" and K == 1:
+                continue
+            sh = ShardedSegmentedIndex(
+                cfg, x, UpdateParams(),
+                shard_params=ShardParams(n_shards=K, placement=pl))
+            sid, sd, _ = sh.search(q, params)
+            results[f"{tag}/K={K}/{pl}/ids"] = bool(np.array_equal(rid, sid))
+            results[f"{tag}/K={K}/{pl}/dists"] = bitexact(rd, sd)
+    return ref
+
+
+cfg = IndexConfig(R=16, sample_ratio=0.35, n_entry=128, build_method="exact")
+parity(cfg, "base", placements=("hot-replicated", "replicated"))
+
+# int8 pilot payloads: stage ① runs on quantized tables, stage ② rescores
+# through the dist_full_fn hook — both must survive sharding bit-for-bit
+cfg8 = IndexConfig(R=16, sample_ratio=0.35, n_entry=128,
+                   build_method="exact", pilot_dtype="int8")
+parity(cfg8, "int8", shards=(2, 4))
+
+# post-insert / post-delete states: interleave two inserts, tombstone the
+# current top hits (including duplicated rows), re-search, then compact
+ref = SegmentedIndex(cfg, x, UpdateParams())
+ref.insert(extra[:24]); ref.insert(extra[24:])
+dead = np.unique(ref.search(q, params)[0][:, 0])
+ref.delete(dead)
+rid2, rd2, _ = ref.search(q, params)
+for K in (2, 4, 8):
+    sh = ShardedSegmentedIndex(cfg, x, UpdateParams(),
+                               shard_params=ShardParams(n_shards=K))
+    sh.insert(extra[:24]); sh.insert(extra[24:])
+    sh.delete(dead)
+    sid2, sd2, _ = sh.search(q, params)
+    results[f"mutated/K={K}/ids"] = bool(np.array_equal(rid2, sid2))
+    results[f"mutated/K={K}/dists"] = bitexact(rd2, sd2)
+    results[f"mutated/K={K}/no_tomb"] = bool(
+        not np.isin(sid2, dead).any())
+    if K == 4:
+        ref.compact(); sh.compact()
+        r3 = ref.search(q, params)
+        s3 = sh.search(q, params)
+        results["compacted/ids"] = bool(np.array_equal(r3[0], s3[0]))
+        results["compacted/dists"] = bitexact(r3[1], s3[1])
+
+# engine-level parity: mutations interleaved with serving through the
+# per-shard upsert queues must replay in the same global order
+sp = ServeParams(buckets=(8, 16, 32), depth=2, donate=True,
+                 warmup=True, mutations_per_pump=16)
+
+
+def drive(engine):
+    t1 = engine.submit_upsert(extra[:24])
+    ids1, d1, _ = engine.serve(q[:10])
+    engine.flush_mutations()
+    assert t1.done and t1.gids is not None
+    t2 = engine.submit_upsert(extra[24:])
+    t3 = engine.submit_delete(t1.gids[:5])
+    engine.flush_mutations()
+    assert t2.done and t3.done
+    ids2, d2, _ = engine.serve(q[10:])
+    return ids1, d1, ids2, d2
+
+
+ref_out = drive(ThroughputEngine(SegmentedIndex(cfg, x, UpdateParams()),
+                                 params, sp))
+for K in (2, 4):
+    eng = ThroughputEngine(
+        ShardedSegmentedIndex(cfg, x, UpdateParams(),
+                              shard_params=ShardParams(n_shards=K)),
+        params, sp)
+    out = drive(eng)
+    results[f"engine/K={K}/ids"] = bool(
+        np.array_equal(ref_out[0], out[0])
+        and np.array_equal(ref_out[2], out[2]))
+    results[f"engine/K={K}/dists"] = (bitexact(ref_out[1], out[1])
+                                      and bitexact(ref_out[3], out[3]))
+    rec = eng.stats["batch_records"][-1]
+    results[f"engine/K={K}/deadline"] = bool(
+        "min_deadline" in rec and rec["min_deadline"] is not None)
+
+print(json.dumps(results))
+"""
+
+
+@pytest.mark.multidevice
+def test_sharded_parity_matches_single_device(tmp_path):
+    script = tmp_path / "pod_parity.py"
+    script.write_text(SCRIPT)
+    env = dict(os.environ,
+               PYTHONPATH=os.path.abspath(os.path.join(
+                   os.path.dirname(__file__), "..", "src")))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, str(script)], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, out.stderr[-4000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    bad = {k: v for k, v in res.items() if v is not True}
+    assert not bad, f"parity violations: {bad}"
+    # sanity: the script actually exercised every scenario family
+    fams = {k.split("/")[0] for k in res}
+    assert fams == {"base", "int8", "mutated", "compacted", "engine"}, fams

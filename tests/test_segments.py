@@ -277,7 +277,7 @@ def test_throughput_engine_upsert_queue_interleaves(data):
     t_del = eng.submit_delete(np.arange(8))
     for qq in q[:16]:
         eng.submit(qq)
-    while eng.queue.pending or eng._inflight or eng._mutations:
+    while eng.queue.pending or eng._inflight or eng._mutations_pending():
         if not eng.pump():
             break
     eng.flush()

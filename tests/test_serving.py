@@ -87,6 +87,49 @@ def test_requeue_preserves_straggler_order():
     assert [r.rid for r in q.pending] == [a.rid, c.rid, d.rid]
 
 
+def test_deadline_survives_drain_requeue_round_trip():
+    """A requeued straggler keeps its ORIGINAL absolute deadline — it does
+    not get a fresh max_wait grace period — so retry urgency is preserved."""
+    t = [0.0]
+    q = BatchingQueue(8, max_wait_s=1.0, clock=lambda: t[0])
+    a = q.submit(np.ones(4))
+    assert a.deadline == pytest.approx(1.0)   # defaulted: enqueued + wait
+    t[0] = 0.9
+    batch = q.drain(8)                        # dispatched... and straggles
+    q.requeue(batch)
+    assert q.pending[0] is a                  # same Request object round-trips
+    assert a.deadline == pytest.approx(1.0)   # deadline NOT reset on requeue
+    t[0] = 0.95
+    assert not q.ready()
+    t[0] = 1.05
+    assert q.ready()                          # original deadline still fires
+
+
+def test_explicit_mid_queue_deadline_triggers_ready():
+    """An explicit tight deadline behind a lax head must trigger dispatch;
+    the historical head-only age check silently ignored it."""
+    t = [0.0]
+    q = BatchingQueue(8, max_wait_s=100.0, clock=lambda: t[0])
+    q.submit(np.ones(4))                      # head: deadline 100
+    urgent = q.submit(np.ones(4), deadline=0.2)
+    assert urgent.deadline == pytest.approx(0.2)
+    t[0] = 0.1
+    assert not q.ready()
+    t[0] = 0.25
+    assert q.ready()                          # mid-queue deadline won
+
+
+def test_engine_batch_records_expose_min_deadline(built_index, small_dataset):
+    eng = ThroughputEngine(built_index, SearchParams(k=4, ef=16, ef_pilot=16),
+                           ServeParams(buckets=(8, 16), depth=1))
+    eng.serve(small_dataset.queries[:5])
+    recs = eng.stats["batch_records"]
+    assert recs and all("min_deadline" in r for r in recs)
+    # serve() routes through BatchingQueue.submit, which defaults deadlines,
+    # so the per-batch minimum must be a real number
+    assert all(isinstance(r["min_deadline"], float) for r in recs)
+
+
 # ---------------------------------------------------------------------------
 # SemanticCache
 # ---------------------------------------------------------------------------
