@@ -22,7 +22,7 @@ import time
 ALL = ["density", "stage_breakdown", "accel_threshold", "recall_qps",
        "ablation", "memory_scaling", "fes_benefit", "graph_sensitivity",
        "pilot_kernel", "frontier_sweep", "serving_qps", "streaming_update",
-       "pod_scaling"]
+       "pod_scaling", "slo_serving"]
 
 
 class _Tee(io.TextIOBase):

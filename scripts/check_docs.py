@@ -12,11 +12,12 @@ Three classes of rot this catches:
    must resolve to a ``## §...`` heading in DESIGN.md (these have broken
    silently before).
 3. **API doc coverage** — every field of ``SearchParams``, ``IndexConfig``,
-   the serving runtime's ``ServeParams``, the mutable index's
-   ``UpdateParams``, and the pod layer's ``ShardParams`` / ``PodIndexSpec``
-   must be documented (appear in backticks) in docs/api.md, and every key
-   of ``memory_report()`` (including the segmented-index extensions) plus
-   the serving deadline surface (``deadline``, ``min_deadline``) must
+   the serving runtime's ``ServeParams`` / ``Request`` / ``MutationTicket``,
+   the mutable index's ``UpdateParams``, and the pod layer's ``ShardParams``
+   / ``PodIndexSpec`` must be documented (appear in backticks) in
+   docs/api.md, and every key of ``memory_report()`` (including the
+   segmented-index extensions) plus the serving deadline/SLO surface
+   (``deadline``, ``min_deadline``, the resilience stats counters) must
    appear there too.
 
 Exit code 0 = clean; 1 = problems (each printed as ``check_docs: ...``).
@@ -121,11 +122,12 @@ def check_api_coverage(problems: list) -> None:
     sys.path.insert(0, os.path.join(ROOT, "src"))
     from repro.core import IndexConfig, SearchParams, UpdateParams  # noqa: E402
     from repro.core.distributed import PodIndexSpec, ShardParams  # noqa: E402
-    from repro.serving import ServeParams              # noqa: E402
+    from repro.serving import (MutationTicket, Request,  # noqa: E402
+                               ServeParams)
     api = read(os.path.join("docs", "api.md"))
     documented = set(re.findall(r"`([A-Za-z_][A-Za-z0-9_]*)`", api))
     for cls in (SearchParams, IndexConfig, ServeParams, UpdateParams,
-                ShardParams, PodIndexSpec):
+                ShardParams, PodIndexSpec, Request, MutationTicket):
         for f in dataclasses.fields(cls):
             if f.name not in documented:
                 problems.append(
@@ -142,6 +144,16 @@ def check_api_coverage(problems: list) -> None:
     for key in ("deadline", "min_deadline"):
         if key not in documented:
             problems.append(f"docs/api.md: undocumented serving field {key}")
+    # resilient-serving surface (DESIGN.md §8): engine stats counters and
+    # queue admission counters the SLO machinery exposes
+    for key in ("completed", "rejected", "expired", "shed",
+                "degraded_batches", "shard_failovers", "shard_heals",
+                "degraded_coverage", "mutation_retries",
+                "mutation_failures", "request_states", "degraded",
+                "counters"):
+        if key not in documented:
+            problems.append(f"docs/api.md: undocumented resilience "
+                            f"field {key}")
 
 
 def main() -> int:

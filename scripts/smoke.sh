@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Pre-PR smoke check (see README.md); also what CI runs
-# (.github/workflows/ci.yml). Runs all nine sections even if an earlier one
+# (.github/workflows/ci.yml). Runs all ten sections even if an earlier one
 # fails, then summarizes:
 #   1. tier-1 verify (ROADMAP.md), minus the tests known-red on this
 #      container's jax version (flash-attention pallas internals, qwen2-vl,
@@ -25,6 +25,11 @@
 #      index, then the pod_scaling benchmark (QPS-vs-shards curve,
 #      BENCH_pod_scaling.json); CI additionally runs the full
 #      multidevice-marked parity harness as its own step
+#  10. fault-injection smoke (DESIGN.md §8): deterministic SimClock chaos
+#      round-trip — expiry under a queue stall, admission rejects, mutation
+#      retry, exactly-one-terminal-state conservation — then the
+#      slo_serving benchmark (open-loop overload sweep + one-stalled-shard
+#      acceptance gate, BENCH_slo_serving.json)
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -39,36 +44,36 @@ KNOWN_RED=(
 
 declare -A status
 
-echo "== [1/9] tier-1 verify (minus known-red, minus slow/multidevice) =="
+echo "== [1/10] tier-1 verify (minus known-red, minus slow/multidevice) =="
 python -m pytest -x -q -m "not slow and not multidevice" "${KNOWN_RED[@]}"
 status[tier1]=$?
 
-echo "== [2/9] fused traversal kernel parity (interpret mode) =="
+echo "== [2/10] fused traversal kernel parity (interpret mode) =="
 python -m pytest -q "tests/test_traversal_kernel.py::test_pallas_greedy_search_parity_4k[bloom]"
 status[kernel_parity]=$?
 
-echo "== [3/9] quickstart =="
+echo "== [3/10] quickstart =="
 python examples/quickstart.py
 status[quickstart]=$?
 
-echo "== [4/9] benchmark smoke (frontier_sweep, interpret mode) =="
+echo "== [4/10] benchmark smoke (frontier_sweep, interpret mode) =="
 python -m benchmarks.run --only frontier_sweep --json .
 status[bench_smoke]=$?
 
-echo "== [5/9] docs consistency (links, DESIGN.md § refs, api coverage) =="
+echo "== [5/10] docs consistency (links, DESIGN.md § refs, api coverage) =="
 python scripts/check_docs.py
 status[docs_check]=$?
 
-echo "== [6/9] memory_scaling benchmark smoke (pilot_dtype sweep) =="
+echo "== [6/10] memory_scaling benchmark smoke (pilot_dtype sweep) =="
 python -m benchmarks.run --only memory_scaling --json .
 status[memory_smoke]=$?
 
-echo "== [7/9] serving_qps smoke (bucketed vs naive, D=2, 200 requests) =="
+echo "== [7/10] serving_qps smoke (bucketed vs naive, D=2, 200 requests) =="
 SERVING_QPS_N=4000 SERVING_QPS_REQUESTS=200 SERVING_QPS_DEPTH=2 \
     python -m benchmarks.run --only serving_qps --json .
 status[serving_smoke]=$?
 
-echo "== [8/9] mutable-index smoke (round-trip + streaming_update) =="
+echo "== [8/10] mutable-index smoke (round-trip + streaming_update) =="
 python - <<'PY' && \
 STREAMING_N=3000 STREAMING_REQUESTS=150 STREAMING_RATE=300 \
     python -m benchmarks.run --only streaming_update --json .
@@ -96,7 +101,7 @@ print("mutable round-trip OK")
 PY
 status[mutable_smoke]=$?
 
-echo "== [9/9] pod serving smoke (sharded round-trip + pod_scaling, 4 CPU devices) =="
+echo "== [9/10] pod serving smoke (sharded round-trip + pod_scaling, 4 CPU devices) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=4 python - <<'PY' && \
 POD_SCALING_N=2500 POD_SCALING_REQUESTS=128 POD_SCALING_SHARDS=1,2,4 \
     python -m benchmarks.run --only pod_scaling --json .
@@ -126,9 +131,51 @@ print("4-device sharded round-trip OK")
 PY
 status[pod_smoke]=$?
 
+echo "== [10/10] fault-injection smoke (SimClock chaos + slo_serving) =="
+python - <<'PY' && \
+SLO_SERVING_N=2500 SLO_SERVING_REQUESTS=128 \
+    python -m benchmarks.run --only slo_serving --json .
+import numpy as np
+from repro.core import IndexConfig, SearchParams, SegmentedIndex
+from repro.runtime.chaos import FaultInjector, SimClock
+from repro.serving import ServeParams, ThroughputEngine
+rng = np.random.default_rng(0)
+x = rng.normal(size=(1200, 24)).astype(np.float32)
+q = rng.normal(size=(40, 24)).astype(np.float32)
+clk = SimClock()
+inj = FaultInjector(clk)
+eng = ThroughputEngine(
+    SegmentedIndex(IndexConfig(R=16, sample_ratio=0.35, n_entry=128,
+                               build_method="exact"), x),
+    SearchParams(k=5, ef=32, ef_pilot=32),
+    ServeParams(buckets=(8,), depth=1, donate=False, max_wait_s=0.01,
+                max_pending=4, slo_timeout_s=0.3,
+                mutation_max_retries=1, mutation_backoff_s=0.01),
+    clock=clk, fault_injector=inj)
+inj.inject("queue_stall", duration=0.5)       # park dispatch; work ages out
+reqs = [eng.submit(q[i % len(q)]) for i in range(8)]
+assert sum(r.state == "rejected" for r in reqs) == 4, "admission bound"
+clk.advance(0.4); eng.pump()
+assert all(r.state == "expired" for r in reqs if r.state != "rejected"), \
+    "queue stall must age pending work to expiry, not hang it"
+clk.advance(0.5)                              # stall window over
+r2 = eng.submit(q[0]); eng.flush()
+assert r2.state == "completed" and r2.result is not None
+inj.inject("mutation_failure", duration=0.005)
+t = eng.submit_upsert(x[:4]); eng.pump()      # fails once, backs off
+clk.advance(0.02); eng.pump()                 # retries after the window
+assert t.done and not t.failed and t.attempts == 2, "mutation retry"
+states = [r.state for r in reqs + [r2]]
+assert all(s in ("completed", "rejected", "expired") for s in states)
+assert eng.stats["completed"] + eng.stats["rejected"] \
+    + eng.stats["expired"] == len(states), "terminal-state conservation"
+print("fault-injection round-trip OK")
+PY
+status[slo_smoke]=$?
+
 echo
 rc=0
-for k in tier1 kernel_parity quickstart bench_smoke docs_check memory_smoke serving_smoke mutable_smoke pod_smoke; do
+for k in tier1 kernel_parity quickstart bench_smoke docs_check memory_smoke serving_smoke mutable_smoke pod_smoke slo_smoke; do
     if [ "${status[$k]}" -eq 0 ]; then
         echo "smoke: $k OK"
     else

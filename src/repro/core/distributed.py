@@ -509,6 +509,13 @@ class ShardedSegmentedIndex(SegmentedIndex):
         self._target_shard: Optional[int] = None
         self._rr = 0
         self._stage_cache: "OrderedDict" = OrderedDict()
+        # degraded mode (DESIGN.md §8): shards declared dead by the serving
+        # layer's HeartbeatMonitor; their rows are masked out of the search
+        # via a tombstone OVERLAY (set_dead_shards) — nothing is recompiled,
+        # so clearing the set restores bit-parity instantly.
+        self._dead_shards: frozenset = frozenset()
+        self._tomb_deg = None
+        self._ptomb_deg = None
         super().__init__(cfg, vectors, update_params)
         self._install_shard_arrays()
 
@@ -557,11 +564,95 @@ class ShardedSegmentedIndex(SegmentedIndex):
             np.asarray(self.base.arrays["tombstone"]), rep)
         self._ptomb_rep = jax.device_put(
             np.asarray(self.base.arrays["pilot_tombstone"]), rep)
+        self._refresh_degraded_tombs()
 
     def shard_tombs(self) -> Tuple[jax.Array, jax.Array]:
         """(pilot_tombstone, tombstone) replicated on the mesh — the
-        REQUIRED trailing arguments of the sharded stage pair."""
+        REQUIRED trailing arguments of the sharded stage pair.  In degraded
+        mode (``set_dead_shards``) the returned bitmaps carry the dead-shard
+        overlay, so already-compiled executables serve survivors-only
+        results without a retrace."""
+        if self._dead_shards:
+            return self._ptomb_deg, self._tomb_deg
         return self._ptomb_rep, self._tomb_rep
+
+    # -- degraded mode (DESIGN.md §8) ----------------------------------
+    @property
+    def dead_shards(self) -> frozenset:
+        return self._dead_shards
+
+    def set_dead_shards(self, dead) -> float:
+        """Enter/leave degraded mode: mask every base row owned by a shard
+        in ``dead`` (and skip its delta segments) via a tombstone overlay.
+
+        The pilot stage keeps its full replicated payload compiled in; the
+        overlay rides the existing tombstone ARGUMENTS, so the same
+        executables serve stage-①-guided, exactly-rescored results from the
+        surviving shards only — identical bits to a single-device index
+        with the same rows deleted (the failover contract the multidevice
+        harness proves).  Passing an empty set heals: the overlay is
+        dropped and results return to bit-parity with the healthy index.
+
+        Returns the fraction of live rows masked (the recall exposure the
+        serving engine surfaces as ``stats["degraded_coverage"]``)."""
+        dead = frozenset(int(s) for s in dead)
+        for s in dead:
+            if not 0 <= s < self.sp.n_shards:
+                raise ValueError(f"shard {s} out of range "
+                                 f"[0, {self.sp.n_shards})")
+        self._dead_shards = dead
+        self._refresh_degraded_tombs()
+        return self.degraded_fraction()
+
+    def _dead_base_rows(self) -> np.ndarray:
+        """Boolean mask over base positional rows owned by dead shards
+        (ownership is by padded row range: row j -> shard j // rows_per)."""
+        n = self.base.n
+        rp = self._shard_ctx.rows_per
+        owner = np.minimum(np.arange(n) // rp, self.sp.n_shards - 1)
+        return np.isin(owner, list(self._dead_shards))
+
+    def _refresh_degraded_tombs(self) -> None:
+        """(Re)build the overlay bitmaps = base tombstones OR dead-shard
+        rows, derived exactly as ``_install_base_tombstones`` derives the
+        base pair (pilot bitmap via ``keep_ids``) so degraded results match
+        the deleted-rows oracle bit-for-bit.  Re-run whenever the base
+        bitmaps refresh (deletes/compaction) while shards are dead."""
+        if not self._dead_shards:
+            self._tomb_deg = self._ptomb_deg = None
+            return
+        n, nk = self.base.n, self.base.n_pilot
+        masked = self._base_tomb | self._dead_base_rows()
+        tomb = np.zeros(n + 1, bool)
+        tomb[:n] = masked
+        ptomb = np.zeros(nk + 1, bool)
+        ptomb[:nk] = masked[self.base.keep_ids]
+        rep = NamedSharding(self.mesh, P())
+        self._tomb_deg = jax.device_put(tomb, rep)
+        self._ptomb_deg = jax.device_put(ptomb, rep)
+
+    def degraded_fraction(self) -> float:
+        """Fraction of live rows (base + delta) currently masked by the
+        dead-shard overlay — 0.0 when healthy."""
+        if not self._dead_shards:
+            return 0.0
+        live_base = ~self._base_tomb
+        masked = int((live_base & self._dead_base_rows()).sum())
+        total = int(live_base.sum())
+        for seg in self.deltas:
+            cnt = seg.live_count()
+            total += cnt
+            if getattr(seg, "shard", 0) in self._dead_shards:
+                masked += cnt
+        return masked / total if total else 0.0
+
+    def _live_deltas(self):
+        """Degraded mode also excludes delta segments owned by dead shards
+        from the merge (their device is unreachable)."""
+        if not self._dead_shards:
+            return self.deltas
+        return [seg for seg in self.deltas
+                if getattr(seg, "shard", 0) not in self._dead_shards]
 
     # -- mutation routing ---------------------------------------------
     def insert(self, vectors: np.ndarray,

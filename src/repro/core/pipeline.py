@@ -395,6 +395,27 @@ def split_stages(arrays: Dict[str, jax.Array], params: SearchParams,
     return pilot_stage, cpu_stages
 
 
+def degrade_params(params: SearchParams, scale: float = 0.5) -> SearchParams:
+    """The low-cost rung of the serving degradation ladder (DESIGN.md §8):
+    the same pipeline at ``scale``-reduced beam/frontier budget.
+
+    Shrinks the recall/latency dials — ``ef``, ``ef_pilot``, ``fes_L`` —
+    while keeping everything that defines the *result contract* (``k``,
+    visited structure, kernel selection) identical, so the degraded stage
+    pair is just another entry in the bucketed executable ladder: same
+    shapes, same trailing tombstone arguments, precompiled by ``warmup``.
+    ``ThroughputEngine`` switches to this rung per-batch when the rolling
+    p99 budget is at risk instead of blowing the SLO."""
+    if not 0.0 < scale <= 1.0:
+        raise ValueError(f"scale must be in (0, 1], got {scale}")
+    import dataclasses
+    return dataclasses.replace(
+        params,
+        ef=max(params.k, int(params.ef * scale)),
+        ef_pilot=max(params.k, int(params.ef_pilot * scale)),
+        fes_L=max(4, int(params.fes_L * scale)))
+
+
 def pipelined_search(arrays: Dict[str, jax.Array], params: SearchParams,
                      query_batches: List[jax.Array],
                      *, pipelined: bool = True, depth: int = 2,

@@ -585,6 +585,12 @@ class SegmentedIndex:
         return (np.asarray(ids)[:B0], np.asarray(dd)[:B0],
                 np.asarray(cnt)[:B0])
 
+    def _live_deltas(self):
+        """Delta segments eligible for search.  The pod layer overrides
+        this to exclude segments owned by dead shards while in degraded
+        mode (core/distributed.py, DESIGN.md §8)."""
+        return self.deltas
+
     def merge_with_deltas(self, q_rot: jax.Array, base_ids: np.ndarray,
                           base_d: np.ndarray, k: int, params: SearchParams
                           ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -605,7 +611,7 @@ class SegmentedIndex:
         all_d = [np.where(ok, base_d, np.inf)]
         Bq = base_ids.shape[0]
         scored = np.zeros(Bq, np.int32)
-        for seg in self.deltas:
+        for seg in self._live_deltas():
             if seg.live_count() == 0:
                 continue
             lids, ld, cnt = self._delta_topk(q_rot, seg, k, params)

@@ -1,5 +1,7 @@
+from repro.runtime.chaos import (ChaosError, Fault, FaultInjector, SimClock)
 from repro.runtime.fault_tolerance import (ElasticPolicy, HeartbeatMonitor,
                                            RestartPolicy, StragglerMitigator)
 
-__all__ = ["ElasticPolicy", "HeartbeatMonitor", "RestartPolicy",
+__all__ = ["ChaosError", "ElasticPolicy", "Fault", "FaultInjector",
+           "HeartbeatMonitor", "RestartPolicy", "SimClock",
            "StragglerMitigator"]

@@ -1,21 +1,31 @@
-"""Fault-tolerance runtime: heartbeats, restart policy, elastic re-meshing,
-straggler mitigation.
+"""Fault-tolerance primitives for the serving pod: heartbeats, restart
+policy, elastic re-meshing, straggler mitigation.
 
-On real multi-host TPU deployments these hooks sit between the cluster
-scheduler and the training/serving driver; on this single-host container they
-are exercised by the integration tests through simulated clocks/failures.
-The mechanisms are the production ones:
+These are the mechanisms ``serving.ThroughputEngine`` wires into its pump
+loop (DESIGN.md §8); on this single-host container they are exercised
+deterministically through injected clocks and ``runtime/chaos.py`` fault
+windows, and the same objects drop onto a real multi-host pod unchanged:
 
-  * HeartbeatMonitor — per-host liveness with timeout-based failure detection
-    (the launcher scripts run one heartbeat thread per host process).
-  * RestartPolicy    — bounded exponential backoff + checkpoint-step replay
-    accounting (at-least-once step semantics; data pipeline is pure in
-    (seed, step) so replays are bit-identical).
-  * ElasticPolicy    — decides the new mesh when hosts are lost: shrink to
-    the largest feasible (data) axis while preserving 'model'=16 (TP degree
-    is a checkpoint-layout invariant here; 'data'/'pod' are elastic).
-  * StragglerMitigator — duplicate-issue of the slowest shards' work (backup
-    tasks) once their latency exceeds p50 * factor, first-result-wins.
+  * HeartbeatMonitor — per-shard liveness with timeout-based failure
+    detection.  The engine beats every responsive shard once per pump; a
+    shard quiet past the timeout triggers tombstone-overlay failover on the
+    ``ShardedSegmentedIndex`` (degraded survivors-only serving), and beats
+    resuming heal it back to bit-parity.
+  * RestartPolicy    — bounded exponential backoff for failing mutation
+    drains.  Retries are idempotent by ``MutationTicket.seq`` (an applied
+    ticket is never re-applied; re-queued tickets keep their seq, so the
+    global replay order is preserved); ``next_backoff() is None`` is the
+    give-up signal — the engine then terminates the tickets as ``failed``
+    instead of retrying forever.
+  * ElasticPolicy    — decides a new mesh shape when hosts are lost.  Note
+    this models a TRAINING mesh (fixed tensor-parallel 'model' axis, the
+    historical default of 16, with elastic 'data'/'pod' axes); the serving
+    pod's 1-axis ("shard",) mesh does not re-mesh on failure — it degrades
+    via tombstone overlay and heals in place — so the serving engine does
+    not consume this policy.  Kept for trainers colocated with serving.
+  * StragglerMitigator — duplicate-issue of the slowest shards' work
+    (backup tasks) once their latency exceeds p50 * factor,
+    first-result-wins; pairs with ``BatchingQueue.requeue``.
 """
 
 from __future__ import annotations
@@ -26,6 +36,12 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 
 class HeartbeatMonitor:
+    """Timeout-based liveness over named hosts (serving: one ``"shard:i"``
+    entry per shard).  ``beat`` refreshes a host; ``dead_hosts`` is
+    evaluated lazily against the injected clock, so a host can go dead and
+    come back alive purely by beating again — the heal-on-return contract
+    the serving failover relies on (no explicit recovery call)."""
+
     def __init__(self, hosts: Sequence[str], *, timeout_s: float = 60.0,
                  clock: Callable[[], float] = time.monotonic):
         self.timeout_s = timeout_s
@@ -48,6 +64,13 @@ class HeartbeatMonitor:
 
 @dataclass
 class RestartPolicy:
+    """Bounded exponential backoff for a retryable unit of work.
+
+    The serving engine keeps one per mutation queue: each failing drain
+    consumes ``next_backoff()`` (doubling from ``base_backoff_s``, capped
+    at ``max_backoff_s``); a success resets ``restarts`` to 0; ``None``
+    means the budget is exhausted — give up and surface the failure
+    (``MutationTicket.failed``) rather than retry forever."""
     max_restarts: int = 100
     base_backoff_s: float = 5.0
     max_backoff_s: float = 300.0
@@ -63,17 +86,23 @@ class RestartPolicy:
         return b
 
     def replay_from(self, checkpoint_step: Optional[int]) -> int:
-        """Step to resume at (checkpoints are post-step, replay is exact
-        because the data pipeline is pure in (seed, step))."""
+        """Step to resume a *training* loop at after a restart (checkpoints
+        are post-step; replay is exact when the data pipeline is pure in
+        (seed, step)).  The serving engine's unit of replay is the mutation
+        ticket, not a step — it re-queues tickets by ``seq`` and never
+        consults this."""
         return 0 if checkpoint_step is None else checkpoint_step + 1
 
 
 @dataclass
 class ElasticPolicy:
-    """Shrink/grow the mesh as hosts come and go.  'model' (TP) stays fixed:
-    parameter layout depends on it; 'pod'/'data' absorb the change.  The
-    checkpoint store is mesh-agnostic, so restoring onto the new mesh is a
-    device_put with new shardings (see checkpoint.load_checkpoint)."""
+    """Shrink/grow a TRAINING mesh as hosts come and go: 'model' (TP) stays
+    fixed because parameter layout depends on it, 'pod'/'data' absorb the
+    change.  NOT used by the serving pod — its 1-axis ("shard",) mesh
+    never re-shapes on failure (a re-mesh would re-shard the cold tables
+    and recompile every stage executable mid-incident); it masks the dead
+    shard's rows instead (core/distributed.set_dead_shards, DESIGN.md §8)
+    and heals in place."""
     model_degree: int = 16
     min_data_degree: int = 1
 

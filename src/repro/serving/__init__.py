@@ -1,8 +1,10 @@
-from repro.serving.batching import BatchingQueue, Request
+from repro.serving.batching import (BatchingQueue, Request,
+                                    TERMINAL_STATES)
 from repro.serving.rag import RagPipeline
 from repro.serving.semantic_cache import SemanticCache
 from repro.serving.server import (MutationTicket, ServeParams,
                                   ThroughputEngine)
 
 __all__ = ["BatchingQueue", "Request", "RagPipeline", "SemanticCache",
-           "ServeParams", "ThroughputEngine", "MutationTicket"]
+           "ServeParams", "TERMINAL_STATES", "ThroughputEngine",
+           "MutationTicket"]

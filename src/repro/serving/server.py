@@ -39,10 +39,26 @@ search core, built from four mechanisms:
    (rare) bumps the index generation, and the engine rebuilds its stage
    pair when it notices (``stats["stage_rebuilds"]``).
 
+6. **SLO-aware resilience** (DESIGN.md §8) — the runtime is bounded and
+   fault-tolerant: ``max_pending`` admission control with priority-aware
+   load shedding (every refused request terminates as ``rejected`` with a
+   reason), hard per-request ``expiry`` enforcement (overdue work
+   terminates as ``expired``, never silently vanishes), a precompiled
+   *degradation ladder* (``pipeline.degrade_params``) the dispatcher drops
+   to per-batch when the rolling p99 is at risk of blowing
+   ``p99_budget_s``, ``runtime.HeartbeatMonitor``-driven shard liveness
+   with tombstone-overlay failover/heal on a ``ShardedSegmentedIndex``,
+   and ``runtime.RestartPolicy``-backed mutation retries (idempotent by
+   ``MutationTicket.seq``).  ``runtime/chaos.py`` injects deterministic
+   faults at each of these decision points.
+
 ``benchmarks/serving_qps.py`` drives Poisson arrivals through this runtime
 and reports steady-state QPS + latency percentiles for naive-per-shape-jit
 vs bucketed vs bucketed+pipelined serving; ``benchmarks/streaming_update.py``
-measures sustained QPS/recall under a concurrent insert stream.
+measures sustained QPS/recall under a concurrent insert stream;
+``benchmarks/slo_serving.py`` sweeps offered load past saturation (with and
+without injected faults) and reports goodput / reject / expire / degrade
+rates.
 """
 
 from __future__ import annotations
@@ -50,7 +66,7 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Deque, Dict, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,8 +75,9 @@ import numpy as np
 from repro.core import multistage
 from repro.core.distributed import ShardedSegmentedIndex
 from repro.core.multistage import SearchParams
-from repro.core.pipeline import split_stages
+from repro.core.pipeline import degrade_params, split_stages
 from repro.core.segments import SegmentedIndex
+from repro.runtime.fault_tolerance import HeartbeatMonitor, RestartPolicy
 from repro.serving.batching import BatchingQueue, Request
 from repro.serving.semantic_cache import SemanticCache
 
@@ -87,6 +104,30 @@ class ServeParams:
     # streaming upserts (DESIGN.md §6): max mutation rows (insert vectors /
     # delete ids) applied from the upsert queue between two pump batches
     mutations_per_pump: int = 64
+    # -- resilience (DESIGN.md §8) ----------------------------------------
+    # admission control: max queued requests (None = unbounded, the
+    # historical behavior); over the bound, lowest-priority work is shed
+    # or the newcomer is rejected with reason "queue_full"
+    max_pending: Optional[int] = None
+    # hard SLO cutoff: default request expiry = submit time + this many
+    # seconds (None = requests never expire); still-pending work past its
+    # cutoff terminates as ``expired`` instead of being served late
+    slo_timeout_s: Optional[float] = None
+    # degradation ladder: when the rolling p99 over the last ``slo_window``
+    # completed requests (or head-of-line wait + typical service time)
+    # threatens this budget, dispatch uses the precompiled low-cost rung
+    # (``pipeline.degrade_params(params, degrade_ef_scale)``) instead of
+    # blowing the SLO.  None disables the ladder (no extra executables).
+    p99_budget_s: Optional[float] = None
+    degrade_ef_scale: float = 0.5
+    slo_window: int = 64
+    # shard liveness (sharded index only): a shard that misses heartbeats
+    # for this long is declared dead -> tombstone-overlay failover
+    heartbeat_timeout_s: float = 1.0
+    # mutation fault tolerance: RestartPolicy retry budget + base backoff
+    # for a failing mutation drain (give-up marks tickets ``failed``)
+    mutation_max_retries: int = 3
+    mutation_backoff_s: float = 0.05
 
 
 @dataclass
@@ -102,6 +143,16 @@ class MutationTicket:
     gids: Optional[np.ndarray] = None
     shard: int = 0
     seq: int = -1
+    # fault tolerance (DESIGN.md §8): a failing drain retries the ticket
+    # with RestartPolicy backoff — ``attempts`` counts tries; after the
+    # policy gives up the ticket terminates with ``failed`` set and the
+    # error message in ``error`` (done flips either way: applied or
+    # surfaced, never silently dropped).  Retries are idempotent by
+    # ``seq``: a done ticket is never re-applied, and re-queued tickets
+    # keep their seq so the global replay order is preserved.
+    attempts: int = 0
+    failed: bool = False
+    error: Optional[str] = None
 
 
 class ThroughputEngine:
@@ -114,8 +165,17 @@ class ThroughputEngine:
     """
 
     def __init__(self, index, params: SearchParams,
-                 serve_params: Optional[ServeParams] = None):
+                 serve_params: Optional[ServeParams] = None, *,
+                 clock: Optional[Callable[[], float]] = None,
+                 fault_injector=None):
         self.index = index
+        # clock/fault injection (DESIGN.md §8): an injected clock (e.g.
+        # runtime.chaos.SimClock) puts the queue, heartbeats, expiry and
+        # batch timestamps on ONE deterministic timeline; a
+        # runtime.chaos.FaultInjector is consulted at the scheduling
+        # decision points.  Both default to off = the production path.
+        self._clock = clock
+        self._fault_injector = fault_injector
         self.segments: Optional[SegmentedIndex] = \
             index if isinstance(index, SegmentedIndex) else None
         # pod-sharded serving (DESIGN.md §7): a ShardedSegmentedIndex IS a
@@ -133,16 +193,32 @@ class ThroughputEngine:
                              f"got {sp.buckets}")
         self._generation = -1
         self._build_stages()
-        self.queue = BatchingQueue(sp.buckets[-1], max_wait_s=sp.max_wait_s)
+        qclock = clock if clock is not None else time.monotonic
+        self.queue = BatchingQueue(sp.buckets[-1], max_wait_s=sp.max_wait_s,
+                                   clock=qclock,
+                                   max_pending=sp.max_pending)
+        # shard liveness (DESIGN.md §8): one heartbeat per shard; a shard
+        # that stops beating past the timeout is declared dead and the
+        # sharded index fails over to the tombstone-overlay degraded mode
+        self.heartbeats: Optional[HeartbeatMonitor] = None
+        if self.sharded is not None:
+            self.heartbeats = HeartbeatMonitor(
+                [f"shard:{i}" for i in range(self.sharded.sp.n_shards)],
+                timeout_s=sp.heartbeat_timeout_s, clock=qclock)
+        # rolling SLO telemetry: recent completed-request latencies
+        # (queue-clock domain) + recent batch service times drive the
+        # degradation decision in ``_should_degrade``
+        self._lat_window: Deque[float] = deque(maxlen=max(8, sp.slo_window))
+        self._svc_window: Deque[float] = deque(maxlen=32)
         self.cache: Optional[SemanticCache] = None
         if sp.use_semantic_cache:
             self.cache = SemanticCache(dim=index.d,
                                        threshold=sp.cache_threshold,
                                        rebuild_every=sp.cache_rebuild_every)
         # in-flight batches: (requests, padded rotated queries, pilot
-        # outputs, dispatch timestamp)
+        # outputs, dispatch timestamp, earliest deadline, degraded rung?)
         self._inflight: List[Tuple[List[Request], jax.Array, tuple, float,
-                                   Optional[float]]] = []
+                                   Optional[float], bool]] = []
         # per-shard upsert queues (DESIGN.md §7): one deque per shard so a
         # pod drains mutations shard-by-shard between pump batches; a
         # single-device index has exactly one.  ``seq`` preserves the global
@@ -152,13 +228,25 @@ class ThroughputEngine:
             deque() for _ in range(self._n_mut_queues)]
         self._mut_seq = 0
         self._rr_shard = 0
+        # per-queue RestartPolicy + earliest-retry time for failing drains
+        self._mut_restart = [
+            RestartPolicy(max_restarts=sp.mutation_max_retries,
+                          base_backoff_s=sp.mutation_backoff_s,
+                          max_backoff_s=max(sp.mutation_backoff_s, 1e-9) * 64)
+            for _ in range(self._n_mut_queues)]
+        self._mut_not_before = [0.0] * self._n_mut_queues
         self._t0 = time.perf_counter()
         self._completions: Dict[int, float] = {}      # rid -> done timestamp
         self.stats: Dict[str, Any] = {
             "requests": 0, "batches": 0, "bucket_hist": {},
             "cache_lookups": 0, "cache_hits": 0, "batch_records": [],
             "upserts": 0, "deletes": 0, "mutation_drains": 0,
-            "stage_rebuilds": 0, "cache_maintenance": 0}
+            "stage_rebuilds": 0, "cache_maintenance": 0,
+            # terminal-state + resilience counters (DESIGN.md §8)
+            "completed": 0, "rejected": 0, "expired": 0, "shed": 0,
+            "degraded_batches": 0, "shard_failovers": 0, "shard_heals": 0,
+            "degraded_coverage": 0.0, "mutation_retries": 0,
+            "mutation_failures": 0}
         if sp.warmup:
             self.warmup()
 
@@ -173,6 +261,15 @@ class ThroughputEngine:
         bump, observed at dispatch and in the mutation drain) forces a
         rebuild."""
         sp = self.serve_params
+        # degradation ladder (DESIGN.md §8): one extra (pilot, cpu) pair at
+        # reduced beam budget, dispatched to per-batch when the p99 budget
+        # is at risk.  Same bucketed shapes, same tombstone plumbing — it
+        # is just another rung of the executable ladder.
+        self._degraded_params: Optional[SearchParams] = None
+        self._pilot_lo = self._cpu_lo = None
+        if sp.p99_budget_s is not None and sp.degrade_ef_scale < 1.0:
+            self._degraded_params = degrade_params(self.params,
+                                                   sp.degrade_ef_scale)
         if self.sharded is not None:
             # pod-sharded stage pair (DESIGN.md §7): shard_map executables
             # cached on the index, tombstones pulled fresh at call time
@@ -180,11 +277,20 @@ class ThroughputEngine:
             pilot, cpu = sh.stage_pair(self.params, donate=sp.donate)
             self._pilot_call = lambda q: pilot(q, sh.shard_tombs()[0])
             self._cpu_call = lambda q, *po: cpu(q, *po, *sh.shard_tombs())
+            if self._degraded_params is not None:
+                plo, clo = sh.stage_pair(self._degraded_params,
+                                         donate=sp.donate)
+                self._pilot_lo = lambda q: plo(q, sh.shard_tombs()[0])
+                self._cpu_lo = lambda q, *po: clo(q, *po, *sh.shard_tombs())
             self._generation = sh.generation
             return
         if self.segments is None:
             self._pilot_call, self._cpu_call = split_stages(
                 self.index.arrays, self.params, donate=sp.donate)
+            if self._degraded_params is not None:
+                self._pilot_lo, self._cpu_lo = split_stages(
+                    self.index.arrays, self._degraded_params,
+                    donate=sp.donate)
             return
         base = self.segments.base
         pilot, cpu = split_stages(base.arrays, self.params,
@@ -194,10 +300,20 @@ class ThroughputEngine:
         self._cpu_call = lambda q, *po: cpu(
             q, *po, base.arrays["pilot_tombstone"],
             base.arrays["tombstone"])
+        if self._degraded_params is not None:
+            plo, clo = split_stages(base.arrays, self._degraded_params,
+                                    donate=sp.donate)
+            self._pilot_lo = lambda q: plo(
+                q, base.arrays["pilot_tombstone"])
+            self._cpu_lo = lambda q, *po: clo(
+                q, *po, base.arrays["pilot_tombstone"],
+                base.arrays["tombstone"])
         self._generation = self.segments.generation
 
     # -- clock ------------------------------------------------------------
     def _now(self) -> float:
+        if self._clock is not None:
+            return self._clock()          # injected timeline (SimClock)
         return time.perf_counter() - self._t0
 
     # -- precompile -------------------------------------------------------
@@ -210,10 +326,18 @@ class ThroughputEngine:
             q = jnp.zeros((b, self.index.d), jnp.float32)
             po = self._pilot_call(q)
             jax.block_until_ready(self._cpu_call(q, *po))
+            if self._pilot_lo is not None:
+                # the degradation ladder's low-cost rung must be warm too:
+                # degrading to save the p99 budget cannot pay a trace
+                po = self._pilot_lo(q)
+                jax.block_until_ready(self._cpu_lo(q, *po))
         if self.segments is not None:
             # also warm the mutation/merge path (repair search, delta
             # scorers) so the first upsert doesn't stall a serve batch
             self.segments.warmup(self.params, self.serve_params.buckets)
+            if self._degraded_params is not None:
+                self.segments.warmup(self._degraded_params,
+                                     self.serve_params.buckets)
         return len(self.serve_params.buckets)
 
     # -- mutation entry (DESIGN.md §6, §7) ---------------------------------
@@ -259,7 +383,14 @@ class ThroughputEngine:
         self._mut_queues[shard].append(t)
         return t
 
-    def _apply_mutations(self, max_rows: int) -> bool:
+    def _mut_eligible(self, *, ignore_backoff: bool) -> List[int]:
+        """Queues with work whose retry backoff (if any) has elapsed."""
+        now = self.queue.clock()
+        return [i for i, q in enumerate(self._mut_queues)
+                if q and (ignore_backoff or now >= self._mut_not_before[i])]
+
+    def _apply_mutations(self, max_rows: int, *,
+                         ignore_backoff: bool = False) -> bool:
         """Drain up to ``max_rows`` mutation rows from the per-shard upsert
         queues — called between pump batches so mutation work interleaves
         with query batches instead of blocking one.  Queues drain in global
@@ -267,9 +398,16 @@ class ThroughputEngine:
         behaves exactly as before and a sharded one preserves cross-shard
         causality (an insert submitted before a delete lands first).
         Rebuilds the stage pair if a mutation compacted the index
-        (generation bump)."""
-        if self.segments is None or not self._mutations_pending() \
-                or max_rows <= 0:
+        (generation bump).
+
+        Fault tolerance (DESIGN.md §8): a drain that raises re-queues its
+        run at the head (same seq -> same replay order; done tickets are
+        never re-applied) and arms ``RestartPolicy`` backoff for that
+        queue; when the policy gives up the tickets terminate with
+        ``failed`` set.  Returns False when nothing was attempted (no
+        work, or every queue is waiting out a backoff)."""
+        if self.segments is None or max_rows <= 0 \
+                or not self._mut_eligible(ignore_backoff=ignore_backoff):
             return False
         # drain in-flight batches first: a mutation may compact the index
         # (auto_compact_fraction), which would invalidate the positional
@@ -277,10 +415,12 @@ class ThroughputEngine:
         while self._inflight:
             self._drain_oldest()
         rows = 0
-        while self._mutations_pending() and rows < max_rows:
+        while rows < max_rows:
+            eligible = self._mut_eligible(ignore_backoff=ignore_backoff)
+            if not eligible:
+                break
             # next queue = the one whose head ticket was submitted earliest
-            qi = min((i for i, q in enumerate(self._mut_queues) if q),
-                     key=lambda i: self._mut_queues[i][0].seq)
+            qi = min(eligible, key=lambda i: self._mut_queues[i][0].seq)
             mq = self._mut_queues[qi]
             # coalesce a run of same-kind tickets into ONE index call: the
             # repair path amortizes its candidate search over the batch, so
@@ -294,19 +434,44 @@ class ThroughputEngine:
                    + len(mq[0].payload) <= max_rows):
                 run.append(mq.popleft())
             payload = np.concatenate([t.payload for t in run])
-            if run[0].kind == "insert":
-                gids = (self.sharded.insert(payload, shard=qi)
-                        if self.sharded is not None
-                        else self.segments.insert(payload))
-                self.stats["upserts"] += len(gids)
-                rows += len(gids)
-                off = 0
+            try:
                 for t in run:
-                    t.gids = gids[off:off + len(t.payload)]
-                    off += len(t.payload)
-            else:
-                self.stats["deletes"] += self.segments.delete(payload)
-                rows += len(payload)
+                    t.attempts += 1
+                if self._fault_injector is not None \
+                        and self._fault_injector.mutation_should_fail():
+                    from repro.runtime.chaos import ChaosError
+                    raise ChaosError("injected mutation failure")
+                if run[0].kind == "insert":
+                    gids = (self.sharded.insert(payload, shard=qi)
+                            if self.sharded is not None
+                            else self.segments.insert(payload))
+                    self.stats["upserts"] += len(gids)
+                    rows += len(gids)
+                    off = 0
+                    for t in run:
+                        t.gids = gids[off:off + len(t.payload)]
+                        off += len(t.payload)
+                else:
+                    self.stats["deletes"] += self.segments.delete(payload)
+                    rows += len(payload)
+            except Exception as exc:
+                pol = self._mut_restart[qi]
+                backoff = pol.next_backoff()
+                if backoff is None:
+                    # give-up path: terminal, surfaced, never re-applied
+                    for t in run:
+                        t.failed = True
+                        t.error = f"{type(exc).__name__}: {exc}"
+                        t.done = True
+                    self.stats["mutation_failures"] += len(run)
+                    pol.restarts = 0
+                else:
+                    self.stats["mutation_retries"] += 1
+                    for t in reversed(run):
+                        mq.appendleft(t)
+                    self._mut_not_before[qi] = self.queue.clock() + backoff
+                continue
+            self._mut_restart[qi].restarts = 0
             for t in run:
                 t.done = True
         self.stats["mutation_drains"] += 1
@@ -316,27 +481,99 @@ class ThroughputEngine:
         return True
 
     def flush_mutations(self) -> None:
-        """Apply every queued mutation now (maintenance path)."""
+        """Apply every queued mutation now (maintenance path).  Retries
+        failing runs immediately (backoff is a between-batches courtesy the
+        synchronous flush ignores); tickets whose RestartPolicy gives up
+        come back ``failed`` rather than blocking the flush forever."""
         while self._mutations_pending():
-            self._apply_mutations(1 << 30)
+            if not self._apply_mutations(1 << 30, ignore_backoff=True):
+                break
 
     # -- request entry ----------------------------------------------------
-    def submit(self, query: np.ndarray) -> Request:
+    def _sync_queue_counters(self) -> None:
+        """Mirror the queue's monotone admission counters into ``stats``
+        (the queue is the single writer, so assignment keeps them exact)."""
+        c = self.queue.counters
+        self.stats["rejected"] = c["rejected"]
+        self.stats["expired"] = c["expired"]
+        self.stats["shed"] = c["shed"]
+
+    def submit(self, query: np.ndarray, *, priority: int = 0,
+               expiry: Optional[float] = None) -> Request:
         """Enqueue one query (raw, un-rotated).  With the semantic cache
         enabled, a distance-thresholded hit on a past query completes the
-        request immediately without touching the pilot stage."""
+        request immediately without touching the pilot stage.
+
+        Admission control (DESIGN.md §8): the returned request may already
+        be terminal — ``rejected`` (with ``reject_reason``) when
+        ``max_pending`` is hit and the newcomer doesn't outrank pending
+        work.  ``expiry`` is the hard SLO cutoff (absolute, queue-clock
+        domain); it defaults to now + ``slo_timeout_s`` when that is set."""
         q = np.asarray(query, np.float32)
         self.stats["requests"] += 1
-        req = self.queue.submit(q)
+        sp = self.serve_params
+        if expiry is None and sp.slo_timeout_s is not None:
+            expiry = self.queue.clock() + sp.slo_timeout_s
+        req = self.queue.submit(q, expiry=expiry, priority=priority)
+        self._sync_queue_counters()
+        if req.terminal:
+            return req                        # rejected by admission control
         if self.cache is not None:
             self.stats["cache_lookups"] += 1
             hit = self.cache.lookup(q)
             if hit is not None:
                 self.stats["cache_hits"] += 1
-                self.queue.pending.pop()          # the one just appended
-                req.result, req.done = hit, True
+                self.queue.pending.remove(req)    # may sit mid-queue
+                req.complete(hit)
+                self.stats["completed"] += 1
                 self._completions[req.rid] = self._now()
         return req
+
+    # -- SLO / fault-tolerance hooks (DESIGN.md §8) ------------------------
+    def _should_degrade(self) -> bool:
+        """True when the next batch should use the low-cost rung: the
+        rolling p99 over recent completions already threatens the budget,
+        or the head-of-line request's wait plus a typical service time
+        would.  Cheap, pessimistic, and per-batch — the very next dispatch
+        after pressure clears returns to the full-quality rung."""
+        sp = self.serve_params
+        if self._pilot_lo is None:
+            return False
+        budget = sp.p99_budget_s
+        lat = sorted(self._lat_window)
+        if len(lat) >= 8 and lat[int(0.99 * (len(lat) - 1))] > budget:
+            return True
+        if self.queue.pending and self._svc_window:
+            head_wait = self.queue.clock() - self.queue.pending[0].enqueued_at
+            svc = sorted(self._svc_window)[len(self._svc_window) // 2]
+            if head_wait + svc > budget:
+                return True
+        return False
+
+    def _check_shard_health(self) -> None:
+        """Heartbeat bookkeeping + failover/heal transitions.  In-process
+        shards beat on every pump unless a fault injector holds an active
+        stall/loss window for them; a shard quiet past the timeout is
+        declared dead and the sharded index enters tombstone-overlay
+        degraded mode (recall exposure in ``stats["degraded_coverage"]``).
+        When beats resume, the overlay drops and results return to
+        bit-parity with the healthy index."""
+        if self.heartbeats is None or self.sharded is None:
+            return
+        inj = self._fault_injector
+        stalled = inj.stalled_shards() if inj is not None else set()
+        for i in range(self.sharded.sp.n_shards):
+            if i not in stalled:
+                self.heartbeats.beat(f"shard:{i}")
+        dead = {int(h.split(":")[1]) for h in self.heartbeats.dead_hosts()}
+        if dead == set(self.sharded.dead_shards):
+            return
+        frac = self.sharded.set_dead_shards(dead)
+        self.stats["degraded_coverage"] = frac
+        if dead:
+            self.stats["shard_failovers"] += 1
+        else:
+            self.stats["shard_heals"] += 1
 
     # -- scheduler core ---------------------------------------------------
     def _dispatch(self) -> None:
@@ -349,44 +586,60 @@ class ThroughputEngine:
             self._build_stages()
             self.stats["stage_rebuilds"] += 1
         reqs = self.queue.drain(sp.buckets[-1])
+        self._sync_queue_counters()
+        if not reqs:
+            return          # everything pending expired during the sweep
+        degraded = self._should_degrade()
         nb = multistage.bucket_size(len(reqs), sp.buckets)
         q = np.zeros((nb, self.index.d), np.float32)
         for i, r in enumerate(reqs):
             q[i] = r.payload
         qr = self.index.rotate_queries(q)
         t = self._now()
-        po = self._pilot_call(qr)                 # async dispatch
+        pilot_call = self._pilot_lo if degraded else self._pilot_call
+        po = pilot_call(qr)                       # async dispatch
+        if degraded:
+            self.stats["degraded_batches"] += 1
         # earliest dispatch deadline in the batch (queue-clock domain):
         # surfaced in batch_records so deadline-aware scheduling work
         # (ROADMAP item 4) can measure slack per batch
         dl = min((r.deadline for r in reqs if r.deadline is not None),
                  default=None)
-        self._inflight.append((reqs, qr, po, t, dl))
+        self._inflight.append((reqs, qr, po, t, dl, degraded))
         self.stats["batches"] += 1
         hist = self.stats["bucket_hist"]
         hist[nb] = hist.get(nb, 0) + 1
 
     def _drain_oldest(self) -> None:
-        reqs, qr, po, t_disp, dl = self._inflight.pop(0)
+        reqs, qr, po, t_disp, dl, degraded = self._inflight.pop(0)
+        if self._fault_injector is not None:
+            self._fault_injector.perturb_stage()  # slow_executable window
         t_cpu = self._now()
-        ids, dists = self._cpu_call(qr, *po)      # po buffers donated here
+        # a degraded batch drains through its OWN rung's executable (the
+        # stage-boundary buffer shapes differ between rungs)
+        cpu_call = self._cpu_lo if degraded else self._cpu_call
+        rung = self._degraded_params if degraded else self.params
+        ids, dists = cpu_call(qr, *po)            # po buffers donated here
         ids, dists = np.asarray(ids), np.asarray(dists)
         if self.segments is not None:
             # exact cross-segment merge: base positional ids -> global ids,
             # delta top-k folded in, late deletes filtered (DESIGN.md §6)
             ids, dists, _ = self.segments.merge_with_deltas(
-                qr, ids, dists, self.params.k, self.params)
+                qr, ids, dists, self.params.k, rung)
         t_done = self._now()
+        qnow = self.queue.clock()
         for i, r in enumerate(reqs):
-            r.result = (ids[i], dists[i])
-            r.done = True
+            r.complete((ids[i], dists[i]))
+            self.stats["completed"] += 1
             self._completions[r.rid] = t_done
+            self._lat_window.append(qnow - r.enqueued_at)
             if self.cache is not None:
                 self.cache.insert(r.payload, r.result)
+        self._svc_window.append(t_done - t_disp)
         self.stats["batch_records"].append(
             {"bucket": int(qr.shape[0]), "n_real": len(reqs),
              "t_pilot_dispatch": t_disp, "t_cpu_start": t_cpu,
-             "t_done": t_done, "min_deadline": dl})
+             "t_done": t_done, "min_deadline": dl, "degraded": degraded})
 
     def pump(self) -> bool:
         """One scheduling action: dispatch a pilot batch if there is
@@ -397,9 +650,21 @@ class ThroughputEngine:
         queue are applied, so mutation and query traffic interleave
         (DESIGN.md §6); deferred semantic-cache maintenance runs only on
         otherwise-idle cycles.  Returns False when there was nothing to do
-        (queue waiting on its deadline, or fully idle)."""
+        (queue waiting on its deadline, or fully idle).
+
+        Resilience hooks run first (DESIGN.md §8): shard heartbeats /
+        failover transitions, then the hard-expiry sweep — so no accepted
+        request outlives its cutoff unserved past one pump, and a
+        ``queue_stall`` fault window suppresses dispatch (work keeps aging
+        toward rejection/expiry instead of being silently parked)."""
         sp = self.serve_params
-        if len(self._inflight) < sp.depth and self.queue.ready():
+        self._check_shard_health()
+        expired = self.queue.expire_due()
+        self._sync_queue_counters()
+        stalled = (self._fault_injector is not None
+                   and self._fault_injector.dispatch_stalled())
+        if (not stalled and len(self._inflight) < sp.depth
+                and self.queue.ready()):
             self._dispatch()
             return True
         if self._inflight:
@@ -412,14 +677,16 @@ class ThroughputEngine:
             if self.cache.maintain():
                 self.stats["cache_maintenance"] += 1
                 return True
-        return False
+        return bool(expired)
 
     def flush(self) -> None:
-        """Force-run everything pending (ignores the batching deadline)."""
+        """Force-run everything pending (ignores the batching deadline, but
+        still honours hard expiry — overdue work terminates ``expired``)."""
         while self.queue.pending:
             if len(self._inflight) >= self.serve_params.depth:
                 self._drain_oldest()
             self._dispatch()
+            self._sync_queue_counters()
         while self._inflight:
             self._drain_oldest()
 
@@ -437,41 +704,56 @@ class ThroughputEngine:
         ``batch_records`` with timestamps relative to this call's start,
         ``latency_s`` = per-request completion − arrival, ``wall_s``,
         ``cache_hit_rate``); ``self.stats`` keeps the engine-lifetime
-        running totals.  The semantic cache persists across calls."""
+        running totals.  The semantic cache persists across calls.
+
+        Under SLO pressure (DESIGN.md §8) some requests may terminate
+        ``rejected``/``expired`` instead of completing: their rows come
+        back as gid -1 / +inf with ``latency_s`` NaN, and the per-call
+        ``completed``/``rejected``/``expired`` counters plus
+        ``request_states`` (submission-order terminal states) account for
+        every one — no silent drops.  Default ServeParams (unbounded
+        queue, no expiry) complete everything, exactly as before."""
         queries = np.asarray(queries, np.float32)
         n = len(queries)
         arr = (np.zeros(n) if arrival_times is None
                else np.asarray(arrival_times, float))
         before = {k: self.stats[k] for k in
-                  ("requests", "batches", "cache_lookups", "cache_hits")}
+                  ("requests", "batches", "cache_lookups", "cache_hits",
+                   "completed", "rejected", "expired", "shed",
+                   "degraded_batches")}
         records_before = len(self.stats["batch_records"])
         hist_before = dict(self.stats["bucket_hist"])
         self._completions = {}
         self._t0 = time.perf_counter()
+        t_start = self._now()               # 0.0 unless a clock is injected
         reqs: List[Request] = []
         i = 0
         while i < n:
-            now = self._now()
+            now = self._now() - t_start
             while i < n and arr[i] <= now:
                 reqs.append(self.submit(queries[i]))
                 i += 1
             if i < n and not self.pump():
-                time.sleep(min(max(arr[i] - self._now(), 0.0), 5e-4))
+                time.sleep(min(max(arr[i] - (self._now() - t_start), 0.0),
+                               5e-4))
         self.flush()
-        wall = self._now()
+        wall = self._now() - t_start
         k = self.params.k
-        ids = (np.stack([r.result[0] for r in reqs]) if reqs
-               else np.zeros((0, k), np.int64))
-        dists = (np.stack([r.result[1] for r in reqs]) if reqs
-                 else np.zeros((0, k), np.float32))
+        ids = np.full((n, k), -1, np.int64)
+        dists = np.full((n, k), np.inf, np.float32)
+        lat = np.full(n, np.nan)
+        for j, r in enumerate(reqs):
+            if r.state == "completed":
+                ids[j], dists[j] = r.result
+                lat[j] = self._completions[r.rid] - t_start - arr[j]
         stats = {key: self.stats[key] - prev for key, prev in before.items()}
         stats["batch_records"] = self.stats["batch_records"][records_before:]
         stats["bucket_hist"] = {
             b: c - hist_before.get(b, 0)
             for b, c in self.stats["bucket_hist"].items()
             if c - hist_before.get(b, 0)}
-        stats["latency_s"] = np.array(
-            [self._completions[r.rid] - arr[j] for j, r in enumerate(reqs)])
+        stats["latency_s"] = lat
+        stats["request_states"] = [r.state for r in reqs]
         stats["wall_s"] = wall
         lookups, hits = stats["cache_lookups"], stats["cache_hits"]
         stats["cache_hit_rate"] = hits / lookups if lookups else 0.0

@@ -138,6 +138,34 @@ for K in (2, 4):
     results[f"engine/K={K}/deadline"] = bool(
         "min_deadline" in rec and rec["min_deadline"] is not None)
 
+# degraded-mode failover (DESIGN.md §8): with one shard dead, the tombstone
+# overlay must serve bit-identical results to a single-device oracle that has
+# the dead shard's base rows DELETED (and its delta segments absent) — i.e.
+# stage-①-guided + exactly-rescored survivors-only search, not an
+# approximation.  Healing (empty dead set) restores bit-parity with the
+# healthy pre-fault index without any recompilation.
+K = 4
+sh = ShardedSegmentedIndex(cfg, x, UpdateParams(),
+                           shard_params=ShardParams(n_shards=K))
+sh.insert(extra[:24], shard=2)         # delta pinned to the doomed shard
+healthy = sh.search(q, params)
+rp = sh._shard_ctx.rows_per
+owner = np.minimum(np.arange(len(x)) // rp, K - 1)
+dead_gids = np.nonzero(owner == 2)[0]  # fresh base: gid == row position
+oracle = SegmentedIndex(cfg, x, UpdateParams())
+oracle.delete(dead_gids)
+oid, od, _ = oracle.search(q, params)
+frac = sh.set_dead_shards({2})
+did, dd, _ = sh.search(q, params)
+results["degraded/ids"] = bool(np.array_equal(did, oid))
+results["degraded/dists"] = bitexact(dd, od)
+results["degraded/coverage"] = bool(0.0 < frac < 1.0)
+results["degraded/excludes_dead"] = bool(not np.isin(did, dead_gids).any())
+sh.set_dead_shards(())
+h2 = sh.search(q, params)
+results["degraded/heal_ids"] = bool(np.array_equal(healthy[0], h2[0]))
+results["degraded/heal_dists"] = bitexact(healthy[1], h2[1])
+
 print(json.dumps(results))
 """
 
@@ -158,4 +186,5 @@ def test_sharded_parity_matches_single_device(tmp_path):
     assert not bad, f"parity violations: {bad}"
     # sanity: the script actually exercised every scenario family
     fams = {k.split("/")[0] for k in res}
-    assert fams == {"base", "int8", "mutated", "compacted", "engine"}, fams
+    assert fams == {"base", "int8", "mutated", "compacted", "engine",
+                    "degraded"}, fams

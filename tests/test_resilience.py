@@ -1,0 +1,516 @@
+"""Resilient-serving tests (DESIGN.md §8): the Request terminal-state
+machine, bounded admission with priority shedding, hard-expiry enforcement,
+the rolling-p99 degradation ladder, heartbeat-driven shard failover/heal,
+RestartPolicy-backed mutation retries, and hypothesis properties for the
+admission invariants — all driven deterministically through
+``runtime/chaos.py``'s SimClock + FaultInjector."""
+
+import numpy as np
+import pytest
+
+from repro.core import IndexConfig, SearchParams
+from repro.core.distributed import ShardParams, ShardedSegmentedIndex
+from repro.core.pipeline import degrade_params
+from repro.core.segments import SegmentedIndex, UpdateParams
+from repro.runtime.chaos import ChaosError, FaultInjector, SimClock
+from repro.runtime.fault_tolerance import HeartbeatMonitor, RestartPolicy
+from repro.serving import (BatchingQueue, Request, ServeParams,
+                           ThroughputEngine)
+
+PARAMS = SearchParams(k=10, ef=32, ef_pilot=32)
+
+
+# ---------------------------------------------------------------------------
+# Request terminal-state machine
+# ---------------------------------------------------------------------------
+
+def test_request_exactly_one_terminal_state():
+    r = Request(0, np.ones(4))
+    assert r.state == "pending" and not r.terminal
+    r.complete((1, 2))
+    assert r.state == "completed" and r.done and r.terminal
+    for second in (lambda: r.complete(None), lambda: r.reject("x"),
+                   lambda: r.expire()):
+        with pytest.raises(RuntimeError):
+            second()
+    rr = Request(1, np.ones(4)).reject("queue_full")
+    assert rr.state == "rejected" and rr.reject_reason == "queue_full"
+    assert not rr.done                         # done is completion-only
+    with pytest.raises(RuntimeError):
+        rr.expire()
+    re_ = Request(2, np.ones(4)).expire()
+    assert re_.state == "expired" and not re_.done
+
+
+# ---------------------------------------------------------------------------
+# BatchingQueue admission control
+# ---------------------------------------------------------------------------
+
+def test_max_pending_rejects_with_reason():
+    q = BatchingQueue(8, max_wait_s=1.0, max_pending=2)
+    a, b = q.submit(1), q.submit(2)
+    c = q.submit(3)
+    assert a.state == b.state == "pending"
+    assert c.state == "rejected" and c.reject_reason == "queue_full"
+    assert len(q.pending) == 2                 # c was never enqueued
+    assert q.counters["submitted"] == 3
+    assert q.counters["accepted"] == 2 and q.counters["rejected"] == 1
+
+
+def test_overload_sheds_lowest_priority_first():
+    q = BatchingQueue(8, max_wait_s=1.0, max_pending=2)
+    lo = q.submit(1, priority=0)
+    mid = q.submit(2, priority=1)
+    hi = q.submit(3, priority=5)               # sheds lo (lowest priority)
+    assert hi.state == "pending"
+    assert lo.state == "rejected" and lo.reject_reason == "shed"
+    assert mid.state == "pending"
+    assert q.counters["shed"] == 1 and q.counters["rejected"] == 1
+    # an equal-priority newcomer cannot displace pending work
+    eq = q.submit(4, priority=1)
+    assert eq.state == "rejected" and eq.reject_reason == "queue_full"
+    # drain order: highest priority first, FIFO within class
+    assert [r.rid for r in q.drain(8)] == [hi.rid, mid.rid]
+
+
+def test_expired_work_frees_slots_before_shedding():
+    t = [0.0]
+    q = BatchingQueue(8, max_wait_s=1.0, clock=lambda: t[0], max_pending=1)
+    stale = q.submit(1, expiry=0.5)
+    t[0] = 0.6
+    fresh = q.submit(2)                        # stale expires -> slot frees
+    assert stale.state == "expired"
+    assert fresh.state == "pending"
+    assert q.counters["expired"] == 1 and q.counters["rejected"] == 0
+
+
+def test_expire_due_terminates_overdue_pending():
+    t = [0.0]
+    q = BatchingQueue(8, max_wait_s=10.0, clock=lambda: t[0])
+    a = q.submit(1, expiry=1.0)
+    b = q.submit(2, expiry=5.0)
+    c = q.submit(3)                            # no expiry: never expires
+    t[0] = 2.0
+    due = q.expire_due()
+    assert due == [a] and a.state == "expired"
+    assert [r.rid for r in q.pending] == [b.rid, c.rid]
+    # drained requests are never past their cutoff at dispatch time
+    t[0] = 6.0
+    got = q.drain(8)
+    assert [r.rid for r in got] == [c.rid] and b.state == "expired"
+
+
+def test_priority_order_preserved_under_requeue():
+    q = BatchingQueue(8, max_wait_s=0.0)
+    hi = q.submit(0, priority=2)
+    lo1 = q.submit(1, priority=0)
+    lo2 = q.submit(2, priority=0)
+    batch = q.drain(2)                         # hi, lo1 in flight
+    assert [r.rid for r in batch] == [hi.rid, lo1.rid]
+    q.requeue(batch)                           # both straggled
+    # hi back at the very front; lo1 ahead of lo2 (older), behind hi
+    assert [r.rid for r in q.pending] == [hi.rid, lo1.rid, lo2.rid]
+    prios = [r.priority for r in q.pending]
+    assert prios == sorted(prios, reverse=True)
+
+
+# ---------------------------------------------------------------------------
+# fault_tolerance primitives: edge cases (satellite 3)
+# ---------------------------------------------------------------------------
+
+def test_restart_policy_backoff_and_give_up():
+    pol = RestartPolicy(max_restarts=3, base_backoff_s=1.0, max_backoff_s=4.0)
+    assert [pol.next_backoff() for _ in range(3)] == [1.0, 2.0, 4.0]
+    assert pol.next_backoff() is None          # give-up path
+    assert pol.next_backoff() is None          # stays given-up
+    pol.restarts = 0                           # success resets the budget
+    assert pol.next_backoff() == 1.0
+
+
+def test_heartbeat_dead_then_alive():
+    t = [0.0]
+    hb = HeartbeatMonitor(["shard:0", "shard:1"], timeout_s=1.0,
+                          clock=lambda: t[0])
+    assert hb.dead_hosts() == []
+    t[0] = 1.5
+    hb.beat("shard:1")
+    assert hb.dead_hosts() == ["shard:0"]
+    assert hb.alive_hosts() == ["shard:1"]
+    hb.beat("shard:0")                         # returns: no recovery call
+    assert hb.dead_hosts() == []
+    assert set(hb.alive_hosts()) == {"shard:0", "shard:1"}
+
+
+def test_degrade_params_low_cost_rung():
+    lo = degrade_params(PARAMS, 0.5)
+    assert lo.k == PARAMS.k                    # result contract unchanged
+    assert lo.ef == 16 and lo.ef_pilot == 16
+    assert degrade_params(SearchParams(k=10, ef=12), 0.25).ef == 10  # >= k
+    with pytest.raises(ValueError):
+        degrade_params(PARAMS, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# engine: expiry, admission, chaos (SimClock-driven, deterministic)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def slo_engine_parts(built_index):
+    """One compiled engine per (clock, injector) would recompile per test;
+    jit caches are global per (params, shapes), so fresh engines are cheap
+    after the first."""
+    return built_index
+
+
+def _engine(index, clock, injector, **sp_kw):
+    sp = ServeParams(buckets=(8,), depth=1, donate=False, warmup=True,
+                     max_wait_s=0.01, **sp_kw)
+    return ThroughputEngine(index, PARAMS, sp, clock=clock,
+                            fault_injector=injector)
+
+
+def test_engine_expires_overdue_requests(built_index, small_dataset):
+    clk = SimClock()
+    eng = _engine(built_index, clk, None, slo_timeout_s=1.0)
+    r = eng.submit(small_dataset.queries[0])
+    assert r.expiry == pytest.approx(1.0)
+    clk.advance(2.0)
+    assert eng.pump()                          # sweep terminates it
+    assert r.state == "expired" and r.result is None
+    assert eng.stats["expired"] == 1 and eng.stats["completed"] == 0
+    # after any pump, no accepted request sits past its cutoff unserved
+    assert not any(x.expiry is not None and clk() >= x.expiry
+                   for x in eng.queue.pending)
+    # a fresh request still completes (the engine is not wedged)
+    r2 = eng.submit(small_dataset.queries[1])
+    eng.flush()
+    assert r2.state == "completed"
+    assert eng.stats["completed"] == 1
+
+
+def test_engine_admission_and_conservation(built_index, small_dataset):
+    clk = SimClock()
+    eng = _engine(built_index, clk, None, max_pending=2)
+    qs = small_dataset.queries
+    rs = [eng.submit(qs[i]) for i in range(3)]
+    hi = eng.submit(qs[3], priority=9)
+    assert rs[2].state == "rejected" and rs[2].reject_reason == "queue_full"
+    assert rs[1].state == "rejected" and rs[1].reject_reason == "shed"
+    eng.flush()
+    states = [r.state for r in rs + [hi]]
+    assert states.count("completed") == 2 and states.count("rejected") == 2
+    s = eng.stats
+    assert s["requests"] == 4
+    assert s["completed"] + s["rejected"] + s["expired"] == 4
+    # priority winner actually got served
+    assert hi.state == "completed"
+
+
+def test_queue_stall_fault_ages_work_to_expiry(built_index, small_dataset):
+    clk = SimClock()
+    inj = FaultInjector(clk)
+    eng = _engine(built_index, clk, inj, slo_timeout_s=0.5)
+    inj.inject("queue_stall", duration=1.0)
+    r = eng.submit(small_dataset.queries[0])
+    clk.advance(0.1)                           # deadline passed, ready()
+    assert eng.pump() is False                 # dispatch suppressed, aging
+    assert r.state == "pending"
+    clk.advance(0.6)                           # now past the hard cutoff
+    eng.pump()
+    assert r.state == "expired"
+    clk.advance(1.0)                           # fault window over
+    r2 = eng.submit(small_dataset.queries[1])
+    clk.advance(0.02)
+    eng.flush()
+    assert r2.state == "completed"
+    assert inj.log                             # the fault actually fired
+
+
+def test_slow_executable_triggers_degradation(built_index, small_dataset):
+    clk = SimClock()
+    inj = FaultInjector(clk)
+    eng = _engine(built_index, clk, inj, p99_budget_s=0.05,
+                  degrade_ef_scale=0.5, slo_window=8)
+    qs = small_dataset.queries
+    ids0, d0, _ = eng.serve(qs[:8])
+    assert eng.stats["degraded_batches"] == 0  # healthy: full quality
+    inj.inject("slow_executable", severity=0.2)
+    eng.serve(qs[:8])                          # slow batch fills the window
+    eng.serve(qs[:8])                          # now under p99 pressure
+    assert eng.stats["degraded_batches"] >= 1
+    recs = eng.stats["batch_records"]
+    assert any(r["degraded"] for r in recs)
+    assert all("degraded" in r for r in recs)  # per-batch accounting
+    # degraded batches still return k results per query
+    ids2, d2, _ = eng.serve(qs[:8])
+    assert ids2.shape == ids0.shape and np.isfinite(d2).all()
+
+
+def test_degraded_rung_matches_degraded_params(built_index, small_dataset):
+    """The low-cost rung is the SAME pipeline at degrade_params — a batch
+    served degraded must equal a direct search at those params."""
+    clk = SimClock()
+    inj = FaultInjector(clk)
+    eng = _engine(built_index, clk, inj, p99_budget_s=1e-9,
+                  degrade_ef_scale=0.5, slo_window=8)
+    qs = small_dataset.queries[:8]
+    # prime the latency window over budget so every batch degrades
+    inj.inject("slow_executable", severity=1.0)
+    eng.serve(qs)
+    ids, dists, _ = eng.serve(qs)
+    assert eng.stats["batch_records"][-1]["degraded"]
+    lo = degrade_params(PARAMS, 0.5)
+    rid, rd, _ = built_index.search(qs, lo)
+    assert np.array_equal(ids, np.asarray(rid))
+    assert np.array_equal(np.asarray(dists, np.float32).view(np.uint32),
+                          np.asarray(rd, np.float32).view(np.uint32))
+
+
+def test_no_silent_drops_under_chaos(built_index, small_dataset):
+    """Every submitted request reaches exactly one terminal state, under a
+    queue stall + overload + expiry all at once."""
+    clk = SimClock()
+    inj = FaultInjector(clk)
+    eng = _engine(built_index, clk, inj, max_pending=4, slo_timeout_s=0.3)
+    qs = small_dataset.queries
+    inj.inject("queue_stall", start=0.1, duration=0.5)
+    reqs = []
+    for i in range(24):
+        reqs.append(eng.submit(qs[i % len(qs)], priority=i % 3))
+        clk.advance(0.05)
+        eng.pump()
+    clk.advance(1.0)
+    eng.flush()
+    states = [r.state for r in reqs]
+    assert all(s in ("completed", "rejected", "expired") for s in states)
+    s = eng.stats
+    assert s["completed"] + s["rejected"] + s["expired"] == len(reqs)
+    assert s["rejected"] > 0 and s["expired"] > 0  # chaos actually bit
+    assert s["completed"] == states.count("completed")
+
+
+# ---------------------------------------------------------------------------
+# engine: shard failover / heal + mutation retries (mutable index paths)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_sharded(small_dataset):
+    cfg = IndexConfig(R=16, sample_ratio=0.35, svd_ratio=0.5, n_entry=128,
+                      build_method="exact")
+    return ShardedSegmentedIndex(cfg, small_dataset.vectors[:800],
+                                 UpdateParams(),
+                                 shard_params=ShardParams(n_shards=1))
+
+
+def test_shard_failover_and_heal_bit_parity(tiny_sharded, small_dataset):
+    clk = SimClock()
+    inj = FaultInjector(clk)
+    sp = ServeParams(buckets=(8,), depth=1, donate=False, warmup=True,
+                     max_wait_s=0.01, heartbeat_timeout_s=0.5)
+    eng = ThroughputEngine(tiny_sharded, PARAMS, sp, clock=clk,
+                           fault_injector=inj)
+    qs = small_dataset.queries[:8]
+    ids0, d0, _ = eng.serve(qs)
+    # stall the only shard past the heartbeat timeout -> total outage
+    inj.inject("shard_stall", shard=0)
+    clk.advance(1.0)
+    eng.pump()
+    assert eng.stats["shard_failovers"] == 1
+    assert eng.stats["degraded_coverage"] == pytest.approx(1.0)
+    assert tiny_sharded.dead_shards == {0}
+    ids1, d1, _ = eng.serve(qs)
+    assert (np.asarray(ids1) == -1).all()      # nothing survives, no crash
+    # fault clears -> beats resume -> heal -> bit-parity with healthy serve
+    inj.clear("shard_stall")
+    eng.pump()
+    assert eng.stats["shard_heals"] == 1
+    assert eng.stats["degraded_coverage"] == 0.0
+    ids2, d2, _ = eng.serve(qs)
+    assert np.array_equal(ids0, ids2)
+    assert np.array_equal(np.asarray(d0).view(np.uint32),
+                          np.asarray(d2).view(np.uint32))
+
+
+def test_mutation_retry_backoff_and_give_up(small_dataset):
+    cfg = IndexConfig(R=16, sample_ratio=0.35, svd_ratio=0.5, n_entry=128,
+                      build_method="exact")
+    idx = SegmentedIndex(cfg, small_dataset.vectors[:600], UpdateParams())
+    clk = SimClock()
+    inj = FaultInjector(clk)
+    sp = ServeParams(buckets=(8,), depth=1, donate=False, warmup=False,
+                     mutation_max_retries=2, mutation_backoff_s=0.1)
+    eng = ThroughputEngine(idx, PARAMS, sp, clock=clk, fault_injector=inj)
+    vecs = small_dataset.vectors[600:608]
+
+    # retry-then-succeed: fault window shorter than the retry budget
+    inj.inject("mutation_failure", duration=0.15)
+    t1 = eng.submit_upsert(vecs[:4])
+    assert eng.pump()                          # attempt 1 fails, backoff
+    assert not t1.done and t1.attempts == 1
+    assert eng.stats["mutation_retries"] == 1
+    assert eng.pump() is False                 # backoff not elapsed yet
+    clk.advance(0.2)                           # backoff over, fault over
+    assert eng.pump()
+    assert t1.done and not t1.failed and t1.gids is not None
+    assert t1.attempts == 2
+
+    # give-up: permanent fault exhausts RestartPolicy(max_restarts=2)
+    inj.inject("mutation_failure")             # until clear()
+    t2 = eng.submit_upsert(vecs[4:])
+    for _ in range(5):
+        clk.advance(1.0)
+        eng.pump()
+    assert t2.done and t2.failed and t2.gids is None
+    assert "ChaosError" in t2.error
+    assert eng.stats["mutation_failures"] == 1
+    inj.clear()
+    # queue drains cleanly afterwards; idempotency: t1/t2 never re-applied
+    t3 = eng.submit_upsert(vecs[:2])
+    eng.flush_mutations()
+    assert t3.done and not t3.failed
+    assert t1.attempts == 2 and t2.attempts == 3
+
+
+def test_flush_mutations_ignores_backoff_but_not_give_up(small_dataset):
+    cfg = IndexConfig(R=16, sample_ratio=0.35, svd_ratio=0.5, n_entry=128,
+                      build_method="exact")
+    idx = SegmentedIndex(cfg, small_dataset.vectors[:600], UpdateParams())
+    clk = SimClock()
+    inj = FaultInjector(clk)
+    sp = ServeParams(buckets=(8,), depth=1, donate=False, warmup=False,
+                     mutation_max_retries=2, mutation_backoff_s=10.0)
+    eng = ThroughputEngine(idx, PARAMS, sp, clock=clk, fault_injector=inj)
+    inj.inject("mutation_failure")
+    t = eng.submit_upsert(small_dataset.vectors[600:604])
+    eng.flush_mutations()                      # terminates despite the fault
+    assert t.done and t.failed
+
+
+# ---------------------------------------------------------------------------
+# admission-invariant properties (satellite 4): hypothesis when available,
+# a seeded pseudo-random sweep otherwise (the container pins dependencies,
+# so the property tests must not require installing anything)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                            # pragma: no cover - env dep
+    HAVE_HYPOTHESIS = False
+
+
+def _run_admission_ops(ops):
+    """Drive a BatchingQueue through an op tape, asserting after every op:
+    counters monotone; conservation (submitted = pending + in-flight +
+    terminal); queue always priority-ordered; after a sweep no pending
+    request is past its expiry — the properties one engine pump relies
+    on."""
+    clk = SimClock()
+    q = BatchingQueue(4, max_wait_s=0.1, clock=clk, max_pending=5)
+    all_reqs, inflight = [], []
+    prev = dict(q.counters)
+    for op in ops:
+        if op[0] == "submit":
+            _, prio, ttl = op
+            all_reqs.append(q.submit(len(all_reqs), priority=prio,
+                                     expiry=clk() + ttl))
+        elif op[0] == "advance":
+            clk.advance(op[1])
+        elif op[0] == "drain":
+            inflight.extend(q.drain(op[1]))
+        elif op[0] == "requeue":
+            for r in inflight[: len(inflight) // 2]:
+                if not r.terminal:
+                    r.complete("x")            # half finish, half straggle
+            q.requeue(inflight)
+            inflight = []
+        else:
+            q.expire_due()
+            now = clk()
+            assert not any(r.expiry is not None and now >= r.expiry
+                           for r in q.pending)
+        # counters monotone
+        for key, val in q.counters.items():
+            assert val >= prev[key], key
+        prev = dict(q.counters)
+        # priority order invariant (FIFO within class)
+        prios = [r.priority for r in q.pending]
+        assert prios == sorted(prios, reverse=True)
+        # bound respected
+        assert len(q.pending) <= 5
+        # conservation: every accepted request is pending, in flight, or
+        # terminal — and terminal counts match the counters
+        states = [r.state for r in all_reqs]
+        assert states.count("rejected") == q.counters["rejected"]
+        assert states.count("expired") == q.counters["expired"]
+        n_live = states.count("pending")
+        assert n_live == len(q.pending) + sum(
+            1 for r in inflight if r.state == "pending")
+        assert q.counters["submitted"] == len(all_reqs)
+        assert q.counters["submitted"] == (q.counters["accepted"]
+                                           + q.counters["rejected"]
+                                           - q.counters["shed"])
+
+
+def _run_requeue_ops(prios, split):
+    q = BatchingQueue(8, max_wait_s=10.0)
+    for i, p in enumerate(prios):
+        q.submit(i, priority=p)
+    batch = q.drain(min(split + 1, len(prios)))
+    q.requeue(batch)
+    out = [r.priority for r in q.pending]
+    assert out == sorted(out, reverse=True)
+    assert len(out) == len(prios)              # nothing lost or duplicated
+
+
+def _random_ops(rng, n):
+    ops = []
+    for _ in range(n):
+        kind = rng.choice(["submit", "submit", "submit", "advance",
+                           "drain", "requeue", "sweep"])
+        if kind == "submit":
+            ops.append(("submit", rng.randrange(4),
+                        rng.uniform(0.05, 2.0)))
+        elif kind == "advance":
+            ops.append(("advance", rng.uniform(0.01, 1.0)))
+        elif kind == "drain":
+            ops.append(("drain", rng.randrange(1, 7)))
+        else:
+            ops.append((kind,))
+    return ops
+
+
+if HAVE_HYPOTHESIS:
+    OPS = st.lists(
+        st.one_of(
+            st.tuples(st.just("submit"), st.integers(0, 3),
+                      st.floats(0.05, 2.0)),
+            st.tuples(st.just("advance"), st.floats(0.01, 1.0)),
+            st.tuples(st.just("drain"), st.integers(1, 6)),
+            st.just(("requeue",)),
+            st.just(("sweep",))),
+        max_size=50)
+
+    @settings(deadline=None, max_examples=80)
+    @given(ops=OPS)
+    def test_admission_invariants(ops):
+        _run_admission_ops(ops)
+
+    @settings(deadline=None, max_examples=40)
+    @given(prios=st.lists(st.integers(0, 4), min_size=1, max_size=20),
+           split=st.integers(0, 19))
+    def test_requeue_keeps_priority_sorted(prios, split):
+        _run_requeue_ops(prios, split)
+else:
+    import random
+
+    @pytest.mark.parametrize("seed", range(25))
+    def test_admission_invariants(seed):
+        rng = random.Random(seed)
+        _run_admission_ops(_random_ops(rng, rng.randrange(1, 51)))
+
+    @pytest.mark.parametrize("seed", range(25))
+    def test_requeue_keeps_priority_sorted(seed):
+        rng = random.Random(1000 + seed)
+        prios = [rng.randrange(5) for _ in range(rng.randrange(1, 21))]
+        _run_requeue_ops(prios, rng.randrange(20))
