@@ -12,11 +12,15 @@ Three serving runs over the SAME Poisson arrival process and search core:
                       pump batches — mutation and query traffic interleave
 
 The streaming row's value is sustained QPS; ``derived`` carries the insert
-rate achieved (as %corpus/min — the acceptance bar is ≥1%/min), the QPS
-retention vs the static reference (bar: ≥50%), latency percentiles and
-recall.  Post-stream, the same queries replay against the final corpus and
-recall is scored against full-corpus ground truth (the inserted vectors ARE
-real nearest neighbours), plus a delete→query→compact round-trip row.
+rate achieved (as %corpus/min — the acceptance bar is ≥5%/min with the
+device repair path, DESIGN.md §9), the QPS retention vs the static
+reference (bar: ≥0.9x), the repair wall-clock reported SEPARATELY from the
+serve wall (``repair_s`` from the engine's ``mutation_time_s`` stat),
+latency percentiles and recall.  Post-stream, the same queries replay
+against the final corpus and recall is scored against full-corpus ground
+truth (the inserted vectors ARE real nearest neighbours), plus a
+delete→query→compact round-trip row and a host-vs-device graph build
+timing row (``build_method="exact"`` vs ``"nn_descent"``).
 
 Env knobs (scripts/smoke.sh sets the small smoke shape):
   STREAMING_N           corpus size                  (default 6000)
@@ -138,8 +142,11 @@ def run() -> None:
                    f"recall={recall_at_k(ids_0, gt_base, PARAMS.k):.3f}"))
 
     # --- streaming: Poisson queries + concurrent insert stream ----------
+    # device repair (DESIGN.md §9): candidate collection, occlusion prune
+    # and reverse-edge patch batched through core/device_build
     seg = SegmentedIndex(cfg, base_vecs, UpdateParams(repair_ef=32,
-                                                      repair_knn=8))
+                                                      repair_knn=8,
+                                                      repair_method="device"))
     eng = _mk_engine(seg, depth)
     insert_at = np.linspace(0.0, max(arrivals[-1], 1e-3) * 0.9, n_ins)
     ids_m, lat_m, wall = _serve_with_inserts(eng, queries, arrivals,
@@ -148,17 +155,20 @@ def run() -> None:
     rate_pct_min = (eng.stats["upserts"] / n) * 100.0 * 60.0 / max(wall, 1e-9)
     p50, p99 = _pcts(lat_m)
     retention = qps_mut / max(qps_static, 1e-9)
+    repair_s = float(eng.stats["mutation_time_s"])
     print(csv_line("streaming_update/streaming", qps_mut,
                    f"QPS;inserted={eng.stats['upserts']};"
                    f"insert_rate_pct_per_min={rate_pct_min:.1f};"
                    f"retention_vs_static={retention:.2f}x;"
+                   f"repair_s={repair_s:.3f};wall_s={wall:.3f};"
+                   f"serve_s={wall - repair_s:.3f};"
                    f"p50_ms={p50:.1f};p99_ms={p99:.1f};"
                    f"recall_vs_base_gt="
                    f"{recall_at_k(ids_m, gt_base, PARAMS.k):.3f}"))
-    assert rate_pct_min >= 1.0, \
-        f"insert stream too slow: {rate_pct_min:.2f}%/min < 1%/min"
-    assert retention >= 0.5, \
-        f"streaming QPS retention {retention:.2f} < 0.5x static"
+    assert rate_pct_min >= 5.0, \
+        f"insert stream too slow: {rate_pct_min:.2f}%/min < 5%/min"
+    assert retention >= 0.9, \
+        f"streaming QPS retention {retention:.2f} < 0.9x static"
 
     # --- post-stream: same queries against the final corpus -------------
     ids_p, _, _ = eng.serve(queries, arrivals)
@@ -179,6 +189,29 @@ def run() -> None:
                    f"tombstoned_ids_leaked(pre+post_compact);deleted="
                    f"{len(dead)};generation={seg.generation}"))
     assert leaked == 0 and leaked_c == 0
+
+    # --- host vs device graph build (DESIGN.md §9) ----------------------
+    # NN-descent replaces the O(n^2) exact kNN; value = speedup (the
+    # compile-warm second build is timed).  NOTE: on the CPU container
+    # this is EXPECTED to be <1x — the per-round (block, S*S+2S, d)
+    # proposal gather is laid out for the MXU and is memory-traffic-bound
+    # on host; the asymptotic win (O(n*S^2*rounds) vs O(n^2) distances)
+    # and the ≥5x bar are accelerator numbers.  The record keeps both raw
+    # times so the trajectory is honest either way.
+    from repro.core.graph_build import build_graph
+    bx = ds.vectors[:n]
+    t0 = time.perf_counter()
+    g_host = build_graph(bx, cfg.R, method="exact", seed=0)
+    host_s = time.perf_counter() - t0
+    build_graph(bx, cfg.R, method="nn_descent", seed=0)     # compile warm
+    t0 = time.perf_counter()
+    g_dev = build_graph(bx, cfg.R, method="nn_descent", seed=0)
+    dev_s = time.perf_counter() - t0
+    assert g_host.n == g_dev.n == n
+    print(csv_line("streaming_update/device_build_speedup",
+                   host_s / max(dev_s, 1e-9),
+                   f"x_vs_exact_host;host_s={host_s:.2f};"
+                   f"device_s={dev_s:.2f};n={n};R={cfg.R}"))
 
 
 if __name__ == "__main__":

@@ -382,17 +382,29 @@ def build_graph(x: np.ndarray, R: int = 32, *, method: str = "auto",
                 alpha: float = 1.2, knn_k: Optional[int] = None,
                 seed: int = 0, reverse: bool = True,
                 repair: bool = True) -> Graph:
-    """Construct a navigable graph.  method: exact | clustered | auto."""
+    """Construct a navigable graph.
+    method: exact | clustered | nn_descent | auto.  ``nn_descent`` is the
+    device-resident CAGRA-style builder (core/device_build, DESIGN.md §9):
+    NN-descent candidate lists + device occlusion prune; the reverse /
+    connectivity passes below are shared."""
     n = x.shape[0]
     x = np.ascontiguousarray(x, np.float32)
     knn_k = knn_k or min(n - 1, 2 * R)
     if method == "auto":
         method = "exact" if n <= 50_000 else "clustered"
+    if method == "nn_descent":
+        from repro.core import device_build
+        return device_build.build_graph_device(
+            x, R, alpha=alpha, knn_k=knn_k, seed=seed,
+            reverse=reverse, repair=repair)
     if method == "exact":
         ids, dd = brute_knn(x, knn_k)
-    else:
+    elif method == "clustered":
         n_clusters = max(8, int(np.sqrt(n) / 4))
         ids, dd = clustered_knn(x, knn_k, n_clusters=n_clusters, seed=seed)
+    else:
+        raise ValueError(f"unknown build method {method!r} "
+                         f"(exact | clustered | nn_descent | auto)")
     nb = occlusion_prune(x, ids, dd, R, alpha=alpha)
     if reverse:
         nb = add_reverse_edges(nb, n, R)

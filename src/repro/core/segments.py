@@ -81,6 +81,14 @@ class UpdateParams:
     # fold deltas into a fresh base once total delta live rows exceed this
     # fraction of the base (None = manual compact() only)
     auto_compact_fraction: Optional[float] = None
+    # insert-time repair path (DESIGN.md §9): "device" batches candidate
+    # collection, occlusion prune and reverse-edge patching through the
+    # jit'd core/device_build primitives; "host" keeps the per-node numpy
+    # loops (graph_build.prune_one / patch_reverse_edges); "auto" = device.
+    # Single-insert repairs agree bit-for-bit across both paths
+    # (tests/test_graph_build_device.py); batched inserts may differ only
+    # where the host path re-prunes the same overflowing row twice.
+    repair_method: str = "auto"
 
 
 # ---------------------------------------------------------------------------
@@ -125,6 +133,19 @@ def _delta_brute_topk(q: jax.Array, rot: jax.Array, valid: jax.Array,
     d2 = T.sq_dists(q.astype(jnp.float32), rot)
     d2 = jnp.where(valid[None, :], d2, jnp.inf)
     neg, idx = jax.lax.top_k(-d2, k)
+    return idx.astype(jnp.int32), -neg
+
+
+@partial(jax.jit, static_argnames=("kk",))
+def _peer_topk(rot: jax.Array, valid: jax.Array, kk: int
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Within-batch peer candidates for device insert repair: exact top-kk
+    over the (padded) insert batch itself, self and pad rows masked."""
+    B = rot.shape[0]
+    d2 = T.sq_dists(rot, rot)
+    ok = valid[None, :] & ~jnp.eye(B, dtype=bool)
+    d2 = jnp.where(ok, d2, jnp.inf)
+    neg, idx = jax.lax.top_k(-d2, kk)
     return idx.astype(jnp.int32), -neg
 
 
@@ -322,6 +343,19 @@ class SegmentedIndex:
         for b in buckets:
             _delta_brute_topk(jnp.zeros((b, self.d), jnp.float32), rot,
                               valid, k_eff)
+        if self.up.repair_method != "host":
+            # device-repair executables (DESIGN.md §9): the brute repair
+            # scorer, the in-batch peer scorer and the batched prune at
+            # every bucket rung
+            from repro.core import device_build
+            rk = max(1, min(kk, cap))
+            for b in buckets:
+                q = jnp.zeros((b, self.d), jnp.float32)
+                _delta_brute_topk(q, rot, valid, rk)
+                _peer_topk(q, jnp.zeros((b,), bool),
+                           max(1, min(kk, b - 1)))
+            device_build.warm_prune_batch(
+                [(b, 3 * kk, self.d) for b in buckets], self.base.cfg.R)
         # remember the serving context so a later brute->graph threshold
         # crossing can compile _delta_graph_topk during the mutation drain
         # instead of stalling the first post-crossing serve batch
@@ -429,6 +463,69 @@ class SegmentedIndex:
         return (np.asarray(ids[:B]), np.asarray(dists[:B]),
                 np.asarray(vecs[:B]))
 
+    def _collect_candidates_device(self, seg: DeltaSegment, rot: np.ndarray,
+                                   m0: int, b: int
+                                   ) -> Tuple[np.ndarray, np.ndarray,
+                                              np.ndarray, np.ndarray]:
+        """Device-path candidate collection for insert repair (DESIGN.md
+        §9): the same three sources as the host path — nearest live delta
+        rows, batch peers, base occluders — but gathered by the jit'd
+        bucketed scorers instead of numpy loops, and assembled into
+        fixed-width (b, 3*kk) tensors (absent sources stay +inf, so the
+        downstream prune signature never depends on which sources fired).
+        Runs on the PRE-insert ``seg.arrays`` snapshot, which matches the
+        host path's pre-write live set exactly."""
+        from repro.core.multistage import pad_to_bucket
+        up = self.up
+        kk = max(1, up.repair_knn)
+        cid = np.full((b, 3 * kk), -1, np.int64)
+        cd = np.full((b, 3 * kk), np.inf, np.float32)
+        cv = np.zeros((b, 3 * kk, self.d), np.float32)
+        cok = np.zeros((b, 3 * kk), bool)
+        live = seg.live_count()
+        if live:
+            q, _ = pad_to_bucket(jnp.asarray(rot), self.base.batch_buckets)
+            if seg.device is not None:
+                q = jax.device_put(q, seg.device)
+            k_eff = max(1, min(kk, seg.cap))
+            if live <= up.brute_threshold:
+                ids, dd = _delta_brute_topk(q, seg.arrays["rot_vecs"][:-1],
+                                            seg.arrays["valid"], k_eff)
+            else:
+                sp = SearchParams(k=k_eff, ef=max(up.repair_ef, k_eff),
+                                  ef_pilot=max(up.repair_ef, k_eff))
+                ids, dd, _ = _delta_graph_topk(seg.arrays, q, sp, k_eff)
+            ids = np.asarray(ids)[:b].astype(np.int64)
+            dd = np.asarray(dd)[:b].astype(np.float32)
+            fin = np.isfinite(dd)
+            cid[:, :k_eff] = np.where(fin, ids, -1)
+            cd[:, :k_eff] = dd
+            cv[:, :k_eff] = seg.rot[np.clip(ids, 0, seg.cap - 1)]
+            cok[:, :k_eff] = fin
+        if b > 1:
+            q, _ = pad_to_bucket(jnp.asarray(rot), self.base.batch_buckets)
+            valid = jnp.arange(q.shape[0]) < b
+            k_eff = max(1, min(kk, int(q.shape[0]) - 1))
+            idx, dd = _peer_topk(q, valid, k_eff)
+            idx = np.asarray(idx)[:b]
+            dd = np.asarray(dd)[:b].astype(np.float32)
+            fin = np.isfinite(dd)
+            blk = slice(kk, kk + k_eff)
+            cid[:, blk] = np.where(fin, m0 + idx.astype(np.int64), -1)
+            cd[:, blk] = dd
+            cv[:, blk] = rot[np.clip(idx, 0, b - 1)]
+            cok[:, blk] = fin
+        if up.use_base_occluders and (~self._base_tomb).any():
+            bids, bd, bvecs = self._base_candidates(rot, kk)
+            bd = np.where(bids < self.base.n, bd, np.inf).astype(np.float32)
+            take = min(kk, bids.shape[1])
+            blk = slice(2 * kk, 2 * kk + take)
+            cd[:, blk] = bd[:, :take]
+            cv[:, blk] = bvecs[:, :take]
+            # base candidates join as occluders only: cid stays -1 and
+            # cok stays False (edges never cross segments)
+        return cid, cd, cv, cok
+
     def insert(self, vectors: np.ndarray) -> np.ndarray:
         """Append vectors as new live nodes; returns their global ids.
 
@@ -436,8 +533,11 @@ class SegmentedIndex:
         by greedy search through the base index and the delta graph (plus
         exact scoring of the small cases and the batch peers), occlusion-
         pruned with the same predicate as the offline build, and reverse
-        edges are patched within the delta with re-prune on full rows —
-        the build's prune/augment helpers, reused one node at a time."""
+        edges are patched within the delta with re-prune on full rows.
+        With ``UpdateParams.repair_method`` "device"/"auto" (DESIGN.md §9)
+        the collection, prune and reverse-edge patch all run through the
+        batched jit'd primitives in ``core/device_build``; "host" keeps
+        the per-node numpy loops."""
         vectors = np.ascontiguousarray(vectors, np.float32)
         if vectors.ndim == 1:
             vectors = vectors[None, :]
@@ -445,42 +545,51 @@ class SegmentedIndex:
         if b == 0:
             return np.zeros(0, np.int64)
         up = self.up
+        if up.repair_method not in ("auto", "device", "host"):
+            raise ValueError(f"unknown repair_method {up.repair_method!r} "
+                             "(auto | device | host)")
+        use_device = up.repair_method != "host"
         rot = np.ascontiguousarray(self.base.reducer.rotate(vectors),
                                    np.float32)
         seg = self._ensure_delta(b)
         m0, cap, R = seg.m, seg.cap, seg.R
 
-        # ---- candidate collection -------------------------------------
+        # ---- candidate collection (pre-write live set) ----------------
+        if use_device:
+            dcid, dcd, dcv, dcok = self._collect_candidates_device(
+                seg, rot, m0, b)
         cand_parts: List[Tuple[np.ndarray, np.ndarray, np.ndarray, bool]] = []
-        live_idx = np.flatnonzero(seg.live_mask())
         kk = max(1, up.repair_knn)
-        if len(live_idx):
-            if len(live_idx) <= up.brute_threshold:
-                d2 = graph_build.pairwise_sq_dists(rot, seg.rot[live_idx])
-                take = min(kk, len(live_idx))
-                part = np.argpartition(d2, take - 1, axis=1)[:, :take]
-                ids = live_idx[part].astype(np.int64)
-                dd = np.take_along_axis(d2, part, axis=1)
-            else:
-                ids, dd = graph_build.greedy_candidates(
-                    seg.neighbors, seg.rot, rot, seg.entry,
-                    ef=up.repair_ef, live=seg.live_mask())
-                ids, dd = ids[:, :kk], dd[:, :kk]
-            cand_parts.append((ids, dd.astype(np.float32),
-                               seg.rot[np.clip(ids, 0, cap - 1)], True))
-        if b > 1:
-            d2p = graph_build.pairwise_sq_dists(rot, rot)
-            np.fill_diagonal(d2p, np.inf)
-            take = min(kk, b - 1)
-            part = np.argpartition(d2p, take - 1, axis=1)[:, :take]
-            pe_ids = (m0 + part).astype(np.int64)
-            pe_d = np.take_along_axis(d2p, part, axis=1).astype(np.float32)
-            cand_parts.append((pe_ids, pe_d, rot[part], True))
-        if up.use_base_occluders and (~self._base_tomb).any():
-            bids, bd, bvecs = self._base_candidates(rot, kk)
-            bd = np.where(bids < self.base.n, bd, np.inf).astype(np.float32)
-            cand_parts.append((np.full_like(bids, -1, dtype=np.int64),
-                               bd, bvecs, False))
+        if not use_device:
+            live_idx = np.flatnonzero(seg.live_mask())
+            if len(live_idx):
+                if len(live_idx) <= up.brute_threshold:
+                    d2 = graph_build.pairwise_sq_dists(rot, seg.rot[live_idx])
+                    take = min(kk, len(live_idx))
+                    part = np.argpartition(d2, take - 1, axis=1)[:, :take]
+                    ids = live_idx[part].astype(np.int64)
+                    dd = np.take_along_axis(d2, part, axis=1)
+                else:
+                    ids, dd = graph_build.greedy_candidates(
+                        seg.neighbors, seg.rot, rot, seg.entry,
+                        ef=up.repair_ef, live=seg.live_mask())
+                    ids, dd = ids[:, :kk], dd[:, :kk]
+                cand_parts.append((ids, dd.astype(np.float32),
+                                   seg.rot[np.clip(ids, 0, cap - 1)], True))
+            if b > 1:
+                d2p = graph_build.pairwise_sq_dists(rot, rot)
+                np.fill_diagonal(d2p, np.inf)
+                take = min(kk, b - 1)
+                part = np.argpartition(d2p, take - 1, axis=1)[:, :take]
+                pe_ids = (m0 + part).astype(np.int64)
+                pe_d = np.take_along_axis(d2p, part, axis=1).astype(np.float32)
+                cand_parts.append((pe_ids, pe_d, rot[part], True))
+            if up.use_base_occluders and (~self._base_tomb).any():
+                bids, bd, bvecs = self._base_candidates(rot, kk)
+                bd = np.where(bids < self.base.n, bd,
+                              np.inf).astype(np.float32)
+                cand_parts.append((np.full_like(bids, -1, dtype=np.int64),
+                                   bd, bvecs, False))
 
         # ---- occlusion prune + write rows -----------------------------
         seg.raw[m0:m0 + b] = vectors
@@ -489,22 +598,49 @@ class SegmentedIndex:
         seg.gids[m0:m0 + b] = gids
         self._next_gid += b
         self._gid_dead = np.concatenate([self._gid_dead, np.zeros(b, bool)])
-        for i in range(b):
-            if not cand_parts:
-                break
-            cv = np.concatenate([p[2][i] for p in cand_parts], axis=0)
-            cd = np.concatenate([p[1][i] for p in cand_parts], axis=0)
-            cid = np.concatenate([p[0][i] for p in cand_parts], axis=0)
-            ok = np.concatenate([np.full(len(p[0][i]), p[3])
-                                 for p in cand_parts], axis=0)
-            kept = graph_build.prune_one(cv, cd, R, alpha=up.repair_alpha,
-                                         edge_ok=ok)
-            edges = cid[kept]
-            seg.neighbors[m0 + i, :len(edges)] = edges.astype(np.int32)
-        seg.m = m0 + b
-        graph_build.patch_reverse_edges(seg.neighbors, seg.rot,
-                                        np.arange(m0, m0 + b), cap, R,
-                                        alpha=up.repair_alpha)
+        if use_device:
+            from repro.core import device_build
+            from repro.core.multistage import bucket_size
+            Bp = bucket_size(b, self.base.batch_buckets)
+            if Bp > b:
+                pad = Bp - b
+                dcd = np.concatenate(
+                    [dcd, np.full((pad,) + dcd.shape[1:], np.inf,
+                                  np.float32)])
+                dcv = np.concatenate(
+                    [dcv, np.zeros((pad,) + dcv.shape[1:], np.float32)])
+                dcok = np.concatenate(
+                    [dcok, np.zeros((pad,) + dcok.shape[1:], bool)])
+            kept = device_build.prune_batch(dcv, dcd, R,
+                                            alpha=up.repair_alpha,
+                                            edge_ok=dcok)[:b]
+            for i in range(b):
+                sel = kept[i][kept[i] >= 0]
+                edges = dcid[i, sel]
+                edges = edges[edges >= 0]
+                seg.neighbors[m0 + i, :len(edges)] = edges.astype(np.int32)
+            seg.m = m0 + b
+            device_build.patch_reverse_edges_batched(
+                seg.neighbors, seg.rot, np.arange(m0, m0 + b), cap, R,
+                alpha=up.repair_alpha)
+        else:
+            for i in range(b):
+                if not cand_parts:
+                    break
+                cv = np.concatenate([p[2][i] for p in cand_parts], axis=0)
+                cd = np.concatenate([p[1][i] for p in cand_parts], axis=0)
+                cid = np.concatenate([p[0][i] for p in cand_parts], axis=0)
+                ok = np.concatenate([np.full(len(p[0][i]), p[3])
+                                     for p in cand_parts], axis=0)
+                kept = graph_build.prune_one(cv, cd, R,
+                                             alpha=up.repair_alpha,
+                                             edge_ok=ok)
+                edges = cid[kept]
+                seg.neighbors[m0 + i, :len(edges)] = edges.astype(np.int32)
+            seg.m = m0 + b
+            graph_build.patch_reverse_edges(seg.neighbors, seg.rot,
+                                            np.arange(m0, m0 + b), cap, R,
+                                            alpha=up.repair_alpha)
         seg.refresh(self.base.cfg.pilot_dtype,
                     fes_threshold=up.brute_threshold)
         self._maybe_warm_graph_path(seg)

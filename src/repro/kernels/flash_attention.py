@@ -37,10 +37,12 @@ def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float,
 
     def body(j, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.dslice(j * bk, bk), slice(None))
-                    ).astype(jnp.float32)              # (bk, d)
-        v = pl.load(v_ref, (0, pl.dslice(j * bk, bk), slice(None))
-                    ).astype(jnp.float32)
+        # index the unit leading dim with a size-1 dslice: some jax versions
+        # reject bare ints in pl.load index tuples
+        k = pl.load(k_ref, (pl.dslice(0, 1), pl.dslice(j * bk, bk),
+                            slice(None)))[0].astype(jnp.float32)   # (bk, d)
+        v = pl.load(v_ref, (pl.dslice(0, 1), pl.dslice(j * bk, bk),
+                            slice(None)))[0].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         if causal:

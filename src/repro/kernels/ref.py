@@ -101,6 +101,34 @@ def pilot_search_ref(q, nbr_table, vec_table, beam_id, beam_d, beam_ck,
     return beam_id, beam_d, beam_ck, visited, nd, nh, ne
 
 
+def candidate_merge_ref(cand_ids, cand_d, prop_ids, prop_d, n: int):
+    """Oracle for build_kernel.fused_candidate_merge — one NN-descent
+    sample-and-merge step (DESIGN.md §9): concatenate the incumbent
+    (B, K) candidate lists with (B, P) scored proposals, drop ids >= n,
+    dedupe by id (keeping the smallest-distance copy), and return the
+    (distance, id) top-K.  Sentinel slots come back as id ``n`` with
+    distance BIG.  Also the production jnp merge used by
+    ``core/device_build.nn_descent`` when the Pallas path is off."""
+    K = cand_ids.shape[1]
+    all_ids = jnp.concatenate([cand_ids, prop_ids], axis=1)
+    all_d = jnp.concatenate([cand_d, prop_d], axis=1)
+    bad = all_ids >= n
+    all_d = jnp.where(bad, BIG, all_d)
+    all_ids = jnp.where(bad, n, all_ids)
+    perm = jnp.lexsort((all_d, all_ids))              # primary id, then d
+    sid = jnp.take_along_axis(all_ids, perm, axis=1)
+    sd = jnp.take_along_axis(all_d, perm, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros((sid.shape[0], 1), bool), sid[:, 1:] == sid[:, :-1]],
+        axis=1)
+    bad = dup | (sid >= n)
+    sd = jnp.where(bad, BIG, sd)
+    sid = jnp.where(bad, n, sid)
+    perm2 = jnp.lexsort((sid, sd))[:, :K]             # primary d, tie by id
+    return (jnp.take_along_axis(sid, perm2, axis=1),
+            jnp.take_along_axis(sd, perm2, axis=1))
+
+
 def expand_merge_ref(q, nvecs, nids, fresh, beam_id, beam_d, beam_ck, n: int):
     """Oracle for fused_expand_merge: score fresh neighbours, merge into the
     sorted beam, return (ids, dists, checked) (B, ef)."""

@@ -241,6 +241,7 @@ class ThroughputEngine:
             "requests": 0, "batches": 0, "bucket_hist": {},
             "cache_lookups": 0, "cache_hits": 0, "batch_records": [],
             "upserts": 0, "deletes": 0, "mutation_drains": 0,
+            "mutation_time_s": 0.0,
             "stage_rebuilds": 0, "cache_maintenance": 0,
             # terminal-state + resilience counters (DESIGN.md §8)
             "completed": 0, "rejected": 0, "expired": 0, "shed": 0,
@@ -441,6 +442,7 @@ class ThroughputEngine:
                         and self._fault_injector.mutation_should_fail():
                     from repro.runtime.chaos import ChaosError
                     raise ChaosError("injected mutation failure")
+                mt0 = time.perf_counter()
                 if run[0].kind == "insert":
                     gids = (self.sharded.insert(payload, shard=qi)
                             if self.sharded is not None
@@ -454,6 +456,9 @@ class ThroughputEngine:
                 else:
                     self.stats["deletes"] += self.segments.delete(payload)
                     rows += len(payload)
+                # repair wall-clock, reported apart from search time so
+                # streaming benchmarks can attribute QPS loss (DESIGN.md §9)
+                self.stats["mutation_time_s"] += time.perf_counter() - mt0
             except Exception as exc:
                 pol = self._mut_restart[qi]
                 backoff = pol.next_backoff()

@@ -1,5 +1,7 @@
-"""Hypothesis properties for the graph-construction prune/augment helpers
-(skips cleanly when hypothesis is absent, like test_frontier_props).
+"""Properties for the graph-construction prune/augment helpers — hypothesis
+when available, a seeded pseudo-random sweep otherwise (the container pins
+dependencies, so the property tests must not require installing anything;
+same policy as test_resilience.py).
 
 These helpers are reused one node at a time by the streaming-insert repair
 path (core/segments.py, DESIGN.md §6), so their invariants are pinned here
@@ -9,14 +11,69 @@ the first divergence of two greedy scans the larger alpha is always the
 one that keeps — the localized form of "larger alpha keeps more"; the
 *global* kept-set superset claim is false once earlier keeps feed back
 into later occlusion tests), and reverse-edge augmentation never exceeds
-the degree bound."""
+the degree bound.
+
+The device build/repair mirrors (core/device_build.py, DESIGN.md §9) are
+held to the same invariants plus two cross-path properties: the bulk
+occlusion prune must agree with the host scan decision-for-decision, and
+NN-descent candidate distances must be monotone non-increasing across
+rounds (the merge keeps the best of every duplicate, so each rank can
+only improve)."""
 
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                            # pragma: no cover - env dep
+    HAVE_HYPOTHESIS = False
 
+    class _S:
+        """A sampler standing in for one hypothesis strategy."""
+
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _St:
+        @staticmethod
+        def integers(lo, hi):
+            return _S(lambda rng: int(rng.integers(lo, hi + 1)))
+
+        @staticmethod
+        def sampled_from(xs):
+            return _S(lambda rng: xs[int(rng.integers(len(xs)))])
+
+        @staticmethod
+        def floats(lo, hi):
+            return _S(lambda rng: float(rng.uniform(lo, hi)))
+
+        @staticmethod
+        def booleans():
+            return _S(lambda rng: bool(rng.integers(2)))
+
+    st = _St()
+
+    def settings(**_kw):
+        return lambda f: f
+
+    def given(*strats):
+        """Seeded fallback for @given: run the test body on a fixed tape
+        of pseudo-random draws from the same parameter shapes."""
+        def deco(f):
+            def wrapper():
+                rng = np.random.default_rng(0xC0FFEE)
+                for _ in range(12):
+                    f(*(s.draw(rng) for s in strats))
+            # keep the name/doc but NOT the signature (pytest would try
+            # to resolve the sample parameters as fixtures)
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+        return deco
+
+from repro.core.device_build import (build_graph_device, nn_descent,
+                                     occlusion_prune_device, prune_batch)
 from repro.core.graph_build import (add_reverse_edges, brute_knn, occludes,
                                     occlusion_prune, patch_reverse_edges,
                                     prune_one)
@@ -129,3 +186,79 @@ def test_prune_one_occluder_only_candidates(seed, R):
     # with everything edge-eligible and keep_pruned, slots fill up
     full = prune_one(cv, cd, R, alpha=1.2)
     assert len(full) == min(R, K)
+
+
+# ---------------------------------------------------------------------------
+# device build/repair mirrors (core/device_build.py, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=8)
+@given(st.integers(0, 10_000), st.sampled_from([4, 6, 8]),
+       st.floats(1.0, 1.6), st.booleans())
+def test_occlusion_prune_host_device_invariance(seed, R, alpha, keep_pruned):
+    """The jit'd bulk prune must make exactly the host scan's decisions:
+    identical adjacency (ids AND order) for the same candidate lists."""
+    x, ids, dd = _dataset(seed)
+    host = occlusion_prune(x, ids, dd, R, alpha=alpha,
+                           keep_pruned=keep_pruned)
+    dev = occlusion_prune_device(x, ids, dd, R, alpha=alpha,
+                                 keep_pruned=keep_pruned)
+    assert np.array_equal(host, dev)
+
+
+@settings(deadline=None, max_examples=8)
+@given(st.integers(0, 10_000), st.sampled_from([3, 5]), st.booleans())
+def test_prune_batch_matches_prune_one(seed, R, keep_pruned):
+    """prune_batch row i == prune_one on row i, including the edge_ok
+    occluder semantics and the keep-pruned backfill append order."""
+    rng = np.random.default_rng(seed)
+    B, K = 6, 14
+    cv = rng.normal(size=(B, K, 5)).astype(np.float32)
+    cd = ((cv - rng.normal(size=(B, 1, 5)).astype(np.float32)) ** 2
+          ).sum(-1).astype(np.float32)
+    ok = rng.random((B, K)) < 0.7
+    got = prune_batch(cv, cd, R, alpha=1.2, edge_ok=ok,
+                      keep_pruned=keep_pruned)
+    for i in range(B):
+        want = prune_one(cv[i], cd[i], R, alpha=1.2, edge_ok=ok[i],
+                         keep_pruned=keep_pruned)
+        have = got[i][got[i] >= 0]
+        assert np.array_equal(have, want), (i, have, want)
+
+
+@settings(deadline=None, max_examples=4)
+@given(st.integers(0, 10_000), st.sampled_from([4, 6]))
+def test_device_builder_graph_invariants(seed, R):
+    """build_graph_device output: degree ≤ R, ids in [0, n], no self
+    edges, no duplicate edges within a row."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(96, 8)).astype(np.float32)
+    g = build_graph_device(x, R, rounds=4, seed=seed, repair=False)
+    n = len(x)
+    nb = g.neighbors
+    real = nb < n
+    assert (real.sum(axis=1) <= R).all()
+    assert (nb >= 0).all() and (nb <= n).all()
+    rows = np.broadcast_to(np.arange(n)[:, None], nb.shape)
+    assert not (real & (nb == rows)).any(), "self loop"
+    for i in range(n):
+        kept = nb[i][real[i]]
+        assert len(set(kept.tolist())) == len(kept)
+
+
+@settings(deadline=None, max_examples=3)
+@given(st.integers(0, 10_000))
+def test_nn_descent_monotone_rounds(seed):
+    """Per-rank candidate distances never increase from round r to r+1:
+    the merge keeps the best of every duplicate, so each node's k-th best
+    distance is monotone non-increasing (inf = empty slot may only fill)."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(128, 8)).astype(np.float32)
+    prev = None
+    for r in (1, 2, 3, 4):
+        _, dd = nn_descent(x, 8, rounds=r, seed=seed, S=4)
+        if prev is not None:
+            worse = dd > prev
+            assert not worse.any(), \
+                f"round {r}: {int(worse.sum())} ranks got worse"
+        prev = dd
