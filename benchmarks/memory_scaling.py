@@ -7,10 +7,11 @@ accelerator-resident pilot index:
 * geometry — (sample_ratio, svd_ratio) at fp32, reporting pilot bytes, the
   full/pilot ratio and the CPU-side distance-calc reduction at matched
   recall (the hardware-independent core of the speedup);
-* encoding — pilot_dtype ∈ {float32, bfloat16, int8} at one geometry via
-  ``PilotANNIndex.set_pilot_dtype`` (no rebuild), reporting the byte
-  reduction and the recall delta vs the fp32 pilot at equal ef
-  (DESIGN.md §4: stage ② re-scores exactly, so the delta should be ~0).
+* encoding — pilot_dtype ∈ {float32, bfloat16, int8, int4, pq} at one
+  geometry via ``PilotANNIndex.set_pilot_dtype`` (no rebuild), reporting
+  the byte reduction and the recall delta vs the fp32 pilot at equal ef
+  (DESIGN.md §4: stage ② re-scores exactly, so the delta should be ~0
+  even for the deep rungs of the ladder).
 
 Emits ``name,value,derived`` CSV; ``benchmarks.run --json`` wraps it into a
 ``BENCH_memory_scaling.json`` record (schema: docs/benchmarks.md).
@@ -61,7 +62,7 @@ def run(n: int = 8000, d: int = 64, nq: int = 128, target: float = 0.9,
         rows.append(("memory_scaling/dtype_float32", base_bytes / 1e6,
                      f"MB_pilot;bytes_reduction=1.00x;recall={r0:.3f};"
                      f"recall_delta_vs_fp32=+0.0000"))
-        for dt in ("bfloat16", "int8"):
+        for dt in ("bfloat16", "int8", "int4", "pq"):
             last_idx.set_pilot_dtype(dt)
             rep = last_idx.memory_report()
             ids, _, _ = last_idx.search(ds.queries, params)
@@ -105,7 +106,11 @@ def run(n: int = 8000, d: int = 64, nq: int = 128, target: float = 0.9,
             ("laion100m", 768, 160, 25_000_000, "float32"),
             ("laion100m_bf16", 768, 160, 25_000_000, "bfloat16"),
             ("laion100m_int8", 768, 160, 25_000_000, "int8"),
-            ("laion100m_tight", 768, 160, 6_000_000, "int8")):
+            ("laion100m_int4", 768, 160, 25_000_000, "int4"),
+            ("laion100m_pq", 768, 160, 25_000_000, "pq"),
+            ("laion100m_tight", 768, 160, 6_000_000, "int8"),
+            ("laion100m_tight_pq", 768, 160, 6_000_000, "pq"),
+            ("deep100m_pq", 96, 48, 25_000_000, "pq")):
         s = PodIndexSpec(n=100_000_000, d=dd, d_primary=dp_, n_pilot=npi,
                          pilot_dtype=pdt)
         rows.append((f"memory_scaling/analytic_{label}",

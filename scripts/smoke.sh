@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Pre-PR smoke check (see README.md); also what CI runs
-# (.github/workflows/ci.yml). Runs all eleven sections even if an earlier
+# (.github/workflows/ci.yml). Runs all twelve sections even if an earlier
 # one fails, then summarizes:
 #   1. tier-1 verify (ROADMAP.md) minus slow/multidevice (run separately).
 #      The old jax-version known-red list is gone: the flash-attention /
@@ -36,42 +36,47 @@
 #      batched repair) → delete → compact → search, with a recall-parity
 #      check against the exact host build and a bit-parity check of a
 #      single-insert repair vs the host repair path
+#  12. deep-compression smoke (DESIGN.md §4): int4/pq pilot payloads via
+#      set_pilot_dtype (no rebuild) — >=10x vec+FES byte reduction at pq
+#      with identical final ids vs the fp32 pilot at equal ef, and the
+#      ResidencyPlanner ladder descending to int4/pq under a byte budget
+#      only the deep encodings can satisfy
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 declare -A status
 
-echo "== [1/11] tier-1 verify (minus slow/multidevice) =="
+echo "== [1/12] tier-1 verify (minus slow/multidevice) =="
 python -m pytest -x -q -m "not slow and not multidevice"
 status[tier1]=$?
 
-echo "== [2/11] fused traversal kernel parity (interpret mode) =="
+echo "== [2/12] fused traversal kernel parity (interpret mode) =="
 python -m pytest -q "tests/test_traversal_kernel.py::test_pallas_greedy_search_parity_4k[bloom]"
 status[kernel_parity]=$?
 
-echo "== [3/11] quickstart =="
+echo "== [3/12] quickstart =="
 python examples/quickstart.py
 status[quickstart]=$?
 
-echo "== [4/11] benchmark smoke (frontier_sweep, interpret mode) =="
+echo "== [4/12] benchmark smoke (frontier_sweep, interpret mode) =="
 python -m benchmarks.run --only frontier_sweep --json .
 status[bench_smoke]=$?
 
-echo "== [5/11] docs consistency (links, DESIGN.md § refs, api coverage) =="
+echo "== [5/12] docs consistency (links, DESIGN.md § refs, api coverage) =="
 python scripts/check_docs.py
 status[docs_check]=$?
 
-echo "== [6/11] memory_scaling benchmark smoke (pilot_dtype sweep) =="
+echo "== [6/12] memory_scaling benchmark smoke (pilot_dtype sweep) =="
 python -m benchmarks.run --only memory_scaling --json .
 status[memory_smoke]=$?
 
-echo "== [7/11] serving_qps smoke (bucketed vs naive, D=2, 200 requests) =="
+echo "== [7/12] serving_qps smoke (bucketed vs naive, D=2, 200 requests) =="
 SERVING_QPS_N=4000 SERVING_QPS_REQUESTS=200 SERVING_QPS_DEPTH=2 \
     python -m benchmarks.run --only serving_qps --json .
 status[serving_smoke]=$?
 
-echo "== [8/11] mutable-index smoke (round-trip + streaming_update) =="
+echo "== [8/12] mutable-index smoke (round-trip + streaming_update) =="
 python - <<'PY' && \
 STREAMING_N=3000 STREAMING_REQUESTS=150 STREAMING_RATE=300 \
     python -m benchmarks.run --only streaming_update --json .
@@ -99,7 +104,7 @@ print("mutable round-trip OK")
 PY
 status[mutable_smoke]=$?
 
-echo "== [9/11] pod serving smoke (sharded round-trip + pod_scaling, 4 CPU devices) =="
+echo "== [9/12] pod serving smoke (sharded round-trip + pod_scaling, 4 CPU devices) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=4 python - <<'PY' && \
 POD_SCALING_N=2500 POD_SCALING_REQUESTS=128 POD_SCALING_SHARDS=1,2,4 \
     python -m benchmarks.run --only pod_scaling --json .
@@ -129,7 +134,7 @@ print("4-device sharded round-trip OK")
 PY
 status[pod_smoke]=$?
 
-echo "== [10/11] fault-injection smoke (SimClock chaos + slo_serving) =="
+echo "== [10/12] fault-injection smoke (SimClock chaos + slo_serving) =="
 python - <<'PY' && \
 SLO_SERVING_N=2500 SLO_SERVING_REQUESTS=128 \
     python -m benchmarks.run --only slo_serving --json .
@@ -171,7 +176,7 @@ print("fault-injection round-trip OK")
 PY
 status[slo_smoke]=$?
 
-echo "== [11/11] device-build round-trip (nn_descent build + device repair) =="
+echo "== [11/12] device-build round-trip (nn_descent build + device repair) =="
 python - <<'PY'
 import numpy as np
 from repro.core import (IndexConfig, PilotANNIndex, SearchParams,
@@ -215,9 +220,43 @@ print("device-build round-trip OK")
 PY
 status[device_build]=$?
 
+echo "== [12/12] deep-compression smoke (int4/pq ladder, DESIGN.md §4) =="
+python - <<'PY'
+import numpy as np
+from repro.core import (IndexConfig, PilotANNIndex, ResidencyPlanner,
+                        SearchParams)
+from repro.core import quant
+rng = np.random.default_rng(0)
+x = rng.normal(size=(1500, 64)).astype(np.float32)
+q = rng.normal(size=(24, 64)).astype(np.float32)
+idx = PilotANNIndex(IndexConfig(R=16, sample_ratio=0.5, svd_ratio=0.75,
+                                n_entry=256, build_method="exact"), x)
+params = SearchParams(k=5, ef=96, ef_pilot=96)
+ids_f, _, _ = idx.search(q, params)
+vec = {}
+for dt in quant.PILOT_DTYPES:
+    idx.set_pilot_dtype(dt)            # requantize in place, no rebuild
+    rep = idx.memory_report()
+    vec[dt] = rep["pilot_vec_bytes"] + rep["pilot_fes_bytes"]
+    if dt in ("int4", "pq"):
+        ids, _, _ = idx.search(q, params)
+        assert np.array_equal(ids_f, ids), \
+            f"{dt} pilot diverged from fp32 final ids"
+assert vec["float32"] / vec["pq"] >= 10.0, vec
+assert vec["float32"] / vec["int4"] >= 7.5, vec
+# ladder: a budget between the int4 and pq estimates must solve to pq
+pl = ResidencyPlanner(len(x), 64, R=16, n_entry=256)
+est = {dt: pl.estimate(0.5, 0.75, dt)["total"] for dt in quant.PILOT_DTYPES}
+plan = pl.plan((est["pq"] + est["int4"]) // 2)
+assert plan.fits and plan.pilot_dtype == "pq", plan
+print(f"deep-compression OK (fp32/pq={vec['float32']/vec['pq']:.1f}x, "
+      f"fp32/int4={vec['float32']/vec['int4']:.1f}x)")
+PY
+status[deep_compression]=$?
+
 echo
 rc=0
-for k in tier1 kernel_parity quickstart bench_smoke docs_check memory_smoke serving_smoke mutable_smoke pod_smoke slo_smoke device_build; do
+for k in tier1 kernel_parity quickstart bench_smoke docs_check memory_smoke serving_smoke mutable_smoke pod_smoke slo_smoke device_build deep_compression; do
     if [ "${status[$k]}" -eq 0 ]; then
         echo "smoke: $k OK"
     else

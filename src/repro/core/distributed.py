@@ -73,8 +73,9 @@ class PodIndexSpec:
     vec_dtype: str = "float32"   # corpus vector storage (bf16 halves memory
                                  # and naive-gather wire bytes; fp32 accum)
     pilot_dtype: str = "float32"  # replicated pilot/FES vector encoding
-                                  # (float32|bfloat16|int8; DESIGN.md §4 —
-                                  # int8 adds one fp32 scale row per table)
+                                  # (float32|bfloat16|int8|int4|pq;
+                                  # DESIGN.md §4 — int8/int4 add one fp32
+                                  # scale row per table, pq a codebook)
 
     # mutable pod serving (DESIGN.md §7): include tombstone bitmaps and
     # per-shard delta-segment tables in the specs/shardings.  Off by
@@ -87,12 +88,12 @@ class PodIndexSpec:
         """Per-chip replicated pilot payload, dtype-aware (the per-chip HBM
         budget the ResidencyPlanner solves against at pod scale)."""
         from repro.core import quant
-        vb = quant.VEC_ITEMSIZE[self.pilot_dtype]
-        scale = self.d_primary * 4 * 2 if self.pilot_dtype == "int8" else 0
-        return (self.n_pilot * self.d_primary * vb
+        vb = quant.encoded_row_bytes(self.d_primary, self.pilot_dtype)
+        side = 2 * quant.side_bytes(self.d_primary, self.pilot_dtype)
+        return (self.n_pilot * vb
                 + self.n_pilot * self.R * 4
-                + self.fes_r * self.fes_capacity * self.d_primary * vb
-                + scale)
+                + self.fes_r * self.fes_capacity * vb
+                + side)
 
     def full_bytes(self) -> int:
         return self.n * self.d * 4 + self.n * self.R * 4
@@ -104,14 +105,29 @@ class PodIndexSpec:
         if not self.mutable:
             return 0
         from repro.core import quant
-        vb = quant.VEC_ITEMSIZE[self.pilot_dtype]
-        scale = self.d_primary * 4 if self.pilot_dtype == "int8" else 0
+        vb = quant.encoded_row_bytes(self.d_primary, self.pilot_dtype)
+        side = quant.side_bytes(self.d_primary, self.pilot_dtype)
         per = (self.delta_capacity * self.R * 4
-               + self.delta_capacity * self.d_primary * vb
-               + scale
+               + self.delta_capacity * vb
+               + side
                + self.delta_capacity * 8      # global ids (int64)
                + self.delta_capacity)         # live bitmap
         return self.n_delta_segments * per
+
+
+def _pilot_storage(dp: int, pilot_dtype: str):
+    """Stored-table layout of one pilot encoding (core/quant.py):
+    ``(row_width, element_dtype, side_shape)``.  The packed encodings store
+    int8 lanes — two nibbles per byte (int4) or one PQ code per subspace —
+    and the side array is the fp32 scale row (dense/int4) or the
+    block-diagonal fp32 codebook (pq)."""
+    from repro.core import quant
+    if pilot_dtype == "int4":
+        return quant.int4_packed_width(dp), jnp.int8, (dp,)
+    if pilot_dtype == "pq":
+        m, _, ksub = quant.pq_geometry(dp)
+        return m, jnp.int8, (dp, m * ksub)
+    return dp, getattr(jnp, pilot_dtype), (dp,)
 
 
 def pod_array_specs(spec: PodIndexSpec, mesh) -> Dict[str, jax.ShapeDtypeStruct]:
@@ -119,18 +135,20 @@ def pod_array_specs(spec: PodIndexSpec, mesh) -> Dict[str, jax.ShapeDtypeStruct]
     n_dev = int(np.prod(mesh.devices.shape))
     Np = _round_to(spec.n + 1, n_dev)
     npl = _round_to(spec.n_pilot + 1, 1)
-    pdt = getattr(jnp, spec.pilot_dtype)
+    pw, pdt, sshape = _pilot_storage(spec.d_primary, spec.pilot_dtype)
     return {
         # replicated pilot index (vector tables in spec.pilot_dtype; the
-        # fp32 scale rows are all-ones unless pilot_dtype == "int8")
+        # *_scale slots carry the encoding's side payload — all-ones scale
+        # rows for the exact dtypes, real scales for int8/int4, and the
+        # block-diagonal codebook for pq)
         "pilot_neighbors": jax.ShapeDtypeStruct((npl, spec.R), jnp.int32),
-        "pilot_vecs": jax.ShapeDtypeStruct((npl, spec.d_primary), pdt),
-        "pilot_scale": jax.ShapeDtypeStruct((spec.d_primary,), jnp.float32),
+        "pilot_vecs": jax.ShapeDtypeStruct((npl, pw), pdt),
+        "pilot_scale": jax.ShapeDtypeStruct(sshape, jnp.float32),
         "pilot_to_full": jax.ShapeDtypeStruct((npl,), jnp.int32),
         "fes_centroids": jax.ShapeDtypeStruct((spec.fes_r, spec.d_primary), jnp.float32),
         "fes_entries": jax.ShapeDtypeStruct((spec.fes_r, spec.fes_capacity,
-                                             spec.d_primary), pdt),
-        "fes_scale": jax.ShapeDtypeStruct((spec.d_primary,), jnp.float32),
+                                             pw), pdt),
+        "fes_scale": jax.ShapeDtypeStruct(sshape, jnp.float32),
         "fes_entry_ids": jax.ShapeDtypeStruct((spec.fes_r, spec.fes_capacity), jnp.int32),
         "fes_valid": jax.ShapeDtypeStruct((spec.fes_r, spec.fes_capacity), bool),
         # sharded full index
@@ -146,9 +164,9 @@ def pod_array_specs(spec: PodIndexSpec, mesh) -> Dict[str, jax.ShapeDtypeStruct]
         "delta_neighbors": jax.ShapeDtypeStruct(
             (spec.n_delta_segments, spec.delta_capacity, spec.R), jnp.int32),
         "delta_pilot": jax.ShapeDtypeStruct(
-            (spec.n_delta_segments, spec.delta_capacity, spec.d_primary), pdt),
+            (spec.n_delta_segments, spec.delta_capacity, pw), pdt),
         "delta_pilot_scale": jax.ShapeDtypeStruct(
-            (spec.n_delta_segments, spec.d_primary), jnp.float32),
+            (spec.n_delta_segments,) + sshape, jnp.float32),
         "delta_gids": jax.ShapeDtypeStruct(
             (spec.n_delta_segments, spec.delta_capacity), jnp.int64),
         "delta_valid": jax.ShapeDtypeStruct(
@@ -215,13 +233,20 @@ def make_pod_search_step(spec: PodIndexSpec, params: Optional[SearchParams] = No
         n_pilot = pilot_vecs.shape[0] - 1
         Np = full_vecs.shape[0]
         n = Np - 1
-        dp = pilot_vecs.shape[1]
+        dp = spec.d_primary     # true width (pilot rows may be packed)
         qp = queries[:, :dp]
-        # dequant scales only engage for int8 pilots (the rows are all-ones
-        # otherwise; skipping them statically keeps the fp32 HLO unchanged)
-        quantized = spec.pilot_dtype == "int8"
-        vsc = pilot_scale if quantized else None
-        esc = fes_scale if quantized else None
+        # side payloads only engage for the quantized encodings (the scale
+        # rows are all-ones otherwise; skipping them statically keeps the
+        # fp32 HLO unchanged).  For "pq" the *_scale slots carry the
+        # block-diagonal codebooks (core/quant.py; pod_array_specs).
+        if spec.pilot_dtype == "pq":
+            vsc = esc = None
+            vcb, ecb = pilot_scale, fes_scale
+        elif spec.pilot_dtype in ("int8", "int4"):
+            vsc, esc = pilot_scale, fes_scale
+            vcb = ecb = None
+        else:
+            vsc = esc = vcb = ecb = None
 
         nbr_fn = dist_fn = None
         if gather_mode == "shardwise":
@@ -239,7 +264,8 @@ def make_pod_search_step(spec: PodIndexSpec, params: Optional[SearchParams] = No
         # ---- stage 0: FES (replicated data; local) ----
         entry_local, _ = F.fes_select_ref(qp, fes_centroids, fes_entries,
                                           fes_entry_ids, fes_valid,
-                                          params.fes_L, entries_scale=esc)
+                                          params.fes_L, entries_scale=esc,
+                                          entries_codebook=ecb)
 
         # ---- stage ①: pilot traversal (replicated data; local) ----
         spec1 = T.TraversalSpec(
@@ -251,7 +277,7 @@ def make_pod_search_step(spec: PodIndexSpec, params: Optional[SearchParams] = No
                         if gather_mode == "shardwise" else None))
         st1 = T.greedy_search(spec1, qp, pilot_neighbors, pilot_vecs, n_pilot,
                               entry_local, iters=spec.pilot_iters,
-                              unroll=unroll, vec_scale=vsc)
+                              unroll=unroll, vec_scale=vsc, vec_codebook=vcb)
         # map pilot-compact ids to full-corpus ids
         cand_full = pilot_to_full[jnp.where(st1.cand_id < n_pilot,
                                             st1.cand_id, n_pilot)]

@@ -203,14 +203,20 @@ class PilotANNIndex:
                          f"got {pilot_id_dtype!r}")
 
     def _quantized_pilot_arrays(self, pilot_dtype: str) -> Dict[str, jax.Array]:
-        """Encode the stage-① vector tables (primary rows + FES buckets)."""
-        pdata, pscale = quant.quantize(self._pilot_primary, pilot_dtype)
-        fdata, fscale = quant.quantize(self.fes_index.entries, pilot_dtype)
+        """Encode the stage-① vector tables (primary rows + FES buckets).
+        ``int8``/``int4`` side data is the per-dim scale row; ``pq`` side
+        data is the block-diagonal codebook (core/quant.py)."""
+        pdata, pside = quant.quantize(self._pilot_primary, pilot_dtype)
+        fdata, fside = quant.quantize(self.fes_index.entries, pilot_dtype)
         out = {"primary": jnp.asarray(pdata),
                "fes_entries": jnp.asarray(fdata)}
-        if pscale is not None:
-            out["primary_scale"] = jnp.asarray(pscale)
-            out["fes_entries_scale"] = jnp.asarray(fscale)
+        if pside is not None:
+            if pilot_dtype == "pq":
+                out["primary_codebook"] = jnp.asarray(pside)
+                out["fes_entries_codebook"] = jnp.asarray(fside)
+            else:
+                out["primary_scale"] = jnp.asarray(pside)
+                out["fes_entries_scale"] = jnp.asarray(fside)
         return out
 
     def set_pilot_dtype(self, pilot_dtype: str) -> "PilotANNIndex":
@@ -237,8 +243,9 @@ class PilotANNIndex:
 
     def _apply_pilot_dtype(self, pilot_dtype: str) -> None:
         self.cfg = dataclasses.replace(self.cfg, pilot_dtype=pilot_dtype)
-        self.arrays.pop("primary_scale", None)
-        self.arrays.pop("fes_entries_scale", None)
+        for k in ("primary_scale", "fes_entries_scale",
+                  "primary_codebook", "fes_entries_codebook"):
+            self.arrays.pop(k, None)
         self.arrays.update(self._quantized_pilot_arrays(pilot_dtype))
 
     # ------------------------------------------------------------------
@@ -325,14 +332,16 @@ class PilotANNIndex:
         """Dtype-aware bytes by residence class (paper Table 3 accounting;
         field glossary in docs/api.md).  ``pilot_bytes`` is the stage-①
         accelerator-resident payload: compact subgraph ids + (possibly
-        quantized) primary vectors + FES entry buckets, including int8
-        scale rows."""
+        quantized) primary vectors + FES entry buckets, including the
+        int8/int4 scale rows and the PQ codebooks."""
         A = self.arrays
         nbytes = lambda k: (int(A[k].size * A[k].dtype.itemsize)
                             if k in A else 0)
         pilot_graph = nbytes("sub_neighbors")
-        pilot_vec = nbytes("primary") + nbytes("primary_scale")
-        pilot_fes = nbytes("fes_entries") + nbytes("fes_entries_scale")
+        pilot_vec = (nbytes("primary") + nbytes("primary_scale") +
+                     nbytes("primary_codebook"))
+        pilot_fes = (nbytes("fes_entries") + nbytes("fes_entries_scale") +
+                     nbytes("fes_entries_codebook"))
         pilot = pilot_graph + pilot_vec + pilot_fes
         full = (nbytes("full_neighbors") + nbytes("rot_vecs") +
                 nbytes("residual"))
@@ -392,8 +401,8 @@ class ResidencyPlanner:
     byte budget (DESIGN.md §4).
 
     The preference ladder sacrifices *encoding fidelity first* (fp32 → bf16
-    → int8 costs the least recall per byte saved — stage ② re-scores
-    exactly either way), then SVD-primary dims, then subgraph coverage:
+    → int8 → int4 → pq costs the least recall per byte saved — stage ②
+    re-scores exactly either way), then SVD-primary dims, then coverage:
     among feasible grid points the planner picks the lexicographic max of
     ``(sample_ratio, svd_ratio, dtype fidelity)``.  If nothing fits, the
     smallest plan is returned with ``fits == False``.
@@ -421,13 +430,13 @@ class ResidencyPlanner:
         dp = max(1, min(self.d, int(round(svd_ratio * self.d))))
         id_dt = PilotANNIndex._resolve_id_dtype(self.pilot_id_dtype, nk)
         idb = np.dtype(id_dt).itemsize
-        vb = quant.VEC_ITEMSIZE[pilot_dtype]
-        scale = dp * 4 if pilot_dtype == "int8" else 0
+        vb = quant.encoded_row_bytes(dp, pilot_dtype)
+        side = quant.side_bytes(dp, pilot_dtype)
         graph = (nk + 1) * self.R * idb
-        vec = (nk + 1) * dp * vb + scale
+        vec = (nk + 1) * vb + side
         ne = min(self.n_entry, nk)
         cap = fes.fes_capacity_cap(ne, self.fes_clusters)
-        fes_b = self.fes_clusters * cap * dp * vb + scale
+        fes_b = self.fes_clusters * cap * vb + side
         return {"graph": graph, "vec": vec, "fes": fes_b,
                 "total": graph + vec + fes_b}
 

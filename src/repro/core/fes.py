@@ -93,27 +93,38 @@ def mask_tombstoned(valid: jax.Array, entry_ids: jax.Array,
 def fes_select_ref(queries: jax.Array, centroids: jax.Array, entries: jax.Array,
                    entry_ids: jax.Array, valid: jax.Array, L: int,
                    entries_scale: jax.Array = None,
+                   entries_codebook: jax.Array = None,
                    tombstone: jax.Array = None
                    ) -> Tuple[jax.Array, jax.Array]:
     """Pure-jnp reference: route each query to its nearest centroid, score
     only that cluster's entries, return top-L (ids, sq-dists).
 
     queries (B, d); centroids (r, d); entries (r, C, d); -> (B, L) ids/dists.
-    ``entries`` may be stored bf16 or int8 (core/quant.py) — pass the
-    per-dim ``entries_scale`` for int8; centroids stay fp32 (they are tiny
+    ``entries`` may be stored bf16, int8, nibble-packed int4 or PQ codes
+    (core/quant.py) — pass the per-dim ``entries_scale`` for int8/int4 and
+    ``entries_codebook`` for pq; centroids stay fp32 (they are tiny
     and routing quality is budget-irrelevant).  ``tombstone``: optional
     deletion bitmap in the entry-id space — tombstoned entries are treated
     as padding (DESIGN.md §6).
     """
+    from repro.core import quant
+
     if tombstone is not None:
         valid = mask_tombstoned(valid, entry_ids, tombstone)
     q = queries.astype(jnp.float32)
     # route
     qc = _xdist(q, centroids)                         # (B, r)
     route = jnp.argmin(qc, axis=1)                    # (B,)
-    ev = entries[route].astype(jnp.float32)           # (B, C, d)   gather
-    if entries_scale is not None:
-        ev = ev * entries_scale.astype(jnp.float32)
+    rows = entries[route]                             # (B, C, ...)  gather
+    if entries_codebook is not None or (
+            entries_scale is not None
+            and entries.shape[-1] < entries_scale.shape[-1]):
+        ev = quant.decode_rows(rows, entries_scale,
+                               codebook=entries_codebook)
+    else:
+        ev = rows.astype(jnp.float32)
+        if entries_scale is not None:
+            ev = ev * entries_scale.astype(jnp.float32)
     iv = entry_ids[route]                             # (B, C)
     mv = valid[route]
     d = _rowdist(q, ev)                               # (B, C)

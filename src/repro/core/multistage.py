@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fes as F
+from repro.core import quant
 from repro.core import traversal as T
 
 # Per-stage stats: every value is a (B,) int32 array of per-query
@@ -240,12 +241,16 @@ def multistage_search(arrays: Dict[str, jax.Array], params: SearchParams,
     """
     n = arrays["rot_vecs"].shape[0] - 1
     nk = arrays["pilot_to_full"].shape[0] - 1      # compact pilot id space
-    dp = arrays["primary"].shape[1]
+    pilot_scale = arrays.get("primary_scale")
+    pilot_codebook = arrays.get("primary_codebook")
+    # true primary width: packed encodings (int4/pq) store fewer bytes per
+    # row than dims, so the scale row / codebook carries the real dp
+    dp = quant.primary_dim(arrays["primary"], pilot_scale,
+                           codebook=pilot_codebook)
     Bq = queries.shape[0]
     stats: StatsDict = {}
     q_primary = queries[:, :dp]
     ptf = arrays["pilot_to_full"]
-    pilot_scale = arrays.get("primary_scale")
     tomb = arrays.get("tombstone")
     ptomb = arrays.get("pilot_tombstone")
 
@@ -256,6 +261,7 @@ def multistage_search(arrays: Dict[str, jax.Array], params: SearchParams,
             q_primary, arrays["fes_centroids"], arrays["fes_entries"],
             arrays["fes_entry_ids"], arrays["fes_valid"], params.fes_L,
             entries_scale=arrays.get("fes_entries_scale"),
+            entries_codebook=arrays.get("fes_entries_codebook"),
             tombstone=ptomb)
         if not params.use_pilot:
             entry_full = ptf[entry_pilot]
@@ -287,7 +293,8 @@ def multistage_search(arrays: Dict[str, jax.Array], params: SearchParams,
                                 use_persistent=params.use_persistent_traversal)
         st1 = T.greedy_search(spec1, q_primary, arrays["sub_neighbors"],
                               arrays["primary"], nk, entry_pilot,
-                              vec_scale=pilot_scale, tombstone=ptomb)
+                              vec_scale=pilot_scale,
+                              vec_codebook=pilot_codebook, tombstone=ptomb)
         stats["pilot_dist"] = st1.n_dist
         stats["pilot_hops"] = st1.n_hops
         stats["pilot_expanded"] = st1.n_exp

@@ -50,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bloom as BL
+from repro.core import quant
 from repro.core import traversal as T
 from repro.core import fes as F
 from repro.core.multistage import SearchParams, pad_for_pallas, refine_stage
@@ -94,8 +95,10 @@ class _DonatedStages:
         self.params = params
         self.nk = arrays["pilot_to_full"].shape[0] - 1
         n = arrays["rot_vecs"].shape[0] - 1
-        dp = arrays["primary"].shape[1]
         pilot_scale = arrays.get("primary_scale")
+        pilot_codebook = arrays.get("primary_codebook")
+        dp = quant.primary_dim(arrays["primary"], pilot_scale,
+                               codebook=pilot_codebook)
         self._pool: Dict[int, List[jax.Array]] = {}
         self._pallas = (params.use_pallas_traversal or
                         params.use_persistent_traversal)
@@ -109,11 +112,14 @@ class _DonatedStages:
                 qp, arrays["fes_centroids"], arrays["fes_entries"],
                 arrays["fes_entry_ids"], arrays["fes_valid"], params.fes_L,
                 entries_scale=arrays.get("fes_entries_scale"),
+                entries_codebook=arrays.get("fes_entries_codebook"),
                 tombstone=pilot_tomb)
             st1 = T.greedy_search(_pilot_spec(params), qp,
                                   arrays["sub_neighbors"], arrays["primary"],
                                   self.nk, entry_ids, visited=cleared,
-                                  vec_scale=pilot_scale, tombstone=pilot_tomb)
+                                  vec_scale=pilot_scale,
+                                  vec_codebook=pilot_codebook,
+                                  tombstone=pilot_tomb)
             return st1.cand_id, st1.cand_d, st1.visited
 
         @partial(jax.jit, donate_argnums=(1, 2, 3))
@@ -205,7 +211,9 @@ class _ShardedStages:
         self._pool: Dict[int, List[jax.Array]] = {}
         mesh, axis, n = ctx.mesh, ctx.axis, ctx.n
         rows_per = ctx.rows_per
-        dp = arrays["primary"].shape[1]
+        dp = quant.primary_dim(arrays["primary"],
+                               arrays.get("primary_scale"),
+                               codebook=arrays.get("primary_codebook"))
         hot_repl = ctx.placement == "hot-replicated"
         keys = tuple(sorted(arrays.keys()))
         self._ops = tuple(arrays[k] for k in keys)
@@ -223,11 +231,13 @@ class _ShardedStages:
                 qp, a["fes_centroids"], a["fes_entries"],
                 a["fes_entry_ids"], a["fes_valid"], params.fes_L,
                 entries_scale=a.get("fes_entries_scale"),
+                entries_codebook=a.get("fes_entries_codebook"),
                 tombstone=pilot_tomb)
             st1 = T.greedy_search(_pilot_spec(params), qp,
                                   a["sub_neighbors"], a["primary"],
                                   self.nk, entry_ids, visited=cleared,
                                   vec_scale=a.get("primary_scale"),
+                                  vec_codebook=a.get("primary_codebook"),
                                   tombstone=pilot_tomb)
             return st1.cand_id, st1.cand_d, st1.visited
 
@@ -354,8 +364,10 @@ def split_stages(arrays: Dict[str, jax.Array], params: SearchParams,
 
     n = arrays["rot_vecs"].shape[0] - 1
     nk = arrays["pilot_to_full"].shape[0] - 1
-    dp = arrays["primary"].shape[1]
     pilot_scale = arrays.get("primary_scale")
+    pilot_codebook = arrays.get("primary_codebook")
+    dp = quant.primary_dim(arrays["primary"], pilot_scale,
+                           codebook=pilot_codebook)
 
     @jax.jit
     def pilot_stage(queries, pilot_tomb=None):
@@ -366,10 +378,12 @@ def split_stages(arrays: Dict[str, jax.Array], params: SearchParams,
             qp, arrays["fes_centroids"], arrays["fes_entries"],
             arrays["fes_entry_ids"], arrays["fes_valid"], params.fes_L,
             entries_scale=arrays.get("fes_entries_scale"),
+            entries_codebook=arrays.get("fes_entries_codebook"),
             tombstone=pilot_tomb)
         st1 = T.greedy_search(_pilot_spec(params), qp,
                               arrays["sub_neighbors"], arrays["primary"], nk,
                               entry_ids, vec_scale=pilot_scale,
+                              vec_codebook=pilot_codebook,
                               tombstone=pilot_tomb)
         return st1.cand_id[:B0], st1.cand_d[:B0], st1.visited[:B0]
 

@@ -157,7 +157,8 @@ def _delta_graph_topk(arrays: Dict[str, jax.Array], q: jax.Array,
     own pilot table (quantized) → exact re-score of the beam from the
     full-d rotated rows (mirrors the base's stage ①→② handover)."""
     cap = arrays["rot_vecs"].shape[0] - 1
-    dp = arrays["primary"].shape[1]
+    dp = quant.primary_dim(arrays["primary"], arrays.get("primary_scale"),
+                           codebook=arrays.get("primary_codebook"))
     Bq = q.shape[0]
     qp = q[:, :dp]
     if "fes_centroids" in arrays:
@@ -165,7 +166,8 @@ def _delta_graph_topk(arrays: Dict[str, jax.Array], q: jax.Array,
         entries, _ = fes.fes_select_ref(
             qp, arrays["fes_centroids"], arrays["fes_entries"],
             arrays["fes_entry_ids"], arrays["fes_valid"], L,
-            entries_scale=arrays.get("fes_entries_scale"))
+            entries_scale=arrays.get("fes_entries_scale"),
+            entries_codebook=arrays.get("fes_entries_codebook"))
     else:
         entries = jnp.broadcast_to(arrays["entry"][None, :], (Bq, 1))
     spec = T.TraversalSpec(ef=max(params.ef, k),
@@ -174,7 +176,8 @@ def _delta_graph_topk(arrays: Dict[str, jax.Array], q: jax.Array,
                            max_iters=params.max_iters,
                            frontier_width=params.frontier_width)
     st = T.greedy_search(spec, qp, arrays["neighbors"], arrays["primary"],
-                         cap, entries, vec_scale=arrays.get("primary_scale"))
+                         cap, entries, vec_scale=arrays.get("primary_scale"),
+                         vec_codebook=arrays.get("primary_codebook"))
     ok = (st.cand_id < cap) & arrays["valid"][jnp.clip(st.cand_id, 0, cap - 1)]
     d = jnp.where(ok, T.sq_dists(q, arrays["rot_vecs"][st.cand_id]), jnp.inf)
     neg, idx = jax.lax.top_k(-d, min(k, d.shape[1]))
@@ -242,15 +245,17 @@ class DeltaSegment:
         nbrs[dead_target] = cap
         table = np.concatenate([nbrs, np.full((1, R), cap, np.int32)], axis=0)
         rotz = np.concatenate([self.rot, np.zeros((1, self.d), np.float32)], 0)
-        pdata, pscale = quant.quantize(rotz[:, :dp], pilot_dtype)
+        pdata, pside = quant.quantize(rotz[:, :dp], pilot_dtype)
         arrays: Dict[str, jax.Array] = {
             "neighbors": jnp.asarray(table),
             "rot_vecs": jnp.asarray(rotz),
             "primary": jnp.asarray(pdata),
             "valid": jnp.asarray(live),
         }
-        if pscale is not None:
-            arrays["primary_scale"] = jnp.asarray(pscale)
+        side_key = ("primary_codebook" if pilot_dtype == "pq"
+                    else "primary_scale")
+        if pside is not None:
+            arrays[side_key] = jnp.asarray(pside)
         live_idx = np.flatnonzero(live)
         if len(live_idx):
             mu = self.rot[live_idx].mean(axis=0, keepdims=True)
@@ -261,13 +266,14 @@ class DeltaSegment:
             r = int(min(8, max(2, len(live_idx) // 128)))
             fidx = fes.build_fes(self.rot[:, :dp], live_idx, r=r,
                                  n_entry=min(len(live_idx), 512))
-            edata, escale = quant.quantize(fidx.entries, pilot_dtype)
+            edata, eside = quant.quantize(fidx.entries, pilot_dtype)
             arrays["fes_centroids"] = jnp.asarray(fidx.centroids)
             arrays["fes_entries"] = jnp.asarray(edata)
             arrays["fes_entry_ids"] = jnp.asarray(fidx.entry_ids)
             arrays["fes_valid"] = jnp.asarray(fidx.valid)
-            if escale is not None:
-                arrays["fes_entries_scale"] = jnp.asarray(escale)
+            if eside is not None:
+                arrays["fes_entries_codebook" if pilot_dtype == "pq"
+                       else "fes_entries_scale"] = jnp.asarray(eside)
         if self.device is not None:
             arrays = {k: jax.device_put(v, self.device)
                       for k, v in arrays.items()}
@@ -276,8 +282,9 @@ class DeltaSegment:
     def pilot_bytes(self) -> int:
         """Accelerator-resident stage-① bytes of this segment (adjacency +
         quantized pilot rows + FES buckets), memory_report() granularity."""
-        keys = ("neighbors", "primary", "primary_scale", "fes_entries",
-                "fes_entries_scale", "fes_centroids")
+        keys = ("neighbors", "primary", "primary_scale", "primary_codebook",
+                "fes_entries", "fes_entries_scale", "fes_entries_codebook",
+                "fes_centroids")
         return sum(int(a.size * a.dtype.itemsize)
                    for k, a in self.arrays.items() if k in keys)
 

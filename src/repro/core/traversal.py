@@ -124,17 +124,21 @@ def init_state(spec: TraversalSpec, queries: jax.Array, entry_ids: jax.Array,
                visited: Optional[jax.Array] = None,
                extra_id: Optional[jax.Array] = None,
                extra_d: Optional[jax.Array] = None,
-               vec_scale: Optional[jax.Array] = None) -> SearchState:
+               vec_scale: Optional[jax.Array] = None,
+               vec_codebook: Optional[jax.Array] = None) -> SearchState:
     """Build the initial beam from entry points (+ optionally pre-scored
     candidates handed over from an earlier stage).  ``vec_scale``: per-dim
-    dequantization scale for int8 vector tables (core/quant.py)."""
+    dequantization scale for int8/int4 vector tables; ``vec_codebook``:
+    PQ codebook (core/quant.py).  ``decode_rows`` is the identity for exact
+    tables, so the fp32/bf16 paths stay bit-exact."""
+    from repro.core import quant
+
     Bq, E = entry_ids.shape
     valid = entry_ids < n
     table = jnp.concatenate([vectors, jnp.zeros((1, vectors.shape[1]),
                                                 vectors.dtype)], axis=0)
-    evecs = table[entry_ids]                                  # (B, E, d)
-    if vec_scale is not None:
-        evecs = evecs.astype(jnp.float32) * vec_scale
+    evecs = quant.decode_rows(table[entry_ids], vec_scale,   # (B, E, d)
+                              codebook=vec_codebook)
     d = jnp.where(valid, sq_dists(queries, evecs), INF)
     n_dist = jnp.sum(valid, axis=1).astype(jnp.int32)
     if extra_id is not None:
@@ -175,7 +179,8 @@ def init_state(spec: TraversalSpec, queries: jax.Array, entry_ids: jax.Array,
 def expansion_round(spec: TraversalSpec, state: SearchState, queries: jax.Array,
                     neighbor_table: jax.Array, vector_table: jax.Array,
                     n: int, nbr_fn=None, dist_fn=None,
-                    vec_scale: Optional[jax.Array] = None) -> SearchState:
+                    vec_scale: Optional[jax.Array] = None,
+                    vec_codebook: Optional[jax.Array] = None) -> SearchState:
     """One synchronous W-wide neighbour-expansion round for the whole batch.
 
     The top ``W = spec.frontier_width`` unchecked beam entries are expanded
@@ -200,7 +205,8 @@ def expansion_round(spec: TraversalSpec, state: SearchState, queries: jax.Array,
 
     if spec.use_pallas and nbr_fn is None and dist_fn is None:
         return _pallas_round(spec, state, queries, neighbor_table,
-                             vector_table, n, vec_scale=vec_scale)
+                             vector_table, n, vec_scale=vec_scale,
+                             vec_codebook=vec_codebook)
 
     # top-W unchecked candidates per query: the beam is distance-sorted, so
     # the first W unchecked slots are the W best (rows with none stay idle)
@@ -229,9 +235,9 @@ def expansion_round(spec: TraversalSpec, state: SearchState, queries: jax.Array,
     fresh = fresh_w[0] if W == 1 else jnp.concatenate(fresh_w, axis=1)
 
     if dist_fn is None:
-        nvecs = vector_table[nbrs]                            # (B, W·R, d)
-        if vec_scale is not None:
-            nvecs = nvecs.astype(jnp.float32) * vec_scale
+        from repro.core import quant
+        nvecs = quant.decode_rows(vector_table[nbrs], vec_scale,
+                                  codebook=vec_codebook)       # (B, W·R, d)
         d = jnp.where(fresh, sq_dists(queries, nvecs), INF)
     else:
         d = jnp.where(fresh, dist_fn(queries, nbrs, fresh), INF)
@@ -263,7 +269,8 @@ def expansion_round(spec: TraversalSpec, state: SearchState, queries: jax.Array,
 
 def _pallas_round(spec: TraversalSpec, state: SearchState, queries: jax.Array,
                   neighbor_table: jax.Array, vector_table: jax.Array,
-                  n: int, vec_scale: Optional[jax.Array] = None) -> SearchState:
+                  n: int, vec_scale: Optional[jax.Array] = None,
+                  vec_codebook: Optional[jax.Array] = None) -> SearchState:
     """Fused expansion round: the whole W-wide hop body runs as one Pallas
     kernel (frontier selection + gather + visited filter + MXU distances +
     bitonic beam merge); only the counters are maintained here (cheap
@@ -279,7 +286,7 @@ def _pallas_round(spec: TraversalSpec, state: SearchState, queries: jax.Array,
         queries, neighbor_table, vector_table, state.cand_id, state.cand_d,
         state.checked, state.visited, n, width=spec.frontier_width,
         visited_mode=spec.visited_mode, interpret=spec.pallas_interpret,
-        vec_scale=vec_scale)
+        vec_scale=vec_scale, vec_codebook=vec_codebook)
     return SearchState(
         cand_id=new_id,
         cand_d=new_d,
@@ -301,14 +308,16 @@ def greedy_search(spec: TraversalSpec, queries: jax.Array,
                   extra_d: Optional[jax.Array] = None,
                   nbr_fn=None, dist_fn=None,
                   vec_scale: Optional[jax.Array] = None,
+                  vec_codebook: Optional[jax.Array] = None,
                   tombstone: Optional[jax.Array] = None) -> SearchState:
     """Greedy best-first search (Algorithm 1), batched, W-wide per round
     (spec.frontier_width).
 
     neighbor_table: (n+1, R) padded adjacency (row n = sentinel row).
     vector_table:   (n+1, d) vectors with zero row at n.  May be stored
-    bfloat16 or int8 (core/quant.py); for int8 pass the per-dim ``vec_scale``
-    so distances dequantize (the fused kernels dequantize in VMEM).
+    bfloat16, int8, nibble-packed int4 or PQ codes (core/quant.py); pass the
+    per-dim ``vec_scale`` for int8/int4 and ``vec_codebook`` for pq so
+    distances dequantize (the fused kernels dequantize / ADC-score in VMEM).
     tombstone: optional (n+1,) bool deletion bitmap (DESIGN.md §6) —
     tombstoned ids are sentinel-masked out of the adjacency, the entry set
     and the handed-over beam before the search starts, so they are never
@@ -333,7 +342,7 @@ def greedy_search(spec: TraversalSpec, queries: jax.Array,
             extra_d = jnp.where(dead, INF, extra_d)
     state = init_state(spec, queries, entry_ids, vector_table[:-1], n,
                        visited=visited, extra_id=extra_id, extra_d=extra_d,
-                       vec_scale=vec_scale)
+                       vec_scale=vec_scale, vec_codebook=vec_codebook)
 
     if spec.use_pallas and nbr_fn is None and dist_fn is None:
         # hoist the kernel's row-alignment padding out of the hop loop: with
@@ -356,7 +365,8 @@ def greedy_search(spec: TraversalSpec, queries: jax.Array,
                 state.cand_d, state.checked, state.visited, n,
                 rounds=rounds, width=spec.frontier_width,
                 visited_mode=spec.visited_mode,
-                interpret=spec.pallas_interpret, vec_scale=vec_scale)
+                interpret=spec.pallas_interpret, vec_scale=vec_scale,
+                vec_codebook=vec_codebook)
             return SearchState(cand_id=nid, cand_d=nd, checked=nck,
                                visited=nvis, n_dist=state.n_dist + d_dist,
                                n_hops=state.n_hops + d_hops,
@@ -365,7 +375,8 @@ def greedy_search(spec: TraversalSpec, queries: jax.Array,
     round_fn = partial(expansion_round, spec, queries=queries,
                        neighbor_table=neighbor_table,
                        vector_table=vector_table, n=n,
-                       nbr_fn=nbr_fn, dist_fn=dist_fn, vec_scale=vec_scale)
+                       nbr_fn=nbr_fn, dist_fn=dist_fn, vec_scale=vec_scale,
+                       vec_codebook=vec_codebook)
 
     if iters is not None and unroll:
         for _ in range(iters):

@@ -33,11 +33,15 @@ def fes_select(queries: jax.Array, centroids: jax.Array, entries: jax.Array,
                entry_ids: jax.Array, valid: jax.Array, *, L: int,
                qc: Optional[int] = None, interpret: bool = True,
                entries_scale: Optional[jax.Array] = None,
+               entries_codebook: Optional[jax.Array] = None,
                tombstone: Optional[jax.Array] = None
                ) -> Tuple[jax.Array, jax.Array]:
     """queries (B, d); centroids (r, d); entries (r, C, d) — stored fp32,
-    bf16 or int8 with per-dim ``entries_scale`` (core/quant.py; the kernel
-    dequantizes in VMEM).
+    bf16 or int8 with per-dim ``entries_scale``, nibble-packed int4
+    (``entries_scale`` wider than the stored rows), or PQ codes with
+    ``entries_codebook`` (d, m·ksub) (core/quant.py; the kernel
+    dequantizes / ADC-scores in VMEM).  Routing always runs on the fp32
+    centroids — only the entry payloads are compressed.
     Returns (ids (B, L), sq-dists (B, L)) — top-L entries of each query's
     routed cluster.  ``qc``: per-cluster query capacity (defaults to B —
     always-safe; production tune: ~4B/r).  ``tombstone``: optional deletion
@@ -72,15 +76,26 @@ def fes_select(queries: jax.Array, centroids: jax.Array, entries: jax.Array,
     q_grouped = qpad[q_at_slot].reshape(r, qc, d)
 
     # ---- dense tiled kernel (entries stay in their stored encoding;
-    # dequantization happens in-kernel) ----
-    dpad = -(-d // 128) * 128 if d > 128 else d
+    # dequantization / ADC happens in-kernel) ----
     cpad = -(-C // 128) * 128
-    qg = _pad_to(q_grouped, 2, dpad)
-    ev = _pad_to(_pad_to(entries, 2, dpad), 1, cpad)
-    scale = None
-    if entries_scale is not None:
-        scale = _pad_to(entries_scale.astype(jnp.float32), 0, dpad, value=1.0)
-    dist = fes_distances(qg, ev, scale=scale, interpret=interpret)
+    packed = (entries_codebook is not None or
+              (entries_scale is not None
+               and entries.shape[2] < entries_scale.shape[0]))
+    if packed:
+        # int4/pq rows keep their packed width; the fes kernel owns any
+        # query-side padding (padded entry rows are zero codes / zero
+        # nibbles, masked below by the validity bitmap anyway)
+        qg, ev, scale = q_grouped, _pad_to(entries, 1, cpad), entries_scale
+    else:
+        dpad = -(-d // 128) * 128 if d > 128 else d
+        qg = _pad_to(q_grouped, 2, dpad)
+        ev = _pad_to(_pad_to(entries, 2, dpad), 1, cpad)
+        scale = None
+        if entries_scale is not None:
+            scale = _pad_to(entries_scale.astype(jnp.float32), 0, dpad,
+                            value=1.0)
+    dist = fes_distances(qg, ev, scale=scale, codebook=entries_codebook,
+                         interpret=interpret)
 
     # ---- mask padding, top-L, scatter back ----
     vmask = _pad_to(valid, 1, cpad, value=False)            # (r, cpad)

@@ -9,10 +9,41 @@ BIG = jnp.float32(3.0e38)
 
 
 def fes_distances_ref(q_grouped: jax.Array, entries: jax.Array,
-                      scale: jax.Array = None) -> jax.Array:
+                      scale: jax.Array = None,
+                      codebook: jax.Array = None) -> jax.Array:
     """(r, QC, d) x (r, C, d) -> (r, QC, C) squared euclidean, fp32.
-    ``scale`` (d,): per-dim dequantization for int8 entry tables."""
+    ``scale`` (d,): per-dim dequantization for int8 entry tables; with
+    ``scale`` wider than the entry rows the entries are nibble-packed int4;
+    ``codebook`` (d, m·ksub) marks PQ code entries scored by ADC LUT
+    (identical formulation to the Pallas kernel: per-group LUT matmul then
+    a multi-hot code matmul, so kernel/oracle parity is bit-exact)."""
+    from repro.core import quant
+
     q = q_grouped.astype(jnp.float32)
+    if codebook is not None:                       # pq: ADC via LUT matmul
+        cb = codebook.astype(jnp.float32)
+        cn = jnp.sum(cb * cb, axis=0)              # (m·ksub,)
+        dot = jax.lax.dot_general(q, cb, (((2,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        lut = cn[None, None, :] - 2.0 * dot        # (r, QC, m·ksub)
+        codes = entries.astype(jnp.int32)          # (r, C, m)
+        m = codes.shape[-1]
+        ksub = cb.shape[1] // m
+        flat = codes + ksub * jnp.arange(m, dtype=jnp.int32)
+        mk_iota = jnp.arange(cb.shape[1], dtype=jnp.int32)
+        hot = jnp.any(flat[..., None] == mk_iota, axis=-2)  # (r, C, m·ksub)
+        qn = jnp.sum(q * q, axis=-1)[..., :, None]
+        adc = jax.lax.dot_general(
+            lut, hot.astype(jnp.float32),
+            (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)    # (r, QC, C)
+        return qn + adc
+    if scale is not None and entries.shape[-1] < scale.shape[0]:   # int4
+        hp = entries.shape[-1]
+        entries = quant.int4_unpack(entries)
+        scale = jnp.pad(scale.astype(jnp.float32),
+                        (0, 2 * hp - scale.shape[0]), constant_values=1.0)
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, 2 * hp - q.shape[-1])))
     e = entries.astype(jnp.float32)
     if scale is not None:
         e = e * scale.astype(jnp.float32)
@@ -22,17 +53,53 @@ def fes_distances_ref(q_grouped: jax.Array, entries: jax.Array,
     return qn + en - 2.0 * dot
 
 
+def _pilot_oracle_operands(q, vec_table, vec_scale, vec_codebook):
+    """Mirror of traversal_kernel._encoding_operands for the jnp oracles:
+    returns ``(q, vec_table, vec_scale, lut)`` with q/scale padded to the
+    same widths the kernel pads to (so the fp32 reduction trees match and
+    kernel/oracle parity stays bit-exact).  ``lut`` is the per-query PQ ADC
+    table (None for the dense/int4 encodings)."""
+    from repro.core import quant
+
+    qf = q.astype(jnp.float32)
+    if vec_codebook is not None:                   # pq
+        dp8 = -(-qf.shape[1] // 8) * 8
+        if dp8 != qf.shape[1]:
+            qf = jnp.pad(qf, ((0, 0), (0, dp8 - qf.shape[1])))
+        cb = vec_codebook.astype(jnp.float32)
+        if cb.shape[0] != dp8:
+            cb = jnp.pad(cb, ((0, dp8 - cb.shape[0]), (0, 0)))
+        cn = jnp.sum(cb * cb, axis=0)
+        lut = cn[None, :] - 2.0 * jax.lax.dot_general(
+            qf, cb, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return qf, vec_table, None, lut
+    if vec_scale is not None and vec_table.shape[1] < vec_scale.shape[0]:
+        hp = vec_table.shape[1]                    # int4: unpack to 2·hp
+        qf = jnp.pad(qf, ((0, 0), (0, 2 * hp - qf.shape[1])))
+        vec_table = quant.int4_unpack(vec_table)
+        vec_scale = jnp.pad(vec_scale.astype(jnp.float32),
+                            (0, 2 * hp - vec_scale.shape[0]),
+                            constant_values=1.0)
+    return qf, vec_table, vec_scale, None
+
+
 def traversal_hop_ref(q, nbr_table, vec_table, beam_id, beam_d, beam_ck,
                       visited, n: int, *, width: int = 1,
-                      visited_mode: str = "bloom", vec_scale=None):
+                      visited_mode: str = "bloom", vec_scale=None,
+                      vec_codebook=None):
     """Oracle for fused_traversal_hop: one full W-wide expansion round in
     pure jnp (top-W frontier select, gather, sequential-per-frontier visited
     filter, distances, stable beam merge).  ``vec_scale`` (d,): per-dim
     dequantization for int8 vector tables (bf16 needs none — the fp32 cast
-    below widens it exactly).
+    below widens it exactly); int4 tables are detected by their packed width
+    and unpacked here; ``vec_codebook`` marks a PQ code table scored by ADC
+    LUT lookups in the kernel's exact accumulation order.
     Returns (new_id, new_d, new_ck, new_visited, fresh) with fresh (B, W·R)."""
     from repro.core import bloom as B
 
+    q, vec_table, vec_scale, lut = _pilot_oracle_operands(
+        q, vec_table, vec_scale, vec_codebook)
     Bq, ef = beam_id.shape
     unchecked = ~beam_ck & (beam_id < n)
     cum = jnp.cumsum(unchecked.astype(jnp.int32), axis=1)
@@ -56,14 +123,24 @@ def traversal_hop_ref(q, nbr_table, vec_table, beam_id, beam_d, beam_ck,
     nbrs = jnp.concatenate(nbrs_w, axis=1)                # (B, W·R)
     fresh = jnp.concatenate(fresh_w, axis=1)
 
-    nv = vec_table[nbrs].astype(jnp.float32)              # (B, W·R, d)
-    if vec_scale is not None:
-        nv = nv * vec_scale.astype(jnp.float32)
     qf = q.astype(jnp.float32)
     qn = jnp.sum(qf * qf, axis=-1)[:, None]
-    vn = jnp.sum(nv * nv, axis=-1)
-    dot = jnp.einsum("bd,brd->br", qf, nv)
-    d = jnp.maximum(qn + vn - 2.0 * dot, 0.0)
+    if lut is not None:                                   # pq: ADC lookups
+        codes = vec_table[nbrs].astype(jnp.int32)         # (B, W·R, m)
+        m = codes.shape[-1]
+        ksub = lut.shape[1] // m
+        acc = jnp.broadcast_to(qn, fresh.shape)
+        for sub in range(m):                              # kernel's fixed
+            idx = ksub * sub + codes[..., sub]            # subspace order
+            acc = acc + jnp.take_along_axis(lut, idx, axis=1)
+        d = jnp.maximum(acc, 0.0)
+    else:
+        nv = vec_table[nbrs].astype(jnp.float32)          # (B, W·R, d)
+        if vec_scale is not None:
+            nv = nv * vec_scale.astype(jnp.float32)
+        vn = jnp.sum(nv * nv, axis=-1)
+        dot = jnp.einsum("bd,brd->br", qf, nv)
+        d = jnp.maximum(qn + vn - 2.0 * dot, 0.0)
     d = jnp.where(fresh, d, jnp.inf)
 
     all_id = jnp.concatenate([beam_id, jnp.where(fresh, nbrs, n)], axis=1)
@@ -78,7 +155,8 @@ def traversal_hop_ref(q, nbr_table, vec_table, beam_id, beam_d, beam_ck,
 
 def pilot_search_ref(q, nbr_table, vec_table, beam_id, beam_d, beam_ck,
                      visited, n: int, *, rounds: int, width: int = 1,
-                     visited_mode: str = "bloom", vec_scale=None):
+                     visited_mode: str = "bloom", vec_scale=None,
+                     vec_codebook=None):
     """Oracle for fused_pilot_search: run up to ``rounds`` W-wide expansion
     rounds (stopping at convergence) by iterating traversal_hop_ref.
     Returns (beam_id, beam_d, beam_ck, visited, n_dist, n_hops, n_exp) with
@@ -94,7 +172,8 @@ def pilot_search_ref(q, nbr_table, vec_table, beam_id, beam_d, beam_ck,
         n_sel = jnp.sum((unchecked & (cum <= width)).astype(jnp.int32), axis=1)
         beam_id, beam_d, beam_ck, visited, fresh = traversal_hop_ref(
             q, nbr_table, vec_table, beam_id, beam_d, beam_ck, visited, n,
-            width=width, visited_mode=visited_mode, vec_scale=vec_scale)
+            width=width, visited_mode=visited_mode, vec_scale=vec_scale,
+            vec_codebook=vec_codebook)
         nd = nd + jnp.sum(fresh.astype(jnp.int32), axis=1)
         nh = nh + has_work.astype(jnp.int32)
         ne = ne + n_sel

@@ -41,10 +41,18 @@ table rows to the sublane multiple (sentinel rows, id = n), and the visited
 lanes to 128, then slice everything back.
 
 Quantized pilot payloads (DESIGN.md §4): the vector table may be stored
-bfloat16 or int8 (``core/quant.py``).  Both kernels take a per-dimension
-fp32 scale operand and dequantize the table *in VMEM* once per invocation
-(``vec = vec.astype(f32) * scale``); the operand is all-ones for exact
-tables, which is bit-exact, so one kernel serves every encoding.  Neighbour
+bfloat16, int8, nibble-packed int4 or PQ codes (``core/quant.py``).  The
+*dense* encodings share one path: a per-dimension fp32 scale operand
+dequantizes the table in VMEM once per invocation
+(``vec = vec.astype(f32) * scale``; all-ones for exact tables, which is
+bit-exact).  ``int4`` adds an in-VMEM nibble unpack before the same
+multiply (two dims per int8 lane, plane-packed so the unpack is a lane
+concatenation).  ``pq`` replaces the MXU dot-product distances entirely:
+the kernel builds a per-query ADC lookup table
+(``lut = ‖c‖² − 2·q @ codebook``) once per invocation, one-hot-gathers each
+neighbour's *code row* (m bytes instead of d floats) and accumulates
+``qn + Σ_s lut[s·ksub + code_s]`` with one-hot LUT gathers.  The static
+``vec_encoding`` parameter selects the path at trace time.  Neighbour
 tables may be int16 (compact pilot id space) — the one-hot gather converts
 ids to fp32 either way.
 """
@@ -111,10 +119,15 @@ def _bloom_hashes(ids: jax.Array, n_bits: int):
 
 def _round_body(q, qn, nbr_f, vec, row_iota, bit_iota, bid, bd, bck, vis, *,
                 n: int, R: int, W: int, ef: int, Wsort: int, hash_bits: int,
-                visited_mode: str):
+                visited_mode: str, lut=None, ksub: int = 16):
     """One W-wide expansion round on VMEM-resident values.  Shared by the
     per-hop kernel and the persistent kernel's loop body (which is what
     guarantees their bit-exact parity).
+
+    ``vec`` is the dequantized fp32 vector table for the dense encodings;
+    with ``lut`` set (PQ payloads, DESIGN.md §4) it is the fp32 *code* table
+    (bt-invariant, values 0..ksub-1) and distances come from per-query LUT
+    gathers instead of MXU dot-products.
 
     Distances stay in the BIG domain.  Returns
     ``(new_id, new_d, new_ck, vis, fresh, n_sel, has_work)`` where fresh is
@@ -169,15 +182,30 @@ def _round_body(q, qn, nbr_f, vec, row_iota, bit_iota, bid, bd, bck, vis, *,
     nbrs = jnp.concatenate(nbrs_cols, axis=1)             # (bt, W·R)
     fresh = jnp.concatenate(fresh_cols, axis=1)
 
-    # ---- distances via the MXU identity, one gather-matmul per slot ----
+    # ---- distances, one gather-matmul per slot: the MXU norms identity
+    # for dense tables; for PQ payloads the gather fetches the m-byte code
+    # row and the distance is qn + Σ_s lut[s·ksub + code_s] — one-hot LUT
+    # gathers over the per-query ADC table, no d-wide dot-product ----
     d_cols = []
+    if lut is not None:
+        lut_iota = jax.lax.broadcasted_iota(jnp.int32, lut.shape, 1)
+        m = vec.shape[1]
     for s in range(W * R):
         onehot_r = (row_iota == nbrs[:, s][:, None]).astype(jnp.float32)
         nv = jax.lax.dot_general(onehot_r, vec, (((1,), (0,)), ((), ())),
                                  preferred_element_type=jnp.float32)
-        vn = jnp.sum(nv * nv, axis=1)
-        dot = jnp.sum(nv * q, axis=1)
-        d_cols.append(jnp.maximum(qn + vn - 2.0 * dot, 0.0))
+        if lut is None:
+            vn = jnp.sum(nv * nv, axis=1)
+            dot = jnp.sum(nv * q, axis=1)
+            d_cols.append(jnp.maximum(qn + vn - 2.0 * dot, 0.0))
+        else:
+            crow = (nv + 0.5).astype(jnp.int32)           # codes fp32-exact
+            acc = qn
+            for sub in range(m):                          # fixed subspace
+                idx = ksub * sub + crow[:, sub]           # accumulation order
+                oh = lut_iota == idx[:, None]
+                acc = acc + jnp.sum(jnp.where(oh, lut, 0.0), axis=1)
+            d_cols.append(jnp.maximum(acc, 0.0))
     d = jnp.where(fresh, jnp.stack(d_cols, axis=1), BIG)  # (bt, W·R)
 
     # ---- stable bitonic merge into the sorted beam ----
@@ -196,10 +224,41 @@ def _round_body(q, qn, nbr_f, vec, row_iota, bit_iota, bid, bd, bck, vis, *,
             n_sel, has_work)
 
 
-def _hop_kernel(q_ref, nbr_ref, vec_ref, scl_ref, bid_ref, bd_ref, bck_ref,
-                vis_ref, oid_ref, od_ref, ock_ref, ovis_ref, ofresh_ref, *,
+def _decode_operands(q, vec_ref, scl_ref, cb_ref, encoding: str):
+    """Hoisted in-VMEM decode, once per kernel invocation (DESIGN.md §4):
+
+    * ``dense`` — int8/bf16/fp32 tables widen to fp32 and multiply the
+      per-dim scale row (all-ones for exact tables: bit-exact).
+    * ``int4``  — unpack the plane-packed nibbles (low plane = dims
+      0..hp-1, high plane = dims hp..2hp-1: a lane concatenation, no
+      shuffle) then the same scale multiply.
+    * ``pq``    — no table decode at all: build the per-query ADC LUT
+      ``lut = ‖c‖² − 2·q @ codebook`` from the block-diagonal codebook and
+      return the raw fp32 code table for one-hot code-row gathers.
+
+    Returns ``(vec, lut)`` with ``lut`` None except for ``pq``."""
+    if encoding == "pq":
+        cb = cb_ref[...].astype(jnp.float32)              # (dp8, m·ksub)
+        cn = jnp.sum(cb * cb, axis=0)
+        dot = jax.lax.dot_general(q, cb, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        return vec_ref[...].astype(jnp.float32), cn[None, :] - 2.0 * dot
+    if encoding == "int4":
+        v = vec_ref[...].astype(jnp.int32)
+        lo = v & 0xF
+        lo = jnp.where(lo >= 8, lo - 16, lo)
+        hi = (v >> 4) & 0xF
+        hi = jnp.where(hi >= 8, hi - 16, hi)
+        unpacked = jnp.concatenate([lo, hi], axis=1).astype(jnp.float32)
+        return unpacked * scl_ref[0, :], None
+    return vec_ref[...].astype(jnp.float32) * scl_ref[0, :], None
+
+
+def _hop_kernel(q_ref, nbr_ref, vec_ref, scl_ref, cb_ref, bid_ref, bd_ref,
+                bck_ref, vis_ref, oid_ref, od_ref, ock_ref, ovis_ref,
+                ofresh_ref, *,
                 n: int, R: int, W: int, ef: int, Wsort: int, hash_bits: int,
-                visited_mode: str):
+                visited_mode: str, encoding: str = "dense"):
     q = q_ref[...].astype(jnp.float32)                    # (bt, dp)
     bt = bid_ref.shape[0]
     Npad = nbr_ref.shape[0]
@@ -207,16 +266,13 @@ def _hop_kernel(q_ref, nbr_ref, vec_ref, scl_ref, bid_ref, bd_ref, bck_ref,
     qn = jnp.sum(q * q, axis=1)
     row_iota = jax.lax.broadcasted_iota(jnp.int32, (bt, Npad), 1)
     bit_iota = jax.lax.broadcasted_iota(jnp.int32, (bt, vpad), 1)
-    # in-VMEM dequantization (DESIGN.md §4): int8/bf16 tables widen to fp32
-    # once per kernel invocation; the scale row is all-ones for exact tables
-    # (multiplying by 1.0f is bit-exact, so the fp32 parity contract holds).
-    vec = vec_ref[...].astype(jnp.float32) * scl_ref[0, :]
+    vec, lut = _decode_operands(q, vec_ref, scl_ref, cb_ref, encoding)
     nid, nd, nck, vis, fresh, _, _ = _round_body(
         q, qn, nbr_ref[...].astype(jnp.float32),
         vec, row_iota, bit_iota,
         bid_ref[...], bd_ref[...], bck_ref[...], vis_ref[...],
         n=n, R=R, W=W, ef=ef, Wsort=Wsort, hash_bits=hash_bits,
-        visited_mode=visited_mode)
+        visited_mode=visited_mode, lut=lut)
     oid_ref[...] = nid
     od_ref[...] = nd
     ock_ref[...] = nck
@@ -224,11 +280,12 @@ def _hop_kernel(q_ref, nbr_ref, vec_ref, scl_ref, bid_ref, bd_ref, bck_ref,
     ofresh_ref[...] = fresh
 
 
-def _persistent_kernel(q_ref, nbr_ref, vec_ref, scl_ref, bid_ref, bd_ref,
-                       bck_ref, vis_ref, oid_ref, od_ref, ock_ref, ovis_ref,
-                       ocnt_ref,
+def _persistent_kernel(q_ref, nbr_ref, vec_ref, scl_ref, cb_ref, bid_ref,
+                       bd_ref, bck_ref, vis_ref, oid_ref, od_ref, ock_ref,
+                       ovis_ref, ocnt_ref,
                        *, n: int, R: int, W: int, ef: int, Wsort: int,
-                       hash_bits: int, visited_mode: str, rounds: int):
+                       hash_bits: int, visited_mode: str, rounds: int,
+                       encoding: str = "dense"):
     """Whole stage-① search in one kernel: hop loop, state and convergence
     check all live in VMEM.  The loop exits as soon as the tile has no
     unchecked candidate (or the round budget runs out); a converged round is
@@ -241,7 +298,7 @@ def _persistent_kernel(q_ref, nbr_ref, vec_ref, scl_ref, bid_ref, bd_ref,
     row_iota = jax.lax.broadcasted_iota(jnp.int32, (bt, Npad), 1)
     bit_iota = jax.lax.broadcasted_iota(jnp.int32, (bt, vpad), 1)
     nbr_f = nbr_ref[...].astype(jnp.float32)              # hoisted operands
-    vec = vec_ref[...].astype(jnp.float32) * scl_ref[0, :]  # in-VMEM dequant
+    vec, lut = _decode_operands(q, vec_ref, scl_ref, cb_ref, encoding)
 
     def cond(carry):
         i, bid, _bd, bck, _vis, _nd, _nh, _ne = carry
@@ -252,7 +309,7 @@ def _persistent_kernel(q_ref, nbr_ref, vec_ref, scl_ref, bid_ref, bd_ref,
         nid, nbd, nck, nvis, fresh, n_sel, has_work = _round_body(
             q, qn, nbr_f, vec, row_iota, bit_iota, bid, bd, bck, vis,
             n=n, R=R, W=W, ef=ef, Wsort=Wsort, hash_bits=hash_bits,
-            visited_mode=visited_mode)
+            visited_mode=visited_mode, lut=lut)
         return (i + 1, nid, nbd, nck, nvis,
                 nd + jnp.sum(fresh.astype(jnp.int32), axis=1),
                 nh + has_work.astype(jnp.int32), ne + n_sel)
@@ -339,6 +396,38 @@ def _scale_operand(vec_scale, dp: int) -> jax.Array:
     return jnp.broadcast_to(s[None, :], (8, dp))
 
 
+def _encoding_operands(q, vec_table, vec_scale, vec_codebook):
+    """Classify the stored table and build the kernel operand set
+    ``(q, scale, codebook, encoding)`` — generalizing the ``_scale_operand``
+    contract to the packed encodings (core/quant.py, DESIGN.md §4):
+
+    * dense (fp32/bf16/int8): q untouched, scale row (all-ones when exact),
+      dummy codebook block.
+    * int4: the stored rows are ceil(d/2) packed bytes — q and the scale
+      row pad to the unpacked width 2·hp (zero query cols / unit scales;
+      the packed pad nibbles decode to exact 0, so padding is inert).
+    * pq: the stored rows are m code bytes — the codebook rows (true dims)
+      pad to the sublane multiple along with q; scale is unit (unused).
+    """
+    if vec_codebook is not None:
+        dp8 = -(-q.shape[1] // 8) * 8
+        if dp8 != q.shape[1]:
+            q = jnp.pad(q, ((0, 0), (0, dp8 - q.shape[1])))
+        cb = vec_codebook.astype(jnp.float32)
+        if cb.shape[0] != dp8:
+            cb = jnp.pad(cb, ((0, dp8 - cb.shape[0]), (0, 0)))
+        return q, jnp.ones((8, dp8), jnp.float32), cb, "pq"
+    dummy_cb = jnp.zeros((8, 128), jnp.float32)
+    if vec_scale is not None and vec_table.shape[1] < vec_scale.shape[0]:
+        hp = vec_table.shape[1]
+        d2 = 2 * hp
+        q = jnp.pad(q, ((0, 0), (0, d2 - q.shape[1])))
+        s = jnp.pad(vec_scale.astype(jnp.float32),
+                    (0, d2 - vec_scale.shape[0]), constant_values=1.0)
+        return q, _scale_operand(s, d2), dummy_cb, "int4"
+    return q, _scale_operand(vec_scale, q.shape[1]), dummy_cb, "dense"
+
+
 def fused_traversal_hop(q: jax.Array, nbr_table: jax.Array,
                         vec_table: jax.Array, beam_id: jax.Array,
                         beam_d: jax.Array, beam_ck: jax.Array,
@@ -346,6 +435,7 @@ def fused_traversal_hop(q: jax.Array, nbr_table: jax.Array,
                         visited_mode: str = "bloom", b_tile: int = 128,
                         interpret: bool = False,
                         vec_scale: jax.Array = None,
+                        vec_codebook: jax.Array = None,
                         tombstone: jax.Array = None
                         ) -> Tuple[jax.Array, jax.Array, jax.Array,
                                    jax.Array, jax.Array]:
@@ -353,7 +443,9 @@ def fused_traversal_hop(q: jax.Array, nbr_table: jax.Array,
 
     q (B, dp); nbr_table (n+1, R) integer table with sentinel row n;
     vec_table (n+1, dp) with zero row at n — stored fp32, bf16 or int8
-    (pass ``vec_scale`` (dp,) for int8; DESIGN.md §4); beam_* (B, ef) sorted
+    (pass ``vec_scale`` (dp,) for int8), nibble-packed int4 (``vec_scale``
+    (dp,) with dp > table width), or PQ codes (pass ``vec_codebook``
+    (dp, m·ksub); DESIGN.md §4); beam_* (B, ef) sorted
     beam (+inf sentinel distances); visited (B, n_bits) bloom filter or
     (B, n+1) exact bitmap; tombstone: optional (n+1,) deletion bitmap,
     sentinel-masked into the operands before the kernel (DESIGN.md §6;
@@ -376,12 +468,14 @@ def fused_traversal_hop(q: jax.Array, nbr_table: jax.Array,
      vbits) = _pad_state(q, nbr_table, vec_table, beam_id, beam_d, beam_ck,
                          visited, n, b_tile)
     Npad = nbr_t.shape[0]
-    scl = _scale_operand(vec_scale, dp)
+    q, scl, cb, encoding = _encoding_operands(q, vec_t, vec_scale,
+                                              vec_codebook)
+    dq, wv = q.shape[1], vec_t.shape[1]
 
     kern = functools.partial(
         _hop_kernel, n=n, R=R, W=width, ef=ef,
         Wsort=_next_pow2(ef + width * R), hash_bits=vbits,
-        visited_mode=visited_mode)
+        visited_mode=visited_mode, encoding=encoding)
     out_shapes = (
         jax.ShapeDtypeStruct((Bpad, ef), jnp.int32),
         jax.ShapeDtypeStruct((Bpad, ef), jnp.float32),
@@ -393,10 +487,11 @@ def fused_traversal_hop(q: jax.Array, nbr_table: jax.Array,
         kern,
         grid=(Bpad // bt,),
         in_specs=[
-            pl.BlockSpec((bt, dp), lambda i: (i, 0)),
+            pl.BlockSpec((bt, dq), lambda i: (i, 0)),
             pl.BlockSpec((Npad, R), lambda i: (0, 0)),
-            pl.BlockSpec((Npad, dp), lambda i: (0, 0)),
-            pl.BlockSpec((8, dp), lambda i: (0, 0)),
+            pl.BlockSpec((Npad, wv), lambda i: (0, 0)),
+            pl.BlockSpec(scl.shape, lambda i: (0, 0)),
+            pl.BlockSpec(cb.shape, lambda i: (0, 0)),
             pl.BlockSpec((bt, ef), lambda i: (i, 0)),
             pl.BlockSpec((bt, ef), lambda i: (i, 0)),
             pl.BlockSpec((bt, ef), lambda i: (i, 0)),
@@ -411,7 +506,7 @@ def fused_traversal_hop(q: jax.Array, nbr_table: jax.Array,
         ),
         out_shape=out_shapes,
         interpret=interpret,
-    )(q, nbr_t, vec_t, scl, beam_id, bd, beam_ck, vis)
+    )(q, nbr_t, vec_t, scl, cb, beam_id, bd, beam_ck, vis)
 
     od = jnp.where(od >= BIG, jnp.inf, od)
     return (oid[:Bq], od[:Bq], ock[:Bq], ovis[:Bq, :vbits], ofresh[:Bq])
@@ -424,6 +519,7 @@ def fused_pilot_search(q: jax.Array, nbr_table: jax.Array,
                        width: int = 1, visited_mode: str = "bloom",
                        b_tile: int = 128, interpret: bool = False,
                        vec_scale: jax.Array = None,
+                       vec_codebook: jax.Array = None,
                        tombstone: jax.Array = None
                        ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
                                   jax.Array, jax.Array, jax.Array]:
@@ -431,9 +527,9 @@ def fused_pilot_search(q: jax.Array, nbr_table: jax.Array,
     rounds — with in-kernel convergence exit — inside one ``pallas_call``.
 
     Inputs as ``fused_traversal_hop`` (the initial beam/visited state comes
-    from ``core.traversal.init_state``; quantized tables pass ``vec_scale``;
-    ``tombstone`` deletion bitmaps are sentinel-masked into the operands,
-    DESIGN.md §6).
+    from ``core.traversal.init_state``; quantized tables pass ``vec_scale``
+    and/or ``vec_codebook``; ``tombstone`` deletion bitmaps are
+    sentinel-masked into the operands, DESIGN.md §6).
     Returns ``(beam_id, beam_d, beam_ck, visited, n_dist, n_hops, n_exp)``
     where the three counters are (B,) int32 *deltas* accumulated over the
     executed rounds (the caller adds them to the init-state counters).
@@ -451,12 +547,14 @@ def fused_pilot_search(q: jax.Array, nbr_table: jax.Array,
      vbits) = _pad_state(q, nbr_table, vec_table, beam_id, beam_d, beam_ck,
                          visited, n, b_tile)
     Npad = nbr_t.shape[0]
-    scl = _scale_operand(vec_scale, dp)
+    q, scl, cb, encoding = _encoding_operands(q, vec_t, vec_scale,
+                                              vec_codebook)
+    dq, wv = q.shape[1], vec_t.shape[1]
 
     kern = functools.partial(
         _persistent_kernel, n=n, R=R, W=width, ef=ef,
         Wsort=_next_pow2(ef + width * R), hash_bits=vbits,
-        visited_mode=visited_mode, rounds=rounds)
+        visited_mode=visited_mode, rounds=rounds, encoding=encoding)
     out_shapes = (
         jax.ShapeDtypeStruct((Bpad, ef), jnp.int32),
         jax.ShapeDtypeStruct((Bpad, ef), jnp.float32),
@@ -468,10 +566,11 @@ def fused_pilot_search(q: jax.Array, nbr_table: jax.Array,
         kern,
         grid=(Bpad // bt,),
         in_specs=[
-            pl.BlockSpec((bt, dp), lambda i: (i, 0)),
+            pl.BlockSpec((bt, dq), lambda i: (i, 0)),
             pl.BlockSpec((Npad, R), lambda i: (0, 0)),
-            pl.BlockSpec((Npad, dp), lambda i: (0, 0)),
-            pl.BlockSpec((8, dp), lambda i: (0, 0)),
+            pl.BlockSpec((Npad, wv), lambda i: (0, 0)),
+            pl.BlockSpec(scl.shape, lambda i: (0, 0)),
+            pl.BlockSpec(cb.shape, lambda i: (0, 0)),
             pl.BlockSpec((bt, ef), lambda i: (i, 0)),
             pl.BlockSpec((bt, ef), lambda i: (i, 0)),
             pl.BlockSpec((bt, ef), lambda i: (i, 0)),
@@ -486,7 +585,7 @@ def fused_pilot_search(q: jax.Array, nbr_table: jax.Array,
         ),
         out_shape=out_shapes,
         interpret=interpret,
-    )(q, nbr_t, vec_t, scl, beam_id, bd, beam_ck, vis)
+    )(q, nbr_t, vec_t, scl, cb, beam_id, bd, beam_ck, vis)
 
     od = jnp.where(od >= BIG, jnp.inf, od)
     return (oid[:Bq], od[:Bq], ock[:Bq], ovis[:Bq, :vbits],

@@ -72,11 +72,14 @@ def parity(cfg, tag, shards=(1, 2, 4, 8), placements=("hot-replicated",)):
 cfg = IndexConfig(R=16, sample_ratio=0.35, n_entry=128, build_method="exact")
 parity(cfg, "base", placements=("hot-replicated", "replicated"))
 
-# int8 pilot payloads: stage ① runs on quantized tables, stage ② rescores
-# through the dist_full_fn hook — both must survive sharding bit-for-bit
-cfg8 = IndexConfig(R=16, sample_ratio=0.35, n_entry=128,
-                   build_method="exact", pilot_dtype="int8")
-parity(cfg8, "int8", shards=(2, 4))
+# quantized pilot payloads: stage ① runs on int8/int4/pq tables (scale rows
+# or PQ codebooks riding the side-payload slots of the pod specs), stage ②
+# rescores through the dist_full_fn hook — all must survive sharding
+# bit-for-bit vs the single-device index with the SAME encoding
+for dt in ("int8", "int4", "pq"):
+    cfg_dt = IndexConfig(R=16, sample_ratio=0.35, n_entry=128,
+                         build_method="exact", pilot_dtype=dt)
+    parity(cfg_dt, dt, shards=(2, 4))
 
 # post-insert / post-delete states: interleave two inserts, tombstone the
 # current top hits (including duplicated rows), re-search, then compact
@@ -186,5 +189,5 @@ def test_sharded_parity_matches_single_device(tmp_path):
     assert not bad, f"parity violations: {bad}"
     # sanity: the script actually exercised every scenario family
     fams = {k.split("/")[0] for k in res}
-    assert fams == {"base", "int8", "mutated", "compacted", "engine",
-                    "degraded"}, fams
+    assert fams == {"base", "int8", "int4", "pq", "mutated", "compacted",
+                    "engine", "degraded"}, fams

@@ -53,6 +53,40 @@ def test_bf16_roundtrip_error_bound():
     assert (err <= bound[None, :] + 1e-7).all()
 
 
+def test_int4_roundtrip_error_bound():
+    rng = np.random.default_rng(21)
+    x = (rng.normal(size=(512, 24)) * rng.uniform(0.1, 5.0, 24)).astype(np.float32)
+    data, scale = quant.quantize(x, "int4")
+    assert data.dtype == np.int8 and data.shape == (512, 12)  # two dims/byte
+    assert scale.shape == (24,)
+    err = np.abs(quant.dequantize(data, scale) - x)
+    bound = quant.roundtrip_error_bound(x, "int4")
+    assert (err <= bound[None, :]).all(), (err.max(0), bound)
+
+
+def test_int4_odd_dim_roundtrip():
+    """Odd d: the packed width is ceil(d/2); the phantom high nibble of the
+    last byte decodes against an implicit zero dim and must not leak."""
+    rng = np.random.default_rng(22)
+    x = rng.normal(size=(64, 7)).astype(np.float32)
+    data, scale = quant.quantize(x, "int4")
+    assert data.shape == (64, 4)
+    err = np.abs(quant.dequantize(data, scale) - x)
+    assert (err <= quant.roundtrip_error_bound(x, "int4")[None, :]).all()
+
+
+def test_pq_roundtrip_error_bound():
+    rng = np.random.default_rng(23)
+    x = rng.normal(size=(512, 32)).astype(np.float32)
+    data, codebook = quant.quantize(x, "pq")
+    m, _, ksub = quant.pq_geometry(32)
+    assert data.dtype == np.int8 and data.shape == (512, m)
+    assert codebook.shape == (32, m * ksub)
+    err = np.abs(quant.dequantize(data, codebook) - x)
+    bound = quant.roundtrip_error_bound(x, "pq")
+    assert (err <= bound[None, :]).all(), (err.max(0), bound)
+
+
 def test_quantize_preserves_zero_rows():
     """Sentinel/padding rows must stay exactly zero (beam-merge contract)."""
     x = np.zeros((4, 8), np.float32)
@@ -81,14 +115,21 @@ def test_dequant_sq_dists_close_to_exact():
 # ---------------------------------------------------------------------------
 
 def _random_quant_index(n, R, d, seed, dtype):
+    """(nbr_table, encoded_vecs, scale, codebook) for a random graph — the
+    side payload lands in the slot its encoding uses (quant.quantize)."""
     rng = np.random.default_rng(seed)
     nbr = np.stack([rng.choice(n, R, replace=False) for _ in range(n)])
     nbr_t = np.concatenate([nbr, np.full((1, R), n)]).astype(np.int32)
     x = rng.normal(size=(n, d)).astype(np.float32)
     vec = np.concatenate([x, np.zeros((1, d), np.float32)])
-    data, scale = quant.quantize(vec, dtype)
-    return (jnp.asarray(nbr_t), jnp.asarray(data),
-            None if scale is None else jnp.asarray(scale))
+    data, side = quant.quantize(vec, dtype)
+    scale = codebook = None
+    if side is not None:
+        if dtype == "pq":
+            codebook = jnp.asarray(side)
+        else:
+            scale = jnp.asarray(side)
+    return jnp.asarray(nbr_t), jnp.asarray(data), scale, codebook
 
 
 def _random_beam(rng, Bq, ef, n, n_sentinel=3):
@@ -101,12 +142,12 @@ def _random_beam(rng, Bq, ef, n, n_sentinel=3):
     return bid, bd, bck
 
 
-@pytest.mark.parametrize("dtype", ["bfloat16", "int8"])
+@pytest.mark.parametrize("dtype", ["bfloat16", "int8", "int4", "pq"])
 @pytest.mark.parametrize("W", [1, 2])
 def test_fused_hop_dequant_matches_oracle(dtype, W):
     rng = np.random.default_rng(7 + W)
     n, R, d, Bq, ef = 600, 8, 16, 12, 16
-    nbr_t, vec_q, scale = _random_quant_index(n, R, d, 5, dtype)
+    nbr_t, vec_q, scale, cb = _random_quant_index(n, R, d, 5, dtype)
     q = jnp.asarray(rng.normal(size=(Bq, d)).astype(np.float32))
     bid, bd, bck = _random_beam(rng, Bq, ef, n)
     vis = B.exact_insert(B.exact_init(Bq, n),
@@ -114,9 +155,10 @@ def test_fused_hop_dequant_matches_oracle(dtype, W):
                          jnp.asarray(bid < n))
     args = [jnp.asarray(a) for a in (q, nbr_t, vec_q, bid, bd, bck)]
     got = fused_traversal_hop(*args, vis, n, width=W, visited_mode="exact",
-                              interpret=True, vec_scale=scale)
+                              interpret=True, vec_scale=scale,
+                              vec_codebook=cb)
     want = traversal_hop_ref(*args, vis, n, width=W, visited_mode="exact",
-                             vec_scale=scale)
+                             vec_scale=scale, vec_codebook=cb)
     np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
     np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
                                rtol=1e-5, atol=1e-5)
@@ -124,11 +166,11 @@ def test_fused_hop_dequant_matches_oracle(dtype, W):
         np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(want[i]))
 
 
-@pytest.mark.parametrize("dtype", ["bfloat16", "int8"])
+@pytest.mark.parametrize("dtype", ["bfloat16", "int8", "int4", "pq"])
 def test_persistent_dequant_matches_oracle(dtype):
     rng = np.random.default_rng(11)
     n, R, d, Bq, ef = 500, 8, 16, 8, 16
-    nbr_t, vec_q, scale = _random_quant_index(n, R, d, 9, dtype)
+    nbr_t, vec_q, scale, cb = _random_quant_index(n, R, d, 9, dtype)
     q = jnp.asarray(rng.normal(size=(Bq, d)).astype(np.float32))
     bid, bd, bck = _random_beam(rng, Bq, ef, n)
     vis = B.exact_insert(B.exact_init(Bq, n),
@@ -136,9 +178,10 @@ def test_persistent_dequant_matches_oracle(dtype):
                          jnp.asarray(bid < n))
     args = [jnp.asarray(a) for a in (q, nbr_t, vec_q, bid, bd, bck)]
     got = fused_pilot_search(*args, vis, n, rounds=64, visited_mode="exact",
-                             interpret=True, vec_scale=scale)
+                             interpret=True, vec_scale=scale,
+                             vec_codebook=cb)
     want = pilot_search_ref(*args, vis, n, rounds=64, visited_mode="exact",
-                            vec_scale=scale)
+                            vec_scale=scale, vec_codebook=cb)
     for i, (g, w) in enumerate(zip(got, want)):
         if i == 1:
             np.testing.assert_allclose(np.asarray(g), np.asarray(w),
@@ -147,20 +190,21 @@ def test_persistent_dequant_matches_oracle(dtype):
             np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
 
-@pytest.mark.parametrize("dtype", ["bfloat16", "int8"])
+@pytest.mark.parametrize("dtype", ["bfloat16", "int8", "int4", "pq"])
 def test_quantized_greedy_search_paths_agree(dtype):
     """unfused == per-hop kernel == persistent kernel on a quantized table
     (ids and counters exact; distances within float noise)."""
     rng = np.random.default_rng(13)
     n, R, d, Bq, ef = 700, 8, 16, 8, 16
-    nbr_t, vec_q, scale = _random_quant_index(n, R, d, 13, dtype)
+    nbr_t, vec_q, scale, cb = _random_quant_index(n, R, d, 13, dtype)
     q = jnp.asarray(rng.normal(size=(Bq, d)).astype(np.float32))
     entries = jnp.asarray(rng.integers(0, n, (Bq, 3)).astype(np.int32))
     outs = []
     for extra in (dict(), dict(use_pallas=True),
                   dict(use_pallas=True, use_persistent=True)):
         st = greedy_search(TraversalSpec(ef=ef, visited_mode="exact", **extra),
-                           q, nbr_t, vec_q, n, entries, vec_scale=scale)
+                           q, nbr_t, vec_q, n, entries, vec_scale=scale,
+                           vec_codebook=cb)
         outs.append(st)
     for st in outs[1:]:
         np.testing.assert_array_equal(np.asarray(outs[0].cand_id),
@@ -171,17 +215,23 @@ def test_quantized_greedy_search_paths_agree(dtype):
                                       np.asarray(st.n_dist))
 
 
-@pytest.mark.parametrize("dtype", ["bfloat16", "int8"])
+@pytest.mark.parametrize("dtype", ["bfloat16", "int8", "int4", "pq"])
 def test_fes_kernel_dequant_matches_oracle(dtype):
     rng = np.random.default_rng(17)
     r, QC, C, d = 4, 8, 128, 128
     q = rng.normal(size=(r, QC, d)).astype(np.float32)
     ev = rng.normal(size=(r, C, d)).astype(np.float32)
-    data, scale = quant.quantize(ev, dtype)
-    sj = None if scale is None else jnp.asarray(scale)
+    data, side = quant.quantize(ev, dtype)
+    sj = cj = None
+    if side is not None:
+        if dtype == "pq":
+            cj = jnp.asarray(side)
+        else:
+            sj = jnp.asarray(side)
     got = fes_distances(jnp.asarray(q), jnp.asarray(data), scale=sj,
-                        interpret=True)
-    want = fes_distances_ref(jnp.asarray(q), jnp.asarray(data), scale=sj)
+                        codebook=cj, interpret=True)
+    want = fes_distances_ref(jnp.asarray(q), jnp.asarray(data), scale=sj,
+                             codebook=cj)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
 
@@ -234,6 +284,54 @@ def test_int8_pilot_bytes_reduction(quant_index):
     i8 = quant_index.memory_report()
     quant_index.set_pilot_dtype("float32")
     assert fp32["pilot_bytes"] / i8["pilot_bytes"] >= 3.5, (fp32, i8)
+
+
+@pytest.fixture(scope="module")
+def deep_quant_index(quant_dataset):
+    """R=16 variant for the deep-compression parity tests: the coarser
+    int4/pq pilot routes need the better-connected graph for stage ③ to
+    converge to the same beam from any seed set (R=8 greedy search can
+    strand a near-exact neighbour behind a sparse cut)."""
+    return PilotANNIndex(
+        IndexConfig(R=16, sample_ratio=0.5, svd_ratio=0.75, n_entry=2048,
+                    build_method="exact"), quant_dataset.vectors)
+
+
+@pytest.mark.parametrize("dtype", ["int4", "pq"])
+def test_deep_pilot_identical_final_ids(deep_quant_index, quant_dataset,
+                                        dtype):
+    """Acceptance (deep compression ladder): the int4/pq pilots reach the
+    SAME final ids as the fp32 pilot at equal ef — stage ② re-scores the
+    pilot beam exactly from rot_vecs and stage ③ traverses the full graph
+    with exact distances, so pilot-payload fidelity only changes the
+    route, and on a well-connected graph the route converges."""
+    gt = brute_force_topk(quant_dataset.vectors, quant_dataset.queries, 10)
+    params = SearchParams(k=10, ef=96, ef_pilot=96)
+    deep_quant_index.set_pilot_dtype("float32")
+    ids_f, d_f, _ = deep_quant_index.search(quant_dataset.queries, params)
+    deep_quant_index.set_pilot_dtype(dtype)
+    ids_q, d_q, _ = deep_quant_index.search(quant_dataset.queries, params)
+    deep_quant_index.set_pilot_dtype("float32")
+    r_f = recall_at_k(ids_f, gt, 10)
+    assert r_f >= 0.9, r_f
+    np.testing.assert_array_equal(ids_f, ids_q)
+    np.testing.assert_allclose(d_f, d_q, rtol=1e-2, atol=1e-3)
+
+
+def test_deep_pilot_bytes_reduction(quant_index):
+    """Acceptance: the pq rung shrinks the stage-① *vector* payload >= 10x
+    vs fp32 (the codebook amortizes across rows), and every rung of the
+    ladder strictly shrinks the realized total."""
+    reps = {}
+    for dt in quant.PILOT_DTYPES:
+        quant_index.set_pilot_dtype(dt)
+        reps[dt] = quant_index.memory_report()
+    quant_index.set_pilot_dtype("float32")
+    vec = lambda dt: reps[dt]["pilot_vec_bytes"] + reps[dt]["pilot_fes_bytes"]
+    assert vec("float32") / vec("pq") >= 10.0, (vec("float32"), vec("pq"))
+    assert vec("float32") / vec("int4") >= 7.5, (vec("float32"), vec("int4"))
+    totals = [reps[dt]["pilot_bytes"] for dt in quant.PILOT_DTYPES]
+    assert all(a > b for a, b in zip(totals, totals[1:])), totals
 
 
 def test_memory_report_schema(quant_index):
@@ -381,9 +479,44 @@ def test_planner_fits_holds_on_skewed_data():
 
 
 def test_planner_monotone_in_dtype():
+    """The full descent of the dtype ladder strictly shrinks the estimate:
+    fp32 > bf16 > int8 > int4 > pq (at planner scale the pq codebook is
+    amortized away)."""
     pl = ResidencyPlanner(100_000, 96)
     szs = [pl.estimate(0.25, 0.5, dt)["total"] for dt in quant.PILOT_DTYPES]
-    assert szs[0] > szs[1] > szs[2], szs
+    assert all(a > b for a, b in zip(szs, szs[1:])), szs
+
+
+def test_planner_ladder_descends_to_int4_and_pq(quant_dataset):
+    """Acceptance: a byte budget only the deep rungs can satisfy makes the
+    planner keep full coverage and descend the dtype ladder past int8 —
+    and the solved plan round-trips through a working build under budget."""
+    pl = ResidencyPlanner(4096, 64, R=8, n_entry=512)
+    est = {dt: pl.estimate(0.5, 0.75, dt)["total"]
+           for dt in quant.PILOT_DTYPES}
+    assert est["int4"] < est["int8"] and est["pq"] < est["int4"]
+    # budget between int4 and int8 at FULL coverage: fidelity is sacrificed
+    # before sample_ratio/svd_ratio, so the planner must pick int4 at the
+    # top grid point rather than shrinking coverage to keep int8
+    plan4 = pl.plan((est["int4"] + est["int8"]) // 2)
+    assert plan4.fits and plan4.pilot_dtype == "int4"
+    assert plan4.sample_ratio == pl.SAMPLE_GRID[0]
+    assert plan4.svd_ratio == pl.SVD_GRID[0]
+    # budget below int4 at full coverage: the pq rung
+    planq = pl.plan((est["pq"] + est["int4"]) // 2)
+    assert planq.fits and planq.pilot_dtype == "pq"
+    assert planq.sample_ratio == pl.SAMPLE_GRID[0]
+    for plan in (plan4, planq):
+        idx = PilotANNIndex(plan.to_config(build_method="exact"),
+                            quant_dataset.vectors)
+        rep = idx.memory_report()
+        assert rep["pilot_dtype"] == plan.pilot_dtype
+        assert rep["pilot_bytes"] <= plan.budget_bytes
+        # the build's realized bytes match the plan's graph+vec terms
+        est_b = pl.estimate(plan.sample_ratio, plan.svd_ratio,
+                            plan.pilot_dtype)
+        assert est_b["graph"] == rep["pilot_graph_bytes"]
+        assert est_b["vec"] == rep["pilot_vec_bytes"]
 
 
 # ---------------------------------------------------------------------------

@@ -261,6 +261,47 @@ def test_auto_compact_triggers():
 
 
 # ---------------------------------------------------------------------------
+# Deep-compression pilots through the mutable lifecycle (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["int4", "pq"])
+def test_deep_pilot_mutable_lifecycle_identical_ids(data, dtype):
+    """Build → insert → delete → compact with an int4/pq pilot payload
+    reaches the SAME final ids as the fp32 pilot at equal ef at every
+    step: the graph build runs on fp32 rot_vecs (identical topology), the
+    delta segments quantize their own pilot tables with the configured
+    encoding, and every beam is exactly re-scored before the merge, so
+    payload fidelity only perturbs the route (ef=96 converges it here;
+    see tests/test_quant.py for the single-index acceptance)."""
+    x, extra, q = data
+    params = dataclasses.replace(PARAMS, ef=96, ef_pilot=96)
+    dead = np.asarray([0, 1, 5, 2000, 2001, 2100])
+    outs = {}
+    for dt in ("float32", dtype):
+        s = SegmentedIndex(dataclasses.replace(CFG, pilot_dtype=dt), x)
+        steps = [s.search(q, params)]
+        s.insert(extra)
+        steps.append(s.search(q, params))
+        s.delete(dead)
+        steps.append(s.search(q, params))
+        s.compact()
+        steps.append(s.search(q, params))
+        outs[dt] = steps
+    if dtype == "pq":            # delta payload really is m-byte PQ codes
+        probe = SegmentedIndex(dataclasses.replace(CFG, pilot_dtype=dtype), x)
+        probe.insert(extra)
+        d0 = probe.deltas[0]
+        assert "primary_codebook" in d0.arrays
+        assert d0.arrays["primary"].shape[1] < d0.arrays["rot_vecs"].shape[1]
+    for step, (f, z) in enumerate(zip(outs["float32"], outs[dtype])):
+        np.testing.assert_array_equal(f[0], z[0], err_msg=f"step {step}")
+        np.testing.assert_allclose(f[1], z[1], rtol=1e-2, atol=1e-3,
+                                   err_msg=f"step {step}")
+    # the quantized lifecycle never surfaces a tombstone
+    assert not np.isin(outs[dtype][2][0], dead).any()
+
+
+# ---------------------------------------------------------------------------
 # Serving runtime: upsert queue + mutable stage pair
 # ---------------------------------------------------------------------------
 
